@@ -1,0 +1,46 @@
+"""Paper §4 perspective #2 (prototype): damped probabilistic update.
+
+The paper observes the ratio between the smallest and second-smallest
+estimates correlates with the error and proposes an update rule using it.
+We prototype the natural form — scale the added mass by
+(V(min)+1)/(V(2nd)+1))^alpha — and measure ARE under memory pressure.
+Either outcome is informative; the paper left this untried.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, paper_corpus
+from repro.configs.paper_sketch import CFG
+from repro.core import sketch as sk
+
+
+def run(quick: bool = False) -> list[dict]:
+    _, events, uniq, true = paper_corpus(125_000 if quick else 500_000)
+    rows = []
+    for budget in (131_072, 524_288):
+        for variant in ("CMLS16-CU", "CMLS8-CU"):
+            spec = CFG.spec(variant, budget)
+            for alpha in (0.0, 0.5, 1.0):
+                s = sk.init(spec)
+                upd = jax.jit(lambda s, k, r: sk.update_batched(
+                    s, k, r, damp_alpha=alpha))
+                rng = jax.random.PRNGKey(0)
+                for i in range(0, len(events), 131_072):
+                    rng, k = jax.random.split(rng)
+                    s = upd(s, jnp.asarray(events[i:i + 131_072]), k)
+                est = np.asarray(sk.query(s, jnp.asarray(uniq)))
+                are = float(np.mean(np.abs(est - true) / true))
+                rows.append({
+                    "name": f"paper_next_step/damped_update/{variant}/"
+                            f"{budget // 1024}kB/alpha{alpha}",
+                    "us_per_call": "",
+                    "derived": f"ARE={are:.4f}",
+                })
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,98 @@
+"""Paper Figures 2 & 3: PMI RMSE vs memory + PMI histogram at 32 kB.
+
+PMI of every bigram (appearing >= 2x) is estimated from sketch counts and
+compared with PMI from exact counts: RMSE (Fig. 2) per budget, and the
+histogram shape at 32 kB / depth 2 (Fig. 3 — the paper shows CMS-CU badly
+distorts the right tail while CMLS8 stays close to the reference; we report
+the histogram L1 distance to the reference as the scalar form).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import count_stream, emit, paper_corpus
+from repro.configs.paper_sketch import CFG
+from repro.core import estimators
+from repro.core import sketch as sk
+from repro.core.hashing import combine2
+from repro.data import ngrams
+
+
+def _pmi_setup(n_tokens):
+    toks, events, uniq, true = paper_corpus(n_tokens)
+    left, right = ngrams.bigram_pairs(toks)
+    pairs, counts = np.unique(np.stack([left, right]), axis=1,
+                              return_counts=True)
+    sel = counts >= 2
+    l, r = pairs[0, sel], pairs[1, sel]
+    uc = np.bincount(toks, minlength=int(toks.max()) + 1)
+    pmi_true = np.asarray(estimators.pmi_exact(
+        jnp.asarray(uc[l], jnp.float32), jnp.asarray(uc[r], jnp.float32),
+        jnp.asarray(counts[sel], jnp.float32),
+        float(len(toks)), float(len(toks) - 1)))
+    return toks, events, l, r, pmi_true
+
+
+def _pmi_from_sketch(s, l, r, n_tokens):
+    # single shared sketch: unigram keys are raw ids, bigram keys combined
+    est_l = sk.query(s, jnp.asarray(l))
+    est_r = sk.query(s, jnp.asarray(r))
+    est_b = sk.query(s, combine2(jnp.asarray(l), jnp.asarray(r)))
+    return np.asarray(estimators.pmi_exact(est_l, est_r, est_b,
+                                           float(n_tokens),
+                                           float(n_tokens - 1)))
+
+
+def run(quick: bool = False) -> list[dict]:
+    n_tokens = 125_000 if quick else 500_000
+    toks, events, l, r, pmi_true = _pmi_setup(n_tokens)
+    budgets = CFG.budgets[1::2] if quick else CFG.budgets
+    rows = []
+    hist_ref, edges = np.histogram(pmi_true, bins=40, density=True)
+
+    for budget in budgets:
+        rmses = {}
+        for variant in CFG.variants:
+            t0 = time.perf_counter()
+            s = count_stream(CFG.spec(variant, budget), events, mode="exact")
+            pmi_est = _pmi_from_sketch(s, l, r, n_tokens)
+            dt = time.perf_counter() - t0
+            rmse = float(np.sqrt(np.mean((pmi_est - pmi_true) ** 2)))
+            rmses[variant] = rmse
+            rows.append({
+                "name": f"fig2_pmi_rmse/{variant}/{budget // 1024}kB",
+                "us_per_call": round(dt * 1e6 / len(events), 3),
+                "derived": f"RMSE={rmse:.4f}",
+            })
+            # paper §4 next-step #1: error restricted to "interesting"
+            # (high-PMI) pairs — the right tail the histograms show CMS
+            # distorting most
+            hi = pmi_true >= np.quantile(pmi_true, 0.75)
+            rmse_hi = float(np.sqrt(np.mean((pmi_est[hi] - pmi_true[hi]) ** 2)))
+            rows.append({
+                "name": f"paper_next_step/pmi_rmse_top_quartile/{variant}/{budget // 1024}kB",
+                "us_per_call": "",
+                "derived": f"RMSE_hiPMI={rmse_hi:.4f}",
+            })
+            if budget == 32_768:  # Fig. 3 setting: 32 kB, 2 levels
+                h, _ = np.histogram(pmi_est, bins=edges, density=True)
+                l1 = float(np.abs(h - hist_ref).sum() * np.diff(edges)[0])
+                rows.append({
+                    "name": f"fig3_pmi_hist_L1/{variant}/32kB",
+                    "us_per_call": "",
+                    "derived": f"L1_to_reference={l1:.4f}",
+                })
+        for v in ("CMLS16-CU", "CMLS8-CU"):
+            rows.append({
+                "name": f"fig2_gain/{v}/{budget // 1024}kB",
+                "us_per_call": "",
+                "derived": f"RMSE_ratio_vs_CMS={rmses['CMS-CU'] / max(rmses[v], 1e-9):.2f}x",
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,62 @@
+"""Paper §4 'evaluate the speed difference' (listed as future work there):
+update/query throughput of CMS-CU vs CMLS variants, across the three
+implementation paths (exact scan / batched vectorized / Pallas kernel).
+
+Pallas numbers on this host are interpret-mode (Python executes the kernel
+body) — they validate semantics, not TPU speed; the batched jnp path is the
+CPU-comparable number.  The derived column reports events/s.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, paper_corpus, timer
+from repro.configs.paper_sketch import CFG
+from repro.core import sketch as sk
+from repro.kernels import ops
+
+
+def run(quick: bool = False) -> list[dict]:
+    _, events, _, _ = paper_corpus(125_000 if quick else 500_000)
+    n = 131_072
+    keys = jnp.asarray(events[:n])
+    budget = 262_144
+    rows = []
+    rng = jax.random.PRNGKey(0)
+
+    for variant in CFG.variants:
+        spec = CFG.spec(variant, budget)
+        s0 = sk.init(spec)
+
+        if not quick:
+            exact = jax.jit(sk.update_exact)
+            dt, _ = timer(exact, s0, keys[:16_384], rng, iters=2)
+            rows.append({"name": f"throughput_update/exact/{variant}",
+                         "us_per_call": round(dt * 1e6, 1),
+                         "derived": f"{16_384 / dt / 1e6:.2f}M_events_s"})
+
+        batched = jax.jit(sk.update_batched)
+        dt, _ = timer(batched, s0, keys, rng)
+        rows.append({"name": f"throughput_update/batched/{variant}",
+                     "us_per_call": round(dt * 1e6, 1),
+                     "derived": f"{n / dt / 1e6:.2f}M_events_s"})
+
+        dt, _ = timer(lambda s, k, r: ops.update(s, k, r), s0, keys[:8_192], rng,
+                      iters=1)
+        rows.append({"name": f"throughput_update/pallas_interpret/{variant}",
+                     "us_per_call": round(dt * 1e6, 1),
+                     "derived": f"{8_192 / dt / 1e6:.3f}M_events_s"})
+
+        s = sk.update_batched(s0, keys, rng)
+        q = jax.jit(sk.query)
+        dt, _ = timer(q, s, keys)
+        rows.append({"name": f"throughput_query/batched/{variant}",
+                     "us_per_call": round(dt * 1e6, 1),
+                     "derived": f"{n / dt / 1e6:.2f}M_queries_s"})
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV (required format) and mirrors the
+rows into results/benchmarks.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from benchmarks import (bench_are_counts, bench_batched_divergence,
+                        bench_damped_update, bench_pmi, bench_throughput)
+from benchmarks.common import emit
+
+SUITES = [
+    ("fig1_are_counts", bench_are_counts.run),
+    ("fig2_fig3_pmi", bench_pmi.run),
+    ("throughput", bench_throughput.run),
+    ("batched_divergence", bench_batched_divergence.run),
+    ("paper_next_steps", bench_damped_update.run),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced corpus + budget grid (CI-speed)")
+    ap.add_argument("--suite", default=None,
+                    help="run one suite by name")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    all_rows = []
+    for name, fn in SUITES:
+        if args.suite and args.suite != name:
+            continue
+        t0 = time.time()
+        rows = fn(quick=args.quick)
+        emit(rows)
+        all_rows += rows
+        print(f"suite/{name},{round((time.time() - t0) * 1e6)},elapsed",
+              flush=True)
+    os.makedirs("results", exist_ok=True)
+    with open("results/benchmarks.json", "w") as f:
+        json.dump(all_rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""End-to-end LM training driver with the CMLS counting plane.
+
+Thin entrypoint over repro.launch.train: trains a decoder LM on the
+calibrated Zipf corpus while a Count-Min-Log sketch counts the token
+stream (unigrams + bigrams) in the same pipeline — the paper's workload
+fused into training.  Checkpoints + fault-tolerant loop included.
+
+    # CPU-budget run (~25M params, a few hundred steps):
+    PYTHONPATH=src python examples/train_lm.py --preset 25m --steps 300 \
+        --batch 8 --seq 256 --sketch --ckpt-dir /tmp/lm_ck
+
+    # the ~100M-parameter configuration (same code path, sized for a
+    # real accelerator host):
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300 \
+        --batch 32 --seq 1024 --sketch
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

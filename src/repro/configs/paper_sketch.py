@@ -1,0 +1,33 @@
+"""The paper's own sketch configurations (§3.2) as a registered 'arch'.
+
+CMS-CU (32-bit linear), CMLS16-CU (b=1.00025, 16-bit), CMLS8-CU (b=1.08,
+8-bit) — used by the benchmarks and examples; byte budgets are swept around
+the paper's 'ideal perfect count storage' line (233k distinct * 4 B ~ 932 kB).
+"""
+import dataclasses
+
+from repro.configs.registry import Arch, register
+from repro.core.counters import CMLS8, CMLS16, CMS32
+from repro.core.sketch import SketchSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperSketchConfig:
+    variants = {"CMS-CU": CMS32, "CMLS16-CU": CMLS16, "CMLS8-CU": CMLS8}
+    depth: int = 2                       # paper Fig. 3 uses 2 levels
+    perfect_storage_bytes: int = 233_000 * 4
+    # sweep from deep high-pressure (32 kB) to ~4x perfect storage
+    budgets = (32_768, 65_536, 131_072, 262_144, 524_288,
+               1_048_576, 2_097_152, 4_194_304)
+
+    def spec(self, variant: str, budget: int) -> SketchSpec:
+        return SketchSpec.from_memory(budget, depth=self.depth,
+                                      counter=self.variants[variant])
+
+
+CFG = PaperSketchConfig()
+
+register(Arch(
+    name="paper-sketch", family="paper", cfg=CFG, smoke_cfg=CFG, shapes={},
+    notes="the paper's three evaluated sketch variants",
+))

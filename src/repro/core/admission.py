@@ -1,0 +1,54 @@
+"""Count-based embedding admission, gated by a sketch (recsys integration).
+
+Production embedding tables cannot afford a row per raw id; ids are admitted
+to the trainable table only once "hot enough".  The classic implementation
+needs an exact id->count map (unbounded memory); here the CMLS sketch
+provides the counts in constant memory — precisely the paper's
+memory/error trade at the point where it matters most, since admission
+decisions are all about *low-frequency* ids, where CMLS's relative error is
+2-12x better than linear CMS at equal bytes (paper Fig. 1).
+
+Cold ids fall back to a small shared bucket space (hash trick), so the model
+stays total: every id maps to some row.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch as sk
+from repro.core.hashing import mix32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionSpec:
+    threshold: float = 8.0      # min estimated count before a private row
+    n_fallback: int = 1024      # shared rows for cold ids
+    table_rows: int = 1 << 20   # private rows (admitted ids hash here)
+
+
+def admit(sketch: sk.Sketch, ids: jnp.ndarray, spec: AdmissionSpec
+          ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Map raw ids -> table rows under the admission policy.
+
+    Returns (rows, admitted_mask).  Admitted ids occupy
+    [n_fallback, n_fallback + table_rows); cold ids share [0, n_fallback).
+    """
+    est = sk.query(sketch, ids)
+    admitted = est >= spec.threshold
+    hot_row = (mix32(ids.astype(jnp.uint32)) % jnp.uint32(spec.table_rows)
+               ).astype(jnp.int32) + spec.n_fallback
+    cold_row = (mix32(ids.astype(jnp.uint32) ^ jnp.uint32(0xC01D))
+                % jnp.uint32(spec.n_fallback)).astype(jnp.int32)
+    return jnp.where(admitted, hot_row, cold_row), admitted
+
+
+def observe_and_admit(sketch: sk.Sketch, ids: jnp.ndarray, rng: jax.Array,
+                      spec: AdmissionSpec
+                      ) -> tuple[sk.Sketch, jnp.ndarray, jnp.ndarray]:
+    """Streaming form: count this batch, then admit against the new state."""
+    sketch = sk.update_batched(sketch, ids, rng)
+    rows, admitted = admit(sketch, ids, spec)
+    return sketch, rows, admitted

@@ -1,0 +1,127 @@
+"""Counter cell semantics: linear (classic CMS) and logarithmic (Morris).
+
+The paper (Alg. 1/2) defines, for log base b > 1:
+
+  IncreaseDecision(c) = True w.p. b^-c
+  PointValue(c)       = 0 if c == 0 else b^(c-1)
+  Value(c)            = PointValue(c) if c <= 1 else (1 - b^(c+1-1)) / (1 - b)
+
+which collapses to the standard unbiased Morris estimator
+
+  Value(c) = (b^c - 1) / (b - 1)        (equals 0 at c=0 and 1 at c=1)
+
+since Value(c+1) - Value(c) = b^c = 1 / P(increment at state c).
+
+`nfold` generalizes a single IncreaseDecision step to adding n events at
+once: move n units in estimate space, then stochastically round back to a
+counter state.  For n == 1 this reduces *exactly* to the paper's update
+(increment w.p. b^-c), so the batched TPU path is an unbiased
+generalization, not an approximation of a different estimator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+_DTYPES = {8: jnp.uint8, 16: jnp.uint16, 32: jnp.uint32}
+
+
+@dataclasses.dataclass(frozen=True)
+class CounterSpec:
+    """Static description of one sketch cell.
+
+    kind: "linear" (classic CMS cell) or "log" (Morris counter).
+    base: log base b > 1 (ignored for linear).
+    bits: cell width in bits (8, 16, or 32).
+    """
+
+    kind: str = "log"
+    base: float = 1.00025
+    bits: int = 16
+
+    def __post_init__(self):
+        if self.kind not in ("linear", "log"):
+            raise ValueError(f"unknown counter kind {self.kind!r}")
+        if self.kind == "log" and not self.base > 1.0:
+            raise ValueError("log counter needs base > 1")
+        if self.bits not in _DTYPES:
+            raise ValueError(f"bits must be one of {sorted(_DTYPES)}")
+
+    @property
+    def dtype(self):
+        return _DTYPES[self.bits]
+
+    @property
+    def max_state(self) -> int:
+        return (1 << self.bits) - 1
+
+    @property
+    def max_value(self) -> float:
+        """Largest representable estimate (saturation point)."""
+        if self.kind == "linear":
+            return float(self.max_state)
+        return float(math.expm1(self.max_state * math.log(self.base)) / (self.base - 1.0))
+
+    # ---- estimate-space transforms (all float32, vectorized) ----
+
+    def decode(self, state: jnp.ndarray) -> jnp.ndarray:
+        """Counter state -> unbiased event-count estimate (paper's VALUE)."""
+        s = state.astype(jnp.float32)
+        if self.kind == "linear":
+            return s
+        logb = jnp.float32(math.log(self.base))
+        return jnp.expm1(s * logb) / jnp.float32(self.base - 1.0)
+
+    def point_mass(self, state: jnp.ndarray) -> jnp.ndarray:
+        """Value(c+1) - Value(c) = b^c: estimate mass of one state step."""
+        s = state.astype(jnp.float32)
+        if self.kind == "linear":
+            return jnp.ones_like(s)
+        logb = jnp.float32(math.log(self.base))
+        return jnp.exp(s * logb)
+
+    def increase_prob(self, state: jnp.ndarray) -> jnp.ndarray:
+        """P(IncreaseDecision(c)) = b^-c (paper Alg. 1); 1 for linear."""
+        s = state.astype(jnp.float32)
+        if self.kind == "linear":
+            return jnp.ones_like(s)
+        logb = jnp.float32(math.log(self.base))
+        return jnp.exp(-s * logb)
+
+    def encode_floor(self, value: jnp.ndarray) -> jnp.ndarray:
+        """Largest state c with Value(c) <= value (float32 in, float32 out)."""
+        v = value.astype(jnp.float32)
+        if self.kind == "linear":
+            return jnp.floor(v)
+        logb = jnp.float32(math.log(self.base))
+        c = jnp.floor(jnp.log1p(v * jnp.float32(self.base - 1.0)) / logb)
+        # guard float roundoff: never let Value(c) exceed v by a full step
+        too_high = self.decode(c) > v + 1e-6 * jnp.maximum(v, 1.0)
+        return jnp.maximum(c - too_high.astype(jnp.float32), 0.0)
+
+    def nfold(self, state: jnp.ndarray, n: jnp.ndarray, uniform: jnp.ndarray) -> jnp.ndarray:
+        """Add n >= 0 events to counter `state` in one step.
+
+        Unbiased in estimate space; for n == 1 this is exactly the paper's
+        probabilistic increment.  `uniform` ~ U[0,1) drives the stochastic
+        rounding (one uniform per counter).
+        Returns the new state with the same dtype as `state`, saturating at
+        max_state (the residual-error floor discussed in the paper's §4).
+        """
+        s = state.astype(jnp.float32)
+        n = n.astype(jnp.float32)
+        v2 = self.decode(state) + n
+        c2 = jnp.maximum(self.encode_floor(v2), s)  # monotone: never decrease
+        frac = (v2 - self.decode(c2)) / self.point_mass(c2)
+        inc = (uniform < frac).astype(jnp.float32)
+        new = jnp.where(n > 0, c2 + inc, s)
+        new = jnp.clip(new, 0.0, float(self.max_state))
+        return new.astype(state.dtype)
+
+
+# The paper's three evaluated variants (§3.2), importable by name.
+CMS32 = CounterSpec(kind="linear", base=1.0 + 1e-9, bits=32)
+CMLS16 = CounterSpec(kind="log", base=1.00025, bits=16)
+CMLS8 = CounterSpec(kind="log", base=1.08, bits=8)

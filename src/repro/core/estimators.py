@@ -1,0 +1,84 @@
+"""Corpus statistics computed from sketch estimates (paper §1, eqs. 1-2).
+
+All statistics take a log of the counts, which is the paper's motivation for
+log-domain counters: only the order of magnitude of low-frequency counts
+matters, so the multiplicative noise of a Morris counter is benign while the
+additive collision noise of a linear CMS is not.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import sketch as sk
+from repro.core.hashing import combine2
+
+_EPS = 1e-12
+
+
+def pmi(unigram_sketch: sk.Sketch, bigram_sketch: sk.Sketch,
+        left: jnp.ndarray, right: jnp.ndarray,
+        total_unigrams: float, total_bigrams: float) -> jnp.ndarray:
+    """Pointwise mutual information of word pairs (paper eq. 2).
+
+      pmi(i, j) = log( p(i,j) / (p(i) p(j)) )
+
+    with p(i,j) = c_ij / T_bi and p(i) = c_i / T_uni, all counts estimated
+    from the sketches.
+    """
+    c_i = sk.query(unigram_sketch, left)
+    c_j = sk.query(unigram_sketch, right)
+    c_ij = sk.query(bigram_sketch, combine2(left, right))
+    p_ij = c_ij / total_bigrams
+    p_i = c_i / total_unigrams
+    p_j = c_j / total_unigrams
+    return jnp.log(jnp.maximum(p_ij, _EPS) / jnp.maximum(p_i * p_j, _EPS))
+
+
+def pmi_exact(c_i: jnp.ndarray, c_j: jnp.ndarray, c_ij: jnp.ndarray,
+              total_unigrams: float, total_bigrams: float) -> jnp.ndarray:
+    """Reference PMI from exact counts (for the Fig. 2/3 comparisons)."""
+    p_ij = c_ij / total_bigrams
+    p_i = c_i / total_unigrams
+    p_j = c_j / total_unigrams
+    return jnp.log(jnp.maximum(p_ij, _EPS) / jnp.maximum(p_i * p_j, _EPS))
+
+
+def idf(doc_freq_sketch: sk.Sketch, terms: jnp.ndarray, n_docs: float) -> jnp.ndarray:
+    """Inverse document frequency (paper eq. 1a) from a doc-frequency sketch."""
+    df = sk.query(doc_freq_sketch, terms)
+    return jnp.log(n_docs / jnp.maximum(df, 1.0))
+
+
+def tfidf(tf: jnp.ndarray, doc_freq_sketch: sk.Sketch, terms: jnp.ndarray,
+          n_docs: float) -> jnp.ndarray:
+    """tf-idf (paper eq. 1b): caller supplies per-document tf."""
+    return tf * idf(doc_freq_sketch, terms, n_docs)
+
+
+def _xlogx(x):
+    return jnp.where(x > 0, x * jnp.log(jnp.maximum(x, _EPS)), 0.0)
+
+
+def log_likelihood_ratio(k11, k12, k21, k22) -> jnp.ndarray:
+    """Dunning's LLR for a 2x2 contingency table of (estimated) counts."""
+    row1, row2 = k11 + k12, k21 + k22
+    col1, col2 = k11 + k21, k12 + k22
+    total = row1 + row2
+    h_all = _xlogx(k11) + _xlogx(k12) + _xlogx(k21) + _xlogx(k22)
+    h_row = _xlogx(row1) + _xlogx(row2)
+    h_col = _xlogx(col1) + _xlogx(col2)
+    return 2.0 * (h_all + _xlogx(total) - h_row - h_col)
+
+
+def llr_bigram(unigram_sketch: sk.Sketch, bigram_sketch: sk.Sketch,
+               left: jnp.ndarray, right: jnp.ndarray,
+               total_bigrams: float) -> jnp.ndarray:
+    """LLR association score of bigrams from sketch estimates."""
+    c_ij = sk.query(bigram_sketch, combine2(left, right))
+    c_i = sk.query(unigram_sketch, left)
+    c_j = sk.query(unigram_sketch, right)
+    k11 = c_ij
+    k12 = jnp.maximum(c_i - c_ij, 0.0)
+    k21 = jnp.maximum(c_j - c_ij, 0.0)
+    k22 = jnp.maximum(total_bigrams - c_i - c_j + c_ij, 0.0)
+    return log_likelihood_ratio(k11, k12, k21, k22)

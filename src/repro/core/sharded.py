@@ -1,0 +1,119 @@
+"""Distributed sketches over a device mesh (shard_map building blocks).
+
+Two deployment modes, matching how counting planes are run at scale:
+
+  * REPLICATED-LAZY  — every data-parallel worker owns a full local sketch,
+    updates it locally every step, and the fleet max-merges (lax.pmax) every
+    `merge_every` steps.  Communication-avoiding: a slow worker never blocks
+    the counting plane, and the merge is associative/commutative so the
+    schedule is free to drift (straggler tolerance).  Merged state is a
+    valid conservative-update sketch of the union stream.
+
+  * KEY-ROUTED       — the key space is partitioned over an axis by a
+    routing hash; each shard owns a full (d, w_local) sketch for its
+    partition.  Updates/queries are dispatched with a fixed-capacity
+    all_to_all (MoE-style), which keeps the collective statically shaped.
+    This is the mode for sketches too large for one chip's memory.
+
+All functions here are written to run *inside* shard_map with the named
+axes given; they are pure and statically shaped, so they lower cleanly at
+any mesh size (the multi-pod dry-run exercises them on 512 devices).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch as sk
+from repro.core.hashing import mix32
+
+SENTINEL = jnp.uint32(0xFFFF_FFFF)
+_ROUTE_SALT = jnp.uint32(0x60D5)
+
+
+# --------------------------------------------------------------------------
+# replicated-lazy mode
+# --------------------------------------------------------------------------
+
+def pmax_merge(sketch: sk.Sketch, axis_names) -> sk.Sketch:
+    """Max-merge local sketches across mesh axes (inside shard_map)."""
+    return sk.Sketch(table=jax.lax.pmax(sketch.table, axis_names),
+                     spec=sketch.spec)
+
+
+def lazy_update(sketch: sk.Sketch, keys: jnp.ndarray, rng: jax.Array,
+                step: jnp.ndarray, merge_every: int, axis_names) -> sk.Sketch:
+    """Local update + periodic fleet merge, branch decided by `step`."""
+    sketch = sk.update_batched(sketch, keys, rng)
+    do_merge = (step % merge_every) == (merge_every - 1)
+    merged = pmax_merge(sketch, axis_names)
+    table = jnp.where(do_merge, merged.table, sketch.table)
+    return sk.Sketch(table=table, spec=sketch.spec)
+
+
+# --------------------------------------------------------------------------
+# key-routed mode
+# --------------------------------------------------------------------------
+
+def route_of(keys: jnp.ndarray, n_shards: int) -> jnp.ndarray:
+    """Owning shard of each key (independent of the row hashes)."""
+    return (mix32(keys.astype(jnp.uint32) ^ _ROUTE_SALT)
+            % jnp.uint32(n_shards)).astype(jnp.int32)
+
+
+def _dispatch_layout(keys: jnp.ndarray, n_shards: int, capacity: int):
+    """Pack keys into a (n_shards, capacity) send buffer.
+
+    Returns (buffer, slot_of_key, kept_mask); overflowing keys beyond
+    `capacity` per destination are dropped (counted by the caller if needed,
+    same contract as capacity-factor MoE dispatch).
+    """
+    n = keys.shape[0]
+    dest = route_of(keys, n_shards)
+    order = jnp.argsort(dest)
+    sorted_dest = dest[order]
+    counts = jnp.bincount(dest, length=n_shards)
+    offsets = jnp.cumsum(counts) - counts
+    rank = jnp.arange(n) - offsets[sorted_dest]
+    keep = rank < capacity
+    slot = sorted_dest * capacity + rank
+    slot = jnp.where(keep, slot, n_shards * capacity)  # OOB -> dropped
+    buf = jnp.full((n_shards * capacity,), SENTINEL, jnp.uint32)
+    buf = buf.at[slot].set(keys[order].astype(jnp.uint32), mode="drop")
+    # slot of each original key (or capacity overflow marker)
+    slot_of_key = jnp.full((n,), n_shards * capacity, jnp.int32)
+    slot_of_key = slot_of_key.at[order].set(jnp.where(keep, slot, n_shards * capacity))
+    kept = jnp.zeros((n,), bool).at[order].set(keep)
+    return buf.reshape(n_shards, capacity), slot_of_key, kept
+
+
+def routed_update(local: sk.Sketch, keys: jnp.ndarray, rng: jax.Array,
+                  axis_name: str, capacity: int) -> sk.Sketch:
+    """Update a key-routed sketch (call inside shard_map over `axis_name`)."""
+    n_shards = jax.lax.axis_size(axis_name)
+    buf, _, _ = _dispatch_layout(keys, n_shards, capacity)
+    # (n_shards, cap) -> received (n_shards, cap): row j came from device j
+    recv = jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=0)
+    flat = recv.reshape(-1)
+    valid = flat != SENTINEL
+    # sentinel keys carry weight 0 -> no-op inside the batched update
+    return sk.update_batched(local, flat, rng, weights=valid.astype(jnp.float32))
+
+
+def routed_query(local: sk.Sketch, keys: jnp.ndarray, axis_name: str,
+                 capacity: int) -> jnp.ndarray:
+    """Query a key-routed sketch; returns estimates aligned with `keys`.
+
+    Keys dropped by capacity overflow return -1.0 (caller may retry or fall
+    back to a replicated sketch; overflow is sized away in practice).
+    """
+    n_shards = jax.lax.axis_size(axis_name)
+    buf, slot_of_key, kept = _dispatch_layout(keys, n_shards, capacity)
+    recv = jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=0)
+    est = sk.query(local, recv.reshape(-1))
+    est = jnp.where(recv.reshape(-1) == SENTINEL, 0.0, est)
+    back = jax.lax.all_to_all(est.reshape(n_shards, capacity), axis_name,
+                              split_axis=0, concat_axis=0).reshape(-1)
+    padded = jnp.concatenate([back, jnp.full((1,), -1.0, back.dtype)])
+    out = padded[jnp.minimum(slot_of_key, n_shards * capacity)]
+    return jnp.where(kept, out, -1.0)

@@ -1,0 +1,235 @@
+"""Count-Min / Count-Min-Log sketch with conservative update.
+
+Two update paths share one data structure:
+
+  * `update_exact`   — lax.scan, one event at a time.  Bit-faithful to the
+    paper's Algorithm 1 (each event observes every previous update).  Used
+    for the paper-figure reproductions and as the oracle for everything else.
+  * `update_batched` — TPU-native: sort keys, segment-dedup, per-unique-key
+    n-fold Morris increment, conservative write via scatter-max.  Cross-key
+    collisions inside one batch resolve by max, i.e. conservative update at
+    batch granularity.  Statistical divergence from `update_exact` is
+    measured in benchmarks/bench_batched_divergence.py.
+
+The sketch is a pytree (table leaf + static spec), so it checkpoints, shards
+and jits like any model state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.counters import CounterSpec
+from repro.core.hashing import make_row_seeds, row_hashes
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchSpec:
+    """Static sketch geometry: d rows x w columns of `counter` cells."""
+
+    width: int
+    depth: int = 2
+    counter: CounterSpec = CounterSpec()
+    seed: int = 0x5EED
+
+    @property
+    def memory_bytes(self) -> int:
+        return self.width * self.depth * (self.counter.bits // 8)
+
+    @classmethod
+    def from_memory(cls, budget_bytes: int, depth: int = 2,
+                    counter: CounterSpec = CounterSpec(), seed: int = 0x5EED
+                    ) -> "SketchSpec":
+        """Paper-style sizing: fixed byte budget, width derived from cell size.
+
+        Widths >= 128 are rounded down to a multiple of 128 so the table is
+        lane-aligned for the Pallas kernels (TPU vector lanes are 128 wide).
+        """
+        width = max(1, budget_bytes // (depth * (counter.bits // 8)))
+        if width >= 128:
+            width -= width % 128
+        return cls(width=width, depth=depth, counter=counter, seed=seed)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Sketch:
+    table: jnp.ndarray  # (depth, width) counter states
+    spec: SketchSpec    # static
+
+    def tree_flatten(self):
+        return (self.table,), self.spec
+
+    @classmethod
+    def tree_unflatten(cls, spec, leaves):
+        return cls(table=leaves[0], spec=spec)
+
+    @property
+    def row_seeds(self) -> jnp.ndarray:
+        return make_row_seeds(self.spec.seed, self.spec.depth)
+
+
+def init(spec: SketchSpec) -> Sketch:
+    table = jnp.zeros((spec.depth, spec.width), dtype=spec.counter.dtype)
+    return Sketch(table=table, spec=spec)
+
+
+# --------------------------------------------------------------------------
+# QUERY (paper Alg. 2)
+# --------------------------------------------------------------------------
+
+def query_state(sketch: Sketch, keys: jnp.ndarray) -> jnp.ndarray:
+    """min_k sk[k, h_k(e)] — raw counter state per key, shape (N,)."""
+    cols = row_hashes(keys, sketch.row_seeds, sketch.spec.width)  # (d, N)
+    rows = jnp.arange(sketch.spec.depth)[:, None]
+    return sketch.table[rows, cols].min(axis=0)
+
+
+def query(sketch: Sketch, keys: jnp.ndarray) -> jnp.ndarray:
+    """Estimated event counts (paper's VALUE of the min state), float32 (N,)."""
+    return sketch.spec.counter.decode(query_state(sketch, keys))
+
+
+# --------------------------------------------------------------------------
+# UPDATE — exact sequential semantics (paper Alg. 1)
+# --------------------------------------------------------------------------
+
+def update_exact(sketch: Sketch, keys: jnp.ndarray, rng: jax.Array) -> Sketch:
+    """Process events one at a time with conservative update.
+
+    keys: (N,) integer event ids. rng: PRNG key driving IncreaseDecision.
+    """
+    spec = sketch.spec
+    counter = spec.counter
+    seeds = sketch.row_seeds
+    rows = jnp.arange(spec.depth)
+    uniforms = jax.random.uniform(rng, (keys.shape[0],))
+
+    sat = jnp.asarray(counter.max_state, dtype=sketch.table.dtype)
+
+    def step(table, ev):
+        key, u = ev
+        cols = row_hashes(key[None], seeds, spec.width)[:, 0]  # (d,)
+        cur = table[rows, cols]                                # (d,)
+        cmin = cur.min()
+        inc = u < counter.increase_prob(cmin)
+        # conservative update: only cells sitting at the min move, and only
+        # if the probabilistic increase decision fired and we're not saturated.
+        bump = inc & (cur == cmin) & (cmin != sat)
+        new = jnp.where(bump, cur + 1, cur).astype(table.dtype)
+        return table.at[rows, cols].set(new), None
+
+    table, _ = jax.lax.scan(step, sketch.table, (keys, uniforms))
+    return Sketch(table=table, spec=spec)
+
+
+# --------------------------------------------------------------------------
+# UPDATE — batched TPU-native path
+# --------------------------------------------------------------------------
+
+def _dedup(keys: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort + segment-count. Returns (sorted_keys, n_at_first_occurrence).
+
+    n is the multiplicity at each segment's first position and 0 elsewhere,
+    so downstream writes become no-ops for duplicate rows (masked by n == 0).
+    """
+    n = keys.shape[0]
+    sk = jnp.sort(keys)
+    start = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    seg = jnp.cumsum(start) - 1
+    counts = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), seg, num_segments=n)
+    return sk, jnp.where(start, counts[seg], 0.0)
+
+
+def update_batched(sketch: Sketch, keys: jnp.ndarray, rng: jax.Array,
+                   weights: jnp.ndarray | None = None,
+                   damp_alpha: float = 0.0) -> Sketch:
+    """Batch conservative update (sort -> dedup -> n-fold -> scatter-max).
+
+    weights: optional per-event positive weights (e.g. pre-aggregated counts);
+    default 1 per event.  Weighted events of equal keys sum before the n-fold
+    Morris step, so the estimate stays unbiased.
+
+    damp_alpha > 0 enables a PROTOTYPE of the paper's §4 perspective #2
+    ("probabilistic update rule" using the smallest/second-smallest ratio):
+    the added mass is scaled by (V(min)+1 / V(2nd-min)+1)^alpha — when the
+    rows disagree, the min cell likely already carries collision mass, so
+    the update is damped.  Evaluated in benchmarks/bench_damped_update.py;
+    biased by construction (reported, not a default).
+    """
+    spec = sketch.spec
+    counter = spec.counter
+    n = keys.shape[0]
+    if weights is None:
+        sk_keys, mult = _dedup(keys)
+    else:
+        order = jnp.argsort(keys)
+        sk_keys = keys[order]
+        w_sorted = weights[order].astype(jnp.float32)
+        start = jnp.concatenate([jnp.ones((1,), bool), sk_keys[1:] != sk_keys[:-1]])
+        seg = jnp.cumsum(start) - 1
+        totals = jax.ops.segment_sum(w_sorted, seg, num_segments=n)
+        mult = jnp.where(start, totals[seg], 0.0)
+
+    cols = row_hashes(sk_keys, sketch.row_seeds, spec.width)     # (d, N)
+    rows = jnp.arange(spec.depth)[:, None]
+    cur = sketch.table[rows, cols]                               # (d, N)
+    cmin = cur.min(axis=0)                                       # (N,)
+    if damp_alpha > 0.0 and spec.depth >= 2:
+        srt = jnp.sort(cur, axis=0)
+        v1 = counter.decode(srt[0])
+        v2 = counter.decode(srt[1])
+        damp = ((v1 + 1.0) / (v2 + 1.0)) ** damp_alpha
+        mult = mult * damp
+    u = jax.random.uniform(rng, (n,))
+    new_state = counter.nfold(cmin, mult, u)                     # (N,) dtype cells
+    # masked rows (mult == 0) write state 0 == a no-op under max
+    write = jnp.where(mult > 0, new_state, jnp.zeros_like(new_state))
+    write = jnp.broadcast_to(write[None, :], (spec.depth, n))
+    table = sketch.table.at[rows, cols].max(write)
+    return Sketch(table=table, spec=spec)
+
+
+def update(sketch: Sketch, keys: jnp.ndarray, rng: jax.Array,
+           mode: str = "batched") -> Sketch:
+    if mode == "exact":
+        return update_exact(sketch, keys, rng)
+    if mode == "batched":
+        return update_batched(sketch, keys, rng)
+    raise ValueError(f"unknown update mode {mode!r}")
+
+
+# --------------------------------------------------------------------------
+# MERGE — mergeable-summary semantics for distribution
+# --------------------------------------------------------------------------
+
+def merge(a: Sketch, b: Sketch, mode: str = "max", rng: jax.Array | None = None
+          ) -> Sketch:
+    """Combine two sketches built with identical specs.
+
+      max          — elementwise max of states.  For conservative-update
+                     sketches this is the standard mergeable lower bound
+                     (each cell stays >= either stream's cell).
+      estimate_sum — decode both cells to estimate space, add, re-encode
+                     (stochastic round if rng given, floor otherwise).
+                     Tighter for disjoint streams; the right choice for
+                     data-parallel shards that each saw different events.
+    """
+    if a.spec != b.spec:
+        raise ValueError("cannot merge sketches with different specs")
+    c = a.spec.counter
+    if mode == "max":
+        table = jnp.maximum(a.table, b.table)
+    elif mode == "estimate_sum":
+        v = c.decode(a.table) + c.decode(b.table)
+        s = c.encode_floor(v)
+        if rng is not None:
+            frac = (v - c.decode(s)) / c.point_mass(s)
+            s = s + (jax.random.uniform(rng, s.shape) < frac)
+        table = jnp.clip(s, 0, c.max_state).astype(a.table.dtype)
+    else:
+        raise ValueError(f"unknown merge mode {mode!r}")
+    return Sketch(table=table, spec=a.spec)

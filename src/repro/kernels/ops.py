@@ -1,0 +1,53 @@
+"""Jit'd public wrappers around the Pallas sketch kernels.
+
+These take/return `repro.core.sketch.Sketch` pytrees and handle host-side
+prep (dedup, RNG, padding) so callers can swap `core.sketch.query/update`
+for the kernel path with one import.  On non-TPU backends the kernels run
+in interpret mode (bit-identical semantics, used for validation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch as sk
+from repro.core.hashing import make_row_seeds
+from repro.kernels.sketch import CHUNK, query_pallas, update_pallas
+
+# VMEM budget the resident-table strategy is valid for (per TPU core).
+VMEM_TABLE_LIMIT = 12 * 1024 * 1024
+
+
+def fits_vmem(spec: sk.SketchSpec) -> bool:
+    return spec.memory_bytes <= VMEM_TABLE_LIMIT
+
+
+def _seeds_tuple(spec: sk.SketchSpec) -> tuple:
+    return tuple(int(s) for s in make_row_seeds(spec.seed, spec.depth))
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def query(sketch: sk.Sketch, keys: jnp.ndarray) -> jnp.ndarray:
+    """Kernel-path sketch query; falls back to the jnp path past VMEM."""
+    if not fits_vmem(sketch.spec):
+        return sk.query(sketch, keys)
+    return query_pallas(sketch.table, keys, seeds=_seeds_tuple(sketch.spec),
+                        width=sketch.spec.width, counter=sketch.spec.counter,
+                        interpret=_interpret())
+
+
+def update(sketch: sk.Sketch, keys: jnp.ndarray, rng: jax.Array) -> sk.Sketch:
+    """Kernel-path batched conservative update (dedup + n-fold + scatter-max)."""
+    if not fits_vmem(sketch.spec):
+        return sk.update_batched(sketch, keys, rng)
+    sorted_keys, mult = sk._dedup(keys)
+    uniforms = jax.random.uniform(rng, sorted_keys.shape)
+    table = update_pallas(sketch.table, sorted_keys, mult, uniforms,
+                          seeds=_seeds_tuple(sketch.spec),
+                          width=sketch.spec.width,
+                          counter=sketch.spec.counter,
+                          interpret=_interpret())
+    return sk.Sketch(table=table, spec=sketch.spec)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas sketch kernels.
+
+Standalone (no pallas import) so kernel tests compare two independent code
+paths.  Semantics are identical to `repro.core.sketch`'s query/batched-update
+given the same (pre-deduplicated) inputs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.counters import CounterSpec
+from repro.core.hashing import row_hashes
+
+
+def query_ref(table: jnp.ndarray, keys: jnp.ndarray, row_seeds: jnp.ndarray,
+              counter: CounterSpec) -> jnp.ndarray:
+    """min over rows + Morris decode; returns float32 estimates (N,)."""
+    d, w = table.shape
+    cols = row_hashes(keys, row_seeds, w)                 # (d, N)
+    vals = table[jnp.arange(d)[:, None], cols]            # (d, N)
+    return counter.decode(vals.min(axis=0))
+
+
+def update_ref(table: jnp.ndarray, keys: jnp.ndarray, mult: jnp.ndarray,
+               uniforms: jnp.ndarray, row_seeds: jnp.ndarray,
+               counter: CounterSpec) -> jnp.ndarray:
+    """Batched conservative update.
+
+    keys/mult/uniforms: (N,); entries with mult == 0 are no-ops (this is how
+    padding and intra-batch duplicates are expressed).  Returns new table.
+    """
+    d, w = table.shape
+    cols = row_hashes(keys, row_seeds, w)                 # (d, N)
+    rows = jnp.arange(d)[:, None]
+    cur = table[rows, cols]
+    cmin = cur.min(axis=0)
+    new_state = counter.nfold(cmin, mult, uniforms)
+    write = jnp.where(mult > 0, new_state, jnp.zeros_like(new_state))
+    return table.at[rows, cols].max(jnp.broadcast_to(write[None], (d, keys.shape[0])))

@@ -1,0 +1,141 @@
+"""Pallas TPU kernels for the sketch hot path.
+
+TPU adaptation (DESIGN.md §3): the paper's sketches are a few MB — they fit
+entirely in VMEM.  Both kernels therefore hold the full (d, w) table as a
+single VMEM-resident block across every grid step and walk the *key stream*
+with the grid:
+
+  * query:  hash -> in-VMEM gather -> min over rows -> Morris decode, fused.
+  * update: sequential grid over key chunks; the table is input/output
+    aliased, so each chunk's conservative scatter-max is visible to the
+    next chunk (TPU grids execute sequentially on a core — the legal place
+    for read-modify-write).
+
+Keys are laid out as (8k, 128) tiles to match the 8x128 vector lanes; the
+per-row hash/gather/scatter loop is unrolled in Python over the small depth
+d, so each row touch is a rank-1 VMEM gather/scatter.
+
+Validated in interpret=True mode on CPU against kernels/ref.py (see
+tests/test_kernels.py for the shape/dtype sweep).  `pl.pallas_call` +
+BlockSpec tiling as required for the TPU target; Mosaic caveat: the in-VMEM
+gather/scatter lowers to vector gather ops which constrain w to lane
+multiples — SketchSpec.from_memory already rounds widths to 128.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.counters import CounterSpec
+
+LANES = 128
+SUBLANES = 8
+CHUNK = SUBLANES * LANES  # keys per grid step
+
+def _mix32(x):
+    # murmur3 fmix32, identical to repro.core.hashing.mix32 (kept inline so
+    # the kernel body has no external calls for Mosaic; literals must be
+    # built inside the traced body, not captured).
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EB_CA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2_AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _query_kernel(table_ref, keys_ref, out_ref, *, seeds, width, counter):
+    keys = keys_ref[...].astype(jnp.uint32)              # (8, 128)
+    cmin = None
+    for k, seed in enumerate(seeds):
+        cols = (_mix32(keys ^ jnp.uint32(seed)) % jnp.uint32(width)).astype(jnp.int32)
+        row = table_ref[k, :]                            # (w,) VMEM-resident
+        vals = row[cols.reshape(-1)].reshape(cols.shape)  # rank-1 VMEM gather
+        cmin = vals if cmin is None else jnp.minimum(cmin, vals)
+    out_ref[...] = counter.decode(cmin)
+
+
+def _update_kernel(table_ref, keys_ref, mult_ref, unif_ref, out_ref, *,
+                   seeds, width, counter):
+    keys = keys_ref[...].astype(jnp.uint32)
+    mult = mult_ref[...]
+    unif = unif_ref[...]
+    # Pass 1: gather current states, take the row-min (conservative floor).
+    all_cols = []
+    cmin = None
+    for k, seed in enumerate(seeds):
+        cols = (_mix32(keys ^ jnp.uint32(seed)) % jnp.uint32(width)).astype(jnp.int32)
+        all_cols.append(cols.reshape(-1))
+        row = out_ref[k, :]  # read the aliased output: sees prior chunks
+        vals = row[cols.reshape(-1)].reshape(cols.shape)
+        cmin = vals if cmin is None else jnp.minimum(cmin, vals)
+    # Fused n-fold Morris increment (paper Alg. 1 generalized to n events).
+    new_state = counter.nfold(cmin, mult, unif)
+    write = jnp.where(mult > 0, new_state, jnp.zeros_like(new_state)).reshape(-1)
+    # Pass 2: conservative write — raise every hashed cell to >= new state.
+    for k in range(len(seeds)):
+        row = out_ref[k, :]
+        out_ref[k, :] = row.at[all_cols[k]].max(write)
+
+
+def _pad_tiles(x, pad_value):
+    """Pad a 1D array to a CHUNK multiple and tile to (8n, 128)."""
+    n = x.shape[0]
+    padded = CHUNK * max(1, math.ceil(n / CHUNK))
+    x = jnp.pad(x, (0, padded - n), constant_values=pad_value)
+    return x.reshape(padded // LANES, LANES), padded
+
+
+@functools.partial(jax.jit, static_argnames=("width", "counter", "seeds", "interpret"))
+def query_pallas(table, keys, *, seeds: tuple, width: int,
+                 counter: CounterSpec, interpret: bool = True):
+    """Fused sketch query. table (d, w); keys (N,) -> float32 (N,)."""
+    d = table.shape[0]
+    n = keys.shape[0]
+    tiles, padded = _pad_tiles(keys.astype(jnp.uint32), 0)
+    grid = padded // CHUNK
+    out = pl.pallas_call(
+        functools.partial(_query_kernel, seeds=seeds, width=width, counter=counter),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((d, width), lambda i: (0, 0)),        # whole table in VMEM
+            pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),  # key tile
+        ],
+        out_specs=pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(tiles.shape, jnp.float32),
+        interpret=interpret,
+    )(table, tiles)
+    return out.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("width", "counter", "seeds", "interpret"))
+def update_pallas(table, keys, mult, uniforms, *, seeds: tuple, width: int,
+                  counter: CounterSpec, interpret: bool = True):
+    """Batched conservative update. Entries with mult == 0 are no-ops.
+
+    table (d, w); keys/mult/uniforms (N,).  Returns the new table (the input
+    buffer is donated via input_output_aliases — in-place on device).
+    """
+    d = table.shape[0]
+    key_t, padded = _pad_tiles(keys.astype(jnp.uint32), 0)
+    mult_t, _ = _pad_tiles(mult.astype(jnp.float32), 0.0)
+    unif_t, _ = _pad_tiles(uniforms.astype(jnp.float32), 1.0)
+    grid = padded // CHUNK
+    return pl.pallas_call(
+        functools.partial(_update_kernel, seeds=seeds, width=width, counter=counter),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((d, width), lambda i: (0, 0)),
+            pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((d, width), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct(table.shape, table.dtype),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(table, key_t, mult_t, unif_t)

@@ -1,0 +1,102 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST run before any jax import/init: jax locks the device count on first
+# use.  This file (and ONLY this file) sees 512 placeholder devices.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+        --shape train_4k --mesh single                           # one cell
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json and are skipped
+if present (resumable — compiles are minutes each on this 1-core host).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import registry
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analyze import analyze
+from repro.sharding import use_rules
+
+RESULTS = "results/dryrun"
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str = RESULTS,
+             force: bool = False) -> dict:
+    mesh_name = "multipod" if multi_pod else "single"
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    record = {"arch": arch, "shape": shape, "mesh": mesh_name, "ok": False}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        cell = build_cell(arch, shape, mesh)
+        with use_rules(cell.rules, mesh):
+            lowered = jax.jit(cell.step_fn).lower(*cell.abstract_args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        roof = analyze(compiled, n_devices=mesh.devices.size,
+                       model_flops_global=cell.model_flops)
+        record.update(
+            ok=True, kind=cell.kind, notes=cell.notes,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory_analysis={
+                k: int(getattr(ma, k, 0)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes")},
+            roofline=roof.as_dict(),
+        )
+    except Exception as e:  # record the failure for triage, don't halt the grid
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    status = "OK" if record["ok"] else "FAIL"
+    print(f"[dryrun] {arch:24s} {shape:14s} {mesh_name:8s} {status} "
+          f"({time.time()-t0:.0f}s)", flush=True)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multipod", "both"])
+    ap.add_argument("--out", default=RESULTS)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cells = registry.all_cells()
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+    meshes = {"single": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape, mp, args.out, args.force)
+            n_ok += rec["ok"]
+            n_fail += not rec["ok"]
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function, not a module constant: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init; smoke
+tests and benchmarks see the real 1-CPU platform).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips with a leading
+    "pod" axis (data parallelism across the cross-pod links)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever this host actually has (smoke tests, examples)."""
+    n = jax.device_count()
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,1 @@
+"""Model zoo: LM transformer family, DimeNet, recsys models."""

@@ -1,0 +1,292 @@
+"""Attention family: GQA (+local/chunked variants, softcap) and MLA.
+
+One `attend` primitive covers every assigned LM arch:
+
+  * masks are pure position predicates (causal / sliding-window / chunked /
+    bidirectional), so local-global interleaving is a per-layer flag;
+  * `chunk_q` switches between full-score attention (baseline; S^2 scores
+    materialized, fine at 4k) and a lax.map over query chunks
+    (memory-efficient path required for 32k prefill — peak becomes
+    B*H*chunk*S instead of B*H*S*S);
+  * grouped KV heads are handled by folding the group into the einsum, so
+    K/V are never materialized per-q-head.
+
+MLA (DeepSeek-V2) implements both the prefill path (materialize per-head
+K/V from the rank-512 latent) and the *absorbed* decode path (scores taken
+directly against the cached latent; W_uk/W_uv folded into the query/output
+projections) — the cache is (kv_lora + rope_dim) per token, which is what
+makes the 500k-token cell feasible (DESIGN.md §2.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, rope, softcap
+from repro.models.params import P
+
+NEG_INF = -2.0e38
+
+
+def _mask(q_pos, k_pos, kind: str, window: int | None, chunk: int | None):
+    """(Q, K) boolean mask from position vectors."""
+    q = q_pos[:, None]
+    k = k_pos[None, :]
+    valid = k_pos[None, :] >= 0  # cache slots not yet written have pos -1
+    if kind == "bidir":
+        return valid
+    m = (k <= q) & valid
+    if kind == "local":
+        m &= (q - k) < window
+    elif kind == "chunked":
+        m &= (q // chunk) == (k // chunk)
+    return m
+
+
+def _scores_softmax(q, k, v, q_pos, k_pos, *, kind, window, attn_chunk,
+                    scale, cap):
+    """Full-materialization attention for one q block.
+
+    q: (B, Q, N, G, D) — N kv heads x G groups; k/v: (B, S, N, D).
+    """
+    s = jnp.einsum("bqngd,bsnd->bngqs", q, k).astype(jnp.float32) * scale
+    s = softcap(s, cap)
+    m = _mask(q_pos, k_pos, kind, window, attn_chunk)
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bngqs,bsnd->bqngd", p, v)
+
+
+def _online_attend(q5, k, v, q_pos, k_pos, *, kind, window, attn_chunk,
+                   scale, cap, kv_chunk: int):
+    """Flash-style attention: lax.scan over KV tiles with a running
+    (row-max, denominator, accumulator) carry — scores for each tile are
+    touched once and never materialized for the whole row (arXiv:2205.14135
+    restructured for XLA; the §Perf memory-term move)."""
+    b, sq, n, g, d = q5.shape
+    sk = k.shape[1]
+    assert sk % kv_chunk == 0, (sk, kv_chunk)
+    nk = sk // kv_chunk
+    dv = v.shape[-1]
+    kc = k.reshape(b, nk, kv_chunk, n, -1).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, kv_chunk, n, dv).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(nk, kv_chunk)
+
+    def step(carry, tile):
+        m, l, acc = carry
+        k_i, v_i, p_i = tile
+        s = jnp.einsum("bqngd,bsnd->bngqs", q5, k_i).astype(jnp.float32) * scale
+        s = softcap(s, cap)
+        mask = _mask(q_pos, p_i, kind, window, attn_chunk)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bngqs,bsnd->bngqd", p.astype(v_i.dtype), v_i).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, n, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, n, g, sq, dv), jnp.float32)
+    # checkpoint: backward recomputes each tile's probabilities instead of
+    # stacking nk copies of the (B,N,G,Sq,c) score tile
+    (_, l, acc), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, a0),
+                                  (kc, vc, pc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).astype(v.dtype)  # (B, Sq, N, G, Dv)
+
+
+def attend(q, k, v, q_pos, k_pos, *, kind: str = "global",
+           window: int | None = None, attn_chunk: int | None = None,
+           scale: float, cap: float | None = None,
+           chunk_q: int | None = None, remat_chunks: bool = True,
+           kv_chunk: int | None = None):
+    """q: (B, Sq, H, D); k/v: (B, Sk, N, D) with H = N * G. -> (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    n = k.shape[2]
+    g = h // n
+    dv = v.shape[-1]  # may differ from d (MLA: d_qk=192, d_v=128)
+    q5 = q.reshape(b, sq, n, g, d)
+    if kv_chunk is not None and k.shape[1] % kv_chunk == 0 and sq > 1:
+        out = _online_attend(q5, k, v, q_pos, k_pos, kind=kind, window=window,
+                             attn_chunk=attn_chunk, scale=scale, cap=cap,
+                             kv_chunk=kv_chunk)
+        return out.reshape(b, sq, h, dv)
+    if chunk_q is None or sq <= chunk_q:
+        out = _scores_softmax(q5, k, v, q_pos, k_pos, kind=kind, window=window,
+                              attn_chunk=attn_chunk, scale=scale, cap=cap)
+        return out.reshape(b, sq, h, dv)
+
+    assert sq % chunk_q == 0, (sq, chunk_q)
+    nq = sq // chunk_q
+    qc = q5.reshape(b, nq, chunk_q, n, g, d).transpose(1, 0, 2, 3, 4, 5)
+    pc = q_pos.reshape(nq, chunk_q)
+
+    def one(args):
+        qi, pi = args
+        return _scores_softmax(qi, k, v, pi, k_pos, kind=kind, window=window,
+                               attn_chunk=attn_chunk, scale=scale, cap=cap)
+
+    if remat_chunks:
+        # without this, lax.map STACKS every chunk's f32 scores as backward
+        # residuals (n_chunks * B * H * c * S buffers); recompute instead
+        one = jax.checkpoint(one)
+    out = jax.lax.map(one, (qc, pc))                     # (nq, B, c, N, G, Dv)
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, dv)
+
+
+# --------------------------------------------------------------------------
+# GQA block
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GQAConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    attn_softcap: Optional[float] = None
+    query_scale: Optional[float] = None  # default 1/sqrt(d_head)
+
+
+def gqa_specs(c: GQAConfig) -> dict:
+    specs = {
+        "wq": P((c.d_model, c.n_heads * c.d_head), ("embed", "heads")),
+        "wk": P((c.d_model, c.n_kv_heads * c.d_head), ("embed", "kv_heads")),
+        "wv": P((c.d_model, c.n_kv_heads * c.d_head), ("embed", "kv_heads")),
+        "wo": P((c.n_heads * c.d_head, c.d_model), ("heads", "embed")),
+    }
+    if c.qkv_bias:
+        specs["bq"] = P((c.n_heads * c.d_head,), ("heads",), "zeros")
+        specs["bk"] = P((c.n_kv_heads * c.d_head,), ("kv_heads",), "zeros")
+        specs["bv"] = P((c.n_kv_heads * c.d_head,), ("kv_heads",), "zeros")
+    return specs
+
+
+def gqa_apply(params, x, positions, c: GQAConfig, *, kind="global",
+              window=None, attn_chunk=None, use_rope=True,
+              cache: dict | None = None, chunk_q: int | None = None,
+              want_cache: bool = False, kv_chunk: int | None = None):
+    """x: (B, S, D). With `cache`, S is the new-token count (decode=1);
+    returns (out, new_cache)."""
+    b, s, _ = x.shape
+    q = dense(x, params["wq"], params.get("bq")).reshape(b, s, c.n_heads, c.d_head)
+    k = dense(x, params["wk"], params.get("bk")).reshape(b, s, c.n_kv_heads, c.d_head)
+    v = dense(x, params["wv"], params.get("bv")).reshape(b, s, c.n_kv_heads, c.d_head)
+    if use_rope:
+        q = rope(q, positions, c.rope_theta)
+        k = rope(k, positions, c.rope_theta)
+    scale = c.query_scale if c.query_scale is not None else c.d_head ** -0.5
+
+    new_cache = None
+    if cache is not None:
+        slots = (positions % cache["k"].shape[1]) if kind == "local" else positions
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, slots[0], 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, slots[0], 0, 0))
+        cpos = jax.lax.dynamic_update_slice(cache["pos"], positions.astype(jnp.int32),
+                                            (slots[0],))
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        k, v, k_pos = ck, cv, cpos
+    else:
+        k_pos = positions
+        if want_cache:  # prefill: raw K/V, packed into slots by the caller
+            new_cache = {"k": k, "v": v, "pos": positions.astype(jnp.int32)}
+
+    out = attend(q, k, v, positions, k_pos, kind=kind, window=window,
+                 attn_chunk=attn_chunk, scale=scale, cap=c.attn_softcap,
+                 chunk_q=chunk_q, kv_chunk=kv_chunk)
+    return dense(out.reshape(b, s, -1), params["wo"]), new_cache
+
+
+# --------------------------------------------------------------------------
+# MLA block (DeepSeek-V2 multi-head latent attention)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_dim: int = 128
+    rope_theta: float = 10_000.0
+
+
+def mla_specs(c: MLAConfig) -> dict:
+    return {
+        "wq": P((c.d_model, c.n_heads * (c.qk_nope + c.qk_rope)), ("embed", "heads")),
+        "wdkv": P((c.d_model, c.kv_lora), ("embed", None)),
+        "kv_norm": P((c.kv_lora,), (None,), "ones"),
+        "wkr": P((c.d_model, c.qk_rope), ("embed", None)),
+        "wuk": P((c.kv_lora, c.n_heads * c.qk_nope), (None, "heads")),
+        "wuv": P((c.kv_lora, c.n_heads * c.v_dim), (None, "heads")),
+        "wo": P((c.n_heads * c.v_dim, c.d_model), ("heads", "embed")),
+    }
+
+
+def _mla_qkr(params, x, positions, c: MLAConfig):
+    b, s, _ = x.shape
+    q = dense(x, params["wq"]).reshape(b, s, c.n_heads, c.qk_nope + c.qk_rope)
+    q_nope, q_rope = q[..., :c.qk_nope], q[..., c.qk_nope:]
+    q_rope = rope(q_rope, positions, c.rope_theta)
+    from repro.models.layers import rms_norm
+    ckv = rms_norm(dense(x, params["wdkv"]), params["kv_norm"])  # (B,S,L)
+    k_rope = rope(dense(x, params["wkr"])[:, :, None, :], positions,
+                  c.rope_theta)[:, :, 0, :]                       # (B,S,R) shared
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_prefill(params, x, positions, c: MLAConfig, *, chunk_q=None,
+                want_cache: bool = False, kv_chunk=None):
+    """Training / prefill path: per-head K,V materialized from the latent."""
+    b, s, _ = x.shape
+    q_nope, q_rope, ckv, k_rope = _mla_qkr(params, x, positions, c)
+    k_nope = dense(ckv, params["wuk"]).reshape(b, s, c.n_heads, c.qk_nope)
+    v = dense(ckv, params["wuv"]).reshape(b, s, c.n_heads, c.v_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None, :],
+                                          (b, s, c.n_heads, c.qk_rope))], axis=-1)
+    scale = (c.qk_nope + c.qk_rope) ** -0.5
+    out = attend(q, k, v, positions, positions, kind="global", scale=scale,
+                 chunk_q=chunk_q, kv_chunk=kv_chunk)
+    y = dense(out.reshape(b, s, -1), params["wo"])
+    cache = {"ckv": ckv, "kr": k_rope, "pos": positions.astype(jnp.int32)} \
+        if want_cache else None
+    return y, cache
+
+
+def mla_decode(params, x, positions, c: MLAConfig, cache: dict):
+    """Absorbed decode: attention runs directly against the cached latent."""
+    b, s, _ = x.shape  # s == new tokens (1)
+    q_nope, q_rope, ckv_new, kr_new = _mla_qkr(params, x, positions, c)
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new.astype(cache["ckv"].dtype),
+                                       (0, positions[0], 0))
+    kr = jax.lax.dynamic_update_slice(cache["kr"], kr_new.astype(cache["kr"].dtype),
+                                      (0, positions[0], 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"], positions.astype(jnp.int32),
+                                        (positions[0],))
+    wuk = params["wuk"].reshape(c.kv_lora, c.n_heads, c.qk_nope)
+    q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope, wuk.astype(q_nope.dtype))
+    s_lat = jnp.einsum("bqhl,bsl->bhqs", q_lat, ckv.astype(q_lat.dtype))
+    s_rot = jnp.einsum("bqhr,bsr->bhqs", q_rope, kr.astype(q_rope.dtype))
+    scale = (c.qk_nope + c.qk_rope) ** -0.5
+    scores = (s_lat + s_rot).astype(jnp.float32) * scale
+    m = _mask(positions, cpos, "global", None, None)
+    scores = jnp.where(m[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqs,bsl->bqhl", p, ckv.astype(p.dtype))
+    wuv = params["wuv"].reshape(c.kv_lora, c.n_heads, c.v_dim)
+    out = jnp.einsum("bqhl,lhv->bqhv", ctx, wuv.astype(ctx.dtype))
+    y = dense(out.reshape(b, s, -1), params["wo"])
+    return y, {"ckv": ckv, "kr": kr, "pos": cpos}

@@ -1,0 +1,108 @@
+"""Shared neural-net layers (pure functions over param dicts)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import P
+from repro.sharding import constrain
+
+
+def rms_norm(x, scale, eps: float = 1e-6, unit_offset: bool = False):
+    """RMSNorm; unit_offset=True uses the (1 + scale) Gemma convention."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    w = (1.0 + scale) if unit_offset else scale
+    return (y * w).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(x.dtype)
+
+
+def dense(x, w, b=None):
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def mlp_specs(d_model: int, d_ff: int, gated: bool = True) -> dict:
+    """SwiGLU/GeGLU ('gated') or plain 2-layer MLP param specs."""
+    specs = {
+        "up": P((d_model, d_ff), ("embed", "mlp")),
+        "down": P((d_ff, d_model), ("mlp", "embed")),
+    }
+    if gated:
+        specs["gate"] = P((d_model, d_ff), ("embed", "mlp"))
+    return specs
+
+
+def mlp_apply(params, x, activation: str = "silu"):
+    act = {"silu": jax.nn.silu, "gelu": lambda v: jax.nn.gelu(v, approximate=True),
+           "relu": jax.nn.relu}[activation]
+    up = dense(x, params["up"])
+    if "gate" in params:
+        up = act(dense(x, params["gate"])) * up
+    else:
+        up = act(up)
+    return dense(up, params["down"])
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary embedding over the last dim. x: (..., S, H, D), positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: float | None):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def embed_lookup(table, ids):
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(table, ids, mode: str = "mean", weights=None):
+    """torch.nn.EmbeddingBag equivalent: gather + reduce over the bag dim.
+
+    table (V, D); ids (..., bag) -> (..., D).  JAX has no native
+    EmbeddingBag; this gather+reduce IS the implementation (taxonomy §B.6).
+    """
+    vecs = jnp.take(table, ids, axis=0)                 # (..., bag, D)
+    if weights is not None:
+        vecs = vecs * weights[..., None]
+    if mode == "sum":
+        return vecs.sum(axis=-2)
+    if mode == "mean":
+        denom = ids.shape[-1] if weights is None else jnp.maximum(
+            weights.sum(axis=-1, keepdims=True), 1e-6)
+        return vecs.sum(axis=-2) / denom
+    if mode == "max":
+        return vecs.max(axis=-2)
+    raise ValueError(mode)
+
+
+def cross_entropy(logits, targets, z_loss: float = 0.0):
+    """Token-mean CE in fp32 with optional z-loss regularizer."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    loss = (lse - ll).mean()
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse).mean()
+    return loss

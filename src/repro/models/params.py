@@ -1,0 +1,85 @@
+"""Minimal parameter-definition layer (specs -> arrays or abstract values).
+
+Models declare parameters as trees of `P(shape, axes, init)`.  The same
+spec tree serves three consumers:
+  * init_tree          — concrete fp32 arrays (smoke tests, real training);
+  * abstract_tree      — ShapeDtypeStructs with NamedShardings attached
+                         (the multi-pod dry-run never allocates);
+  * tree_shardings     — in_shardings/out_shardings for pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import Rules, sharding_for
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    shape: tuple
+    axes: Optional[tuple] = None   # logical axis per dim (None entries ok)
+    init: str = "lecun"            # lecun | normal:<std> | zeros | ones | embed
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if self.axes is not None and len(self.axes) != len(self.shape):
+            raise ValueError(f"axes {self.axes} rank != shape {self.shape}")
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def _init_one(spec: P, key: jax.Array) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init.startswith("normal:"):
+        std = float(spec.init.split(":")[1])
+        return std * jax.random.normal(key, spec.shape, spec.dtype)
+    if spec.init == "embed":
+        return jax.random.normal(key, spec.shape, spec.dtype)
+    # lecun: fan-in = product of all dims but the last
+    fan_in = max(1, math.prod(spec.shape[:-1]))
+    std = 1.0 / math.sqrt(fan_in)
+    return std * jax.random.normal(key, spec.shape, spec.dtype)
+
+
+def init_tree(specs, key: jax.Array):
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(
+        treedef, [_init_one(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_tree(specs, rules: Rules = None, mesh=None):
+    """ShapeDtypeStructs (+shardings if mesh given) — nothing is allocated."""
+    def mk(s: P):
+        if mesh is not None:
+            return jax.ShapeDtypeStruct(
+                s.shape, s.dtype,
+                sharding=sharding_for(s.axes, rules, mesh, s.shape))
+        return jax.ShapeDtypeStruct(s.shape, s.dtype)
+    return jax.tree_util.tree_map(mk, specs, is_leaf=_is_spec)
+
+
+def tree_shardings(specs, rules: Rules, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: sharding_for(s.axes, rules, mesh, s.shape), specs,
+        is_leaf=_is_spec)
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=_is_spec)
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+def param_bytes(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=_is_spec)
+    return sum(math.prod(s.shape) * jnp.dtype(s.dtype).itemsize for s in leaves)

@@ -1,0 +1,137 @@
+"""Logical-axis sharding: one place where mesh layout decisions live.
+
+Every parameter/activation declares *logical* axes ("embed", "heads",
+"batch", ...).  A `Rules` table maps logical axes to mesh axes per
+architecture family; changing a sharding strategy is a rules edit, not a
+model edit (this is how the §Perf hillclimb iterates shardings).
+
+Defaults (single-pod mesh ("data", "model"), multi-pod adds "pod"):
+
+  batch/tokens        -> ("pod", "data")   data parallel
+  embed (weights)     -> "data"            ZeRO/FSDP-style param sharding
+  heads/kv/mlp/experts-> "model"           tensor/expert parallel
+  vocab/table_rows    -> "model"           output + embedding sharding
+  act_embed           -> "model"           saved-activation sharding
+  act_seq             -> "model"           sequence parallel (residual stream)
+  kv_seq              -> "data"            long-context decode KV sharding
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+Rules = dict  # logical axis name -> mesh axis | tuple of mesh axes | None
+
+LM_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "act_seq": "model",      # sequence-parallel residual stream
+    "act_embed": None,
+    "embed": "data",         # FSDP axis for weights
+    "heads": "model",
+    "kv_heads": "model",     # packed weight dim (n_kv * d_head)
+    "mlp": "model",
+    "expert_mlp": None,      # per-expert ff dim: EP only, no nested TP
+    "experts": "model",
+    "vocab": "model",
+    "kv_seq": None,
+    "cache_heads": None,     # head-count dim of the KV cache (often tiny)
+    "layers": None,
+}
+
+# decode: the KV cache is the working set — shard its sequence dim over the
+# model axis (flash-decoding-style split-S); batch stays on data
+LM_DECODE_RULES: Rules = dict(LM_RULES, act_seq=None, kv_seq="model")
+# batch=1 long-context decode: nothing to data-shard except the KV sequence
+LM_LONGCTX_RULES: Rules = dict(LM_RULES, batch=None, act_seq=None,
+                               kv_seq=("pod", "data", "model"))
+
+RECSYS_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "table_rows": "model",
+    "embed": None,
+    "mlp": "model",
+    "heads": "model",
+    "candidates": ("pod", "data"),
+    "layers": None,
+    "act_embed": None,
+    "act_seq": None,
+}
+
+GNN_RULES: Rules = {
+    # graphs parallelize over edges; d_hidden=128 is too small to split
+    "edges": ("pod", "data", "model"),
+    "nodes": None,
+    "triplets": ("pod", "data", "model"),
+    "batch": ("pod", "data"),
+    "embed": None,
+    "mlp": None,
+    "layers": None,
+}
+
+_state = threading.local()
+
+
+def spec_for(axes: Optional[tuple], rules: Rules, mesh: Mesh,
+             shape: Optional[tuple] = None) -> PS:
+    """Logical axes tuple -> PartitionSpec.
+
+    Drops mesh axes absent from `mesh`; with `shape` given, also drops mesh
+    axes a dimension cannot divide evenly (longest divisible prefix), so
+    e.g. a (256, 1) weight or a 50-dim head projection degrades gracefully
+    to replication instead of failing the lowering.
+    """
+    if axes is None:
+        return PS()
+    out = []
+    for i, ax in enumerate(axes):
+        target = rules.get(ax) if ax is not None else None
+        if target is None:
+            out.append(None)
+            continue
+        names = (target,) if isinstance(target, str) else tuple(target)
+        names = tuple(n for n in names if n in mesh.axis_names)
+        if shape is not None:
+            while names:
+                factor = 1
+                for n in names:
+                    factor *= mesh.shape[n]
+                if shape[i] % factor == 0:
+                    break
+                names = names[:-1]
+        out.append(names if names else None)
+    return PS(*out)
+
+
+def sharding_for(axes, rules: Rules, mesh: Mesh,
+                 shape: Optional[tuple] = None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(axes, rules, mesh, shape))
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules, mesh: Mesh):
+    """Make (rules, mesh) visible to `constrain` inside model code."""
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (rules, mesh)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current_ctx():
+    """(rules, mesh) made active by use_rules, or None."""
+    return getattr(_state, "ctx", None)
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint via logical axes; no-op outside use_rules."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return x
+    rules, mesh = ctx
+    return jax.lax.with_sharding_constraint(
+        x, sharding_for(tuple(axes), rules, mesh, tuple(x.shape)))

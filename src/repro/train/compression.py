@@ -1,0 +1,59 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+int8 quantization with per-block scales and error feedback (EF14/EF21
+family): each worker quantizes (grad + residual), the fleet exchanges int8,
+and the quantization error is carried to the next step — unbiased in the
+long run, 4x fewer bytes on the wire.
+
+Two forms:
+  * `quantize`/`dequantize` + `ef_residual` — numerics-only (wrap any psum);
+  * `compressed_allreduce_mean` — shard_map collective that actually moves
+    int8 on the wire (all_gather of int8 blocks + local fp32 mean), for the
+    roofline-visible collective-bytes reduction used in §Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 2048
+
+
+def _pad_to_block(x):
+    n = x.size
+    pad = (-n) % BLOCK
+    return jnp.pad(x.reshape(-1), (0, pad)), n
+
+
+def quantize(g: jnp.ndarray):
+    """fp -> (int8 values, per-block fp32 scales)."""
+    flat, n = _pad_to_block(g.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)), -127, 127)
+    return q.astype(jnp.int8), scale, n
+
+
+def dequantize(q, scale, n, shape):
+    return (q.astype(jnp.float32) * scale).reshape(-1)[:n].reshape(shape)
+
+
+def compress_with_feedback(g, residual):
+    """(grad, residual) -> (quantized-dequantized grad, new residual)."""
+    x = g.astype(jnp.float32) + residual
+    q, scale, n = quantize(x)
+    deq = dequantize(q, scale, n, g.shape)
+    return deq, x - deq
+
+
+def compressed_allreduce_mean(g: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Mean over `axis_name` moving int8 (+fp32 scales) on the wire.
+
+    Must run inside shard_map.  Wire bytes per element: 1 (int8) + 4/BLOCK
+    (scales), vs 4 for an fp32 ring all-reduce — ~4x collective-bytes cut.
+    """
+    q, scale, n = quantize(g)
+    q_all = jax.lax.all_gather(q, axis_name)          # (W, blocks, BLOCK) int8
+    s_all = jax.lax.all_gather(scale, axis_name)      # (W, blocks, 1) fp32
+    mean = jnp.mean(q_all.astype(jnp.float32) * s_all, axis=0)
+    return mean.reshape(-1)[:n].reshape(g.shape)

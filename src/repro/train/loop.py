@@ -1,0 +1,129 @@
+"""Fault-tolerant training loop.
+
+The loop owns nothing the checkpoint doesn't: (params, opt_state, step,
+rng, sketch tables) all live in TrainState, and the data pipeline is
+stateless-indexed by step — so kill -9 at any point resumes bit-identically
+from the last checkpoint.  Failure handling:
+
+  * checkpoint every `ckpt_every` steps (async snapshot, atomic publish);
+  * a step that produces non-finite loss is retried once with the same
+    batch, then skipped with the state rolled back (SDC / flaky-host
+    containment);
+  * on restart, `run` restores the latest checkpoint and fast-forwards the
+    stateless pipeline to the restored step — no data replay;
+  * the sketch counting plane merges lazily (core/sharded.py), so a slow
+    worker never stalls the fleet on statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import checkpoint as ckpt_lib
+from repro.train.optimizer import OptimizerConfig, make_optimizer
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+    rng: jax.Array
+    extras: Any = None   # e.g. sketch tables, EF residuals
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state, self.step, self.rng, self.extras), None
+
+    @classmethod
+    def tree_unflatten(cls, _, leaves):
+        return cls(*leaves)
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: OptimizerConfig,
+                    label_fn=None, accum: int = 1):
+    """loss_fn(params, batch, rng) -> (loss, metrics). Returns (init, step)."""
+    kwargs = {} if label_fn is None else {"label_fn": label_fn}
+    opt_init, opt_update = make_optimizer(opt_cfg, **kwargs)
+
+    def init_state(params, rng) -> TrainState:
+        return TrainState(params=params, opt_state=opt_init(params),
+                          step=jnp.zeros((), jnp.int32), rng=rng)
+
+    def grads_of(params, batch, rng):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch, rng)
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        rng, sub = jax.random.split(state.rng)
+        if accum == 1:
+            (loss, metrics), grads = grads_of(state.params, batch, sub)
+        else:
+            # microbatch gradient accumulation: batch leaves are
+            # (accum, micro, ...); scan keeps one microbatch live at a time
+            def acc_fn(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grads_of(state.params, mb, sub)
+                return (jax.tree_util.tree_map(jnp.add, g_acc, g), l_acc + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss), _ = jax.lax.scan(acc_fn, (zeros, 0.0), batch)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = {}
+        new_params, new_opt, stats = opt_update(grads, state.opt_state,
+                                                state.params, state.step)
+        new_state = TrainState(params=new_params, opt_state=new_opt,
+                               step=state.step + 1, rng=rng,
+                               extras=state.extras)
+        return new_state, {"loss": loss, **metrics, **stats}
+
+    return init_state, train_step
+
+
+def run(state: TrainState, step_fn, batches, *, n_steps: int,
+        ckpt_dir: Optional[str] = None, ckpt_every: int = 100,
+        log_every: int = 10, log_fn=print) -> TrainState:
+    """Drive `step_fn` with retry-once / skip-on-nonfinite and checkpoints.
+
+    `batches`: iterable of (step, batch) — e.g. a data.pipeline.Prefetcher.
+    """
+    if ckpt_dir is not None and ckpt_lib.latest_step(ckpt_dir) is not None:
+        restored, manifest = ckpt_lib.restore(ckpt_dir, state)
+        state = restored
+        log_fn(f"[loop] restored checkpoint at step {manifest['step']}")
+
+    # no buffer donation: the retry-once SDC guard needs `prev` alive after
+    # the step (donation would invalidate it); large runs can re-enable it
+    # by dropping the retry path.
+    jit_step = jax.jit(step_fn)
+    start = int(state.step)
+    t0 = time.time()
+    pending_save = None
+    for step, batch in batches:
+        if step < start:
+            continue  # stateless pipeline fast-forward
+        if step >= n_steps:
+            break
+        prev = state
+        state, metrics = jit_step(state, batch)
+        loss = float(metrics["loss"])
+        if not jnp.isfinite(jnp.asarray(loss)):
+            state, metrics = jit_step(prev, batch)   # retry once (SDC guard)
+            if not jnp.isfinite(jnp.asarray(float(metrics["loss"]))):
+                log_fn(f"[loop] step {step}: non-finite loss twice, skipping")
+                state = dataclasses.replace(prev, step=prev.step + 1)
+                continue
+        if log_every and step % log_every == 0:
+            rate = (step - start + 1) / max(time.time() - t0, 1e-9)
+            log_fn(f"[loop] step {step} loss {loss:.4f} "
+                   f"({rate:.2f} steps/s)")
+        if ckpt_dir is not None and (step + 1) % ckpt_every == 0:
+            pending_save = ckpt_lib.save_async(ckpt_dir, step + 1, state)
+    if pending_save is not None:
+        pending_save.join(timeout=60)  # don't orphan the last atomic publish
+    return state

@@ -1,0 +1,138 @@
+"""Optimizers built from scratch: AdamW (dense) + row-wise Adagrad (tables).
+
+Production embedding tables cannot afford Adam's 2x fp32 moments
+(2 x 100GB+); the industry standard is row-wise Adagrad: ONE fp32
+accumulator per row.  `make_optimizer` partitions the param tree by a
+label function (configs label their big tables) and applies the right
+rule per leaf — this is what makes the recsys dry-run fit memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    table_lr: float = 0.01        # row-wise adagrad learning rate
+    table_eps: float = 1e-8
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup -> cosine decay to min_lr_ratio * peak."""
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(math.pi * frac))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def default_label_fn(path: str) -> str:
+    """Tables (embedding-style 2D giants) get row-wise adagrad."""
+    for marker in ("tables/", "user_table", "item_table", "items"):
+        if marker in path or path.endswith(marker.rstrip("/")):
+            return "table"
+    return "dense"
+
+
+def make_optimizer(cfg: OptimizerConfig,
+                   label_fn: Callable[[str], str] = default_label_fn):
+    """Returns (init_fn, update_fn).
+
+    init_fn(params) -> opt_state
+    update_fn(grads, opt_state, params, step) -> (new_params, new_opt_state, stats)
+    """
+
+    def labels_of(params):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, _: label_fn(_path_str(p)), params)
+
+    def init_fn(params):
+        labels = labels_of(params)
+
+        def one(label, p):
+            if label == "table":
+                return {"acc": jnp.zeros((p.shape[0],), jnp.float32)}
+            return {"mu": jnp.zeros_like(p, jnp.float32),
+                    "nu": jnp.zeros_like(p, jnp.float32)}
+
+        return jax.tree_util.tree_map(one, labels, params)
+
+    def update_fn(grads, opt_state, params, step):
+        labels = labels_of(params)
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        lr = lr_schedule(cfg, step)
+        t = step.astype(jnp.float32) + 1.0
+
+        def one(label, g, s, p):
+            g = g.astype(jnp.float32)
+            if label == "table":
+                # row-wise adagrad: accumulate mean-square per row
+                row_ms = jnp.mean(jnp.square(g), axis=tuple(range(1, g.ndim)))
+                acc = s["acc"] + row_ms
+                # eps inside the sqrt + floor: untouched rows (acc == 0,
+                # g == 0) must stay exactly unchanged, not become 0 * inf
+                scale = cfg.table_lr / jnp.sqrt(jnp.maximum(acc + cfg.table_eps,
+                                                            1e-30))
+                new_p = p - scale.reshape((-1,) + (1,) * (g.ndim - 1)) * g
+                return new_p.astype(p.dtype), {"acc": acc}
+            mu = cfg.b1 * s["mu"] + (1 - cfg.b1) * g
+            nu = cfg.b2 * s["nu"] + (1 - cfg.b2) * jnp.square(g)
+            mu_hat = mu / (1 - cfg.b1 ** t)
+            nu_hat = nu / (1 - cfg.b2 ** t)
+            upd = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps) + cfg.weight_decay * p
+            return (p - lr * upd).astype(p.dtype), {"mu": mu, "nu": nu}
+
+        flat = jax.tree_util.tree_map(one, labels, grads, opt_state, params)
+        new_params = jax.tree_util.tree_map(lambda x: x[0], flat,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree_util.tree_map(lambda x: x[1], flat,
+                                           is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+    return init_fn, update_fn
+
+
+def opt_state_specs(param_specs_tree, label_fn=default_label_fn):
+    """P-spec tree for the optimizer state (dry-run memory accounting)."""
+    from repro.models.params import P
+
+    def one(path, spec):
+        label = label_fn(_path_str(path))
+        if label == "table":
+            return {"acc": P((spec.shape[0],), (spec.axes[0],) if spec.axes else None,
+                             "zeros", jnp.float32)}
+        return {"mu": P(spec.shape, spec.axes, "zeros", jnp.float32),
+                "nu": P(spec.shape, spec.axes, "zeros", jnp.float32)}
+
+    return jax.tree_util.tree_map_with_path(
+        one, param_specs_tree, is_leaf=lambda x: isinstance(x, P))

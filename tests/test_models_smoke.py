@@ -1,0 +1,177 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch
+instantiates a REDUCED same-family config and runs one forward/train step
+on CPU, asserting output shapes and finiteness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.data import graph as graph_lib
+from repro.data import recsys_stream as streams
+from repro.models import dimenet as dn
+from repro.models import recsys as rs
+from repro.models import transformer as tf
+from repro.models.params import init_tree, param_count
+
+registry.load_all()
+LM_ARCHS = [a for a in registry.ARCHS.values() if a.family == "lm"]
+
+
+def _finite(tree) -> bool:
+    return all(bool(jnp.isfinite(x).all()) for x in jax.tree_util.tree_leaves(tree)
+               if jnp.issubdtype(x.dtype, jnp.floating))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS, ids=lambda a: a.name)
+def test_lm_smoke_forward_and_grad(arch):
+    cfg: tf.LMConfig = arch.smoke_cfg
+    params = init_tree(tf.param_specs(cfg), jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    logits, aux = tf.apply(params, tokens, cfg)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    loss, grads = jax.value_and_grad(
+        lambda p: tf.loss_fn(p, {"tokens": tokens, "targets": tokens}, cfg)[0])(params)
+    assert bool(jnp.isfinite(loss)) and _finite(grads)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS, ids=lambda a: a.name)
+def test_lm_smoke_prefill_decode_consistent(arch):
+    cfg: tf.LMConfig = arch.smoke_cfg
+    params = init_tree(tf.param_specs(cfg), jax.random.PRNGKey(2))
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (2, 16), 0, cfg.vocab_size)
+    full, _ = tf.apply(params, tokens, cfg)
+    last, cache = tf.prefill(params, tokens[:, :-1], cfg, max_len=16)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(full[:, -2]),
+                               atol=5e-2, rtol=5e-2)
+    dec, _ = tf.decode_step(params, cache, tokens[:, -1:],
+                            jnp.asarray(15, jnp.int32), cfg)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, -1]),
+                               atol=5e-2, rtol=5e-2)
+
+
+def test_lm_full_configs_have_assigned_dimensions():
+    """The FULL configs carry the exact assignment numbers (checked, not run)."""
+    a = registry.get("deepseek-v2-lite-16b").cfg
+    assert (a.n_layers, a.d_model, a.n_heads, a.vocab_size) == (27, 2048, 16, 102_400)
+    assert a.mla.kv_lora == 512 and a.moe.top_k == 6 and a.moe.n_shared == 2
+    b = registry.get("llama4-scout-17b-a16e").cfg
+    assert (b.n_layers, b.d_model, b.n_heads, b.n_kv_heads) == (48, 5120, 40, 8)
+    assert b.moe.n_experts == 16 and b.moe.top_k == 1 and b.vocab_size == 202_048
+    c = registry.get("phi3-mini-3.8b").cfg
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (32, 3072, 32, 32, 8192, 32_064)
+    d = registry.get("qwen2-0.5b").cfg
+    assert (d.n_layers, d.d_model, d.n_heads, d.n_kv_heads, d.d_ff,
+            d.vocab_size) == (24, 896, 14, 2, 4864, 151_936)
+    assert d.qkv_bias
+    e = registry.get("gemma2-27b").cfg
+    assert (e.n_layers, e.d_model, e.n_heads, e.n_kv_heads, e.d_ff,
+            e.vocab_size) == (46, 4608, 32, 16, 36_864, 256_000)
+    assert e.final_softcap == 30.0 and e.pattern == ("local", "global")
+    g = registry.get("dimenet").cfg
+    assert (g.n_blocks, g.d_hidden, g.n_bilinear, g.n_spherical,
+            g.n_radial) == (6, 128, 8, 7, 6)
+    h = registry.get("dlrm-mlperf").cfg
+    assert h.n_dense == 13 and h.n_sparse == 26 and h.embed_dim == 128
+    assert h.bot_mlp == (13, 512, 256, 128)
+    assert h.top_mlp == (1024, 1024, 512, 256, 1)
+    s = registry.get("sasrec").cfg
+    assert (s.embed_dim, s.n_blocks, s.n_heads, s.seq_len) == (50, 2, 1, 50)
+    t = registry.get("bert4rec").cfg
+    assert (t.embed_dim, t.n_blocks, t.n_heads, t.seq_len) == (64, 2, 2, 200)
+    u = registry.get("two-tower-retrieval").cfg
+    assert u.embed_dim == 256 and u.tower == (1024, 512, 256)
+
+
+def test_dimenet_smoke_train_step():
+    arch = registry.get("dimenet")
+    cfg = dataclasses.replace(arch.smoke_cfg, readout="graph")
+    params = init_tree(dn.param_specs(cfg), jax.random.PRNGKey(0))
+    m = graph_lib.batched_molecules(4, 12, 24, seed=0)
+    rng = np.random.default_rng(0)
+    kj, ji, valid = graph_lib.build_triplets(m["edge_src"], m["edge_dst"],
+                                             48, 4, rng)
+    batch = {"pos": jnp.asarray(m["pos"]), "atom_z": jnp.asarray(m["atom_z"]),
+             "edge_src": jnp.asarray(m["edge_src"]),
+             "edge_dst": jnp.asarray(m["edge_dst"]),
+             "edge_mask": jnp.ones((96,), jnp.float32),
+             "t_kj": jnp.asarray(kj), "t_ji": jnp.asarray(ji),
+             "t_mask": jnp.asarray(valid.astype(np.float32)),
+             "graph_id": jnp.asarray(m["graph_id"]), "n_graphs": 4,
+             "target": jnp.zeros((4,))}
+    loss, grads = jax.value_and_grad(
+        lambda p: dn.loss_fn(p, batch, cfg)[0])(params)
+    assert bool(jnp.isfinite(loss)) and _finite(grads)
+
+
+def test_dimenet_smoke_node_classification():
+    arch = registry.get("dimenet")
+    cfg = dataclasses.replace(arch.smoke_cfg, readout="node", d_feat=8,
+                              n_targets=5)
+    params = init_tree(dn.param_specs(cfg), jax.random.PRNGKey(1))
+    g = graph_lib.synthetic_graph(64, 256, seed=1)
+    rng = np.random.default_rng(1)
+    src = g.indices.astype(np.int32)
+    dst = np.repeat(np.arange(64), np.diff(g.indptr)).astype(np.int32)
+    kj, ji, valid = graph_lib.build_triplets(src, dst, 64, 3, rng)
+    batch = {"pos": jnp.asarray(rng.normal(size=(64, 3)).astype(np.float32)),
+             "x_feat": jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32)),
+             "edge_src": jnp.asarray(src), "edge_dst": jnp.asarray(dst),
+             "t_kj": jnp.asarray(kj), "t_ji": jnp.asarray(ji),
+             "t_mask": jnp.asarray(valid.astype(np.float32)),
+             "label": jnp.asarray(rng.integers(0, 5, 64))}
+    out = dn.apply(params, batch, cfg)
+    assert out.shape == (64, 5) and bool(jnp.isfinite(out).all())
+
+
+def test_dlrm_smoke():
+    arch = registry.get("dlrm-mlperf")
+    cfg = arch.smoke_cfg
+    params = init_tree(rs.dlrm_specs(cfg), jax.random.PRNGKey(0))
+    b = streams.dlrm_batch(0, 0, 1, global_batch=32,
+                           table_sizes=list(cfg.table_sizes))
+    batch = {k: jnp.asarray(v) for k, v in b.items()}
+    logit = rs.dlrm_apply(params, batch, cfg)
+    assert logit.shape == (32,) and bool(jnp.isfinite(logit).all())
+    loss, grads = jax.value_and_grad(
+        lambda p: rs.dlrm_loss(p, batch, cfg)[0])(params)
+    assert bool(jnp.isfinite(loss)) and _finite(grads)
+    scores = rs.dlrm_score_candidates(params, batch, jnp.arange(64), cfg)
+    assert scores.shape == (64,) and bool(jnp.isfinite(scores).all())
+
+
+@pytest.mark.parametrize("name", ["sasrec", "bert4rec"])
+def test_seqrec_smoke(name):
+    arch = registry.get(name)
+    cfg = arch.smoke_cfg
+    params = init_tree(rs.sasrec_specs(cfg), jax.random.PRNGKey(0))
+    b = streams.seq_batch(0, 0, 1, global_batch=16, n_items=cfg.n_items,
+                          seq_len=cfg.seq_len)
+    batch = {k: jnp.asarray(v) for k, v in b.items()}
+    loss_fn = rs.bert4rec_loss if name == "bert4rec" else rs.sasrec_loss
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(p, batch, cfg, jax.random.PRNGKey(1))[0])(params)
+    assert bool(jnp.isfinite(loss)) and _finite(grads)
+    h = rs.sasrec_encode(params, batch["history"], cfg)[:, -1]
+    v, idx = rs.topk_over_catalog(params, h, cfg, k=10, chunk=128)
+    assert v.shape == (16, 10) and (np.asarray(idx) < cfg.n_items).all()
+
+
+def test_twotower_smoke():
+    arch = registry.get("two-tower-retrieval")
+    cfg = arch.smoke_cfg
+    params = init_tree(rs.twotower_specs(cfg), jax.random.PRNGKey(0))
+    b = streams.twotower_batch(0, 0, 1, global_batch=16, n_users=cfg.n_users,
+                               n_items=cfg.n_items)
+    batch = {k: jnp.asarray(v) for k, v in b.items()}
+    batch["item_logq"] = jnp.zeros((16,))
+    loss, grads = jax.value_and_grad(
+        lambda p: rs.twotower_loss(p, batch, cfg)[0])(params)
+    assert bool(jnp.isfinite(loss)) and _finite(grads)
+    cands = jnp.zeros((128, cfg.n_item_feats), jnp.int32)
+    s = rs.twotower_score_candidates(params, batch, cands, cfg)
+    assert s.shape == (16, 128)

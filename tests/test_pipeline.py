@@ -1,0 +1,97 @@
+"""Data plane: corpus calibration, stateless sharding, samplers, triplets."""
+import numpy as np
+import pytest
+
+from repro.data import corpus, graph, ngrams, pipeline, recsys_stream
+
+
+def test_corpus_matches_paper_profile():
+    prof = corpus.profile(corpus.generate(corpus.CorpusSpec()))
+    # paper: 50k unigrams / 183k bigrams / 233k total at 500k tokens
+    assert abs(prof["distinct_unigrams"] - 50_000) / 50_000 < 0.03
+    assert abs(prof["distinct_bigrams"] - 183_000) / 183_000 < 0.03
+    assert prof["n_tokens"] == 500_000
+
+
+def test_corpus_deterministic():
+    a = corpus.generate(corpus.CorpusSpec(n_tokens=10_000))
+    b = corpus.generate(corpus.CorpusSpec(n_tokens=10_000))
+    assert (a == b).all()
+
+
+def test_event_stream_covers_both_gram_kinds():
+    toks = corpus.generate(corpus.CorpusSpec(n_tokens=5_000))
+    ev = ngrams.event_stream(toks)
+    assert ev.shape == (5_000 + 4_999,)
+    uniq, counts = ngrams.exact_counts(ev)
+    assert counts.sum() == ev.size
+
+
+def test_perfect_storage_line():
+    assert ngrams.perfect_storage_bytes(233_000) == 932_000
+
+
+def test_stateless_sharding_partition_equals_whole():
+    toks = (np.arange(50_000) * 7919 % 1024).astype(np.uint32)
+    src = pipeline.token_batch_source(toks, global_batch=16, seq_len=8, seed=5)
+    whole = src.batch(3, 0, 1)["tokens"]
+    parts = [src.batch(3, s, 4)["tokens"] for s in range(4)]
+    np.testing.assert_array_equal(whole, np.concatenate(parts, axis=0))
+
+
+def test_prefetcher_order_and_start_step():
+    toks = np.arange(10_000, dtype=np.uint32)
+    src = pipeline.token_batch_source(toks, 4, 8)
+    pf = pipeline.Prefetcher(src, 0, 1, start_step=7, depth=2)
+    it = iter(pf)
+    steps = [next(it)[0] for _ in range(3)]
+    pf.close()
+    assert steps == [7, 8, 9]
+
+
+def test_neighbor_sampler_shapes_and_semantics():
+    g = graph.synthetic_graph(2_000, 16_000, seed=3)
+    rng = np.random.default_rng(0)
+    seeds = np.arange(32)
+    nodes, src, dst, mask = graph.sample_neighbors(g, seeds, [15, 10], rng)
+    n_exp, e_exp = graph.subgraph_sizes(32, [15, 10])
+    assert nodes.shape == (n_exp,) and src.shape == (e_exp,)
+    # tree property: every edge's dst position is in an earlier layer
+    assert (dst < src).all()
+    # sampled children are real neighbors where mask says so
+    for e in rng.choice(e_exp, 200):
+        if mask[e]:
+            parent = nodes[dst[e]]
+            child = nodes[src[e]]
+            neigh = g.indices[g.indptr[parent]:g.indptr[parent + 1]]
+            assert child in neigh
+
+
+def test_triplets_exclude_backtracking():
+    g = graph.synthetic_graph(500, 4_000, seed=4)
+    src = g.indices.astype(np.int32)
+    dst = np.repeat(np.arange(500), np.diff(g.indptr)).astype(np.int32)
+    kj, ji, valid = graph.build_triplets(src, dst, 500, 4,
+                                         np.random.default_rng(0))
+    assert kj.shape == ji.shape == valid.shape
+    v = valid.nonzero()[0]
+    # (k->j) feeds (j->i): shared node j, and k != i (no immediate backtrack)
+    assert (dst[kj[v]] == src[ji[v]]).all()
+    assert (src[kj[v]] != dst[ji[v]]).all()
+
+
+def test_molecule_batch_offsets():
+    m = graph.batched_molecules(8, 10, 20, seed=1)
+    assert m["pos"].shape == (80, 3)
+    # edges stay within their own molecule
+    assert (m["edge_src"] // 10 == m["edge_dst"] // 10).all()
+    assert (np.bincount(m["graph_id"]) == 10).all()
+
+
+def test_recsys_streams_deterministic_and_bounded():
+    a = recsys_stream.dlrm_batch(5, 1, 4, global_batch=64, table_sizes=[100] * 26)
+    b = recsys_stream.dlrm_batch(5, 1, 4, global_batch=64, table_sizes=[100] * 26)
+    np.testing.assert_array_equal(a["sparse"], b["sparse"])
+    assert a["sparse"].max() < 100 and a["sparse"].min() >= 0
+    s = recsys_stream.seq_batch(2, 0, 2, global_batch=32, n_items=777, seq_len=9)
+    assert s["history"].max() < 777
