@@ -1,0 +1,33 @@
+"""JAX API drift shims.
+
+`shard_map` graduated from `jax.experimental.shard_map` (kwarg `check_rep`)
+to `jax.shard_map` (kwarg `check_vma`).  Call sites in this repo use the
+new spelling; this wrapper maps it onto whichever the installed jax has.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    kw = {} if check_vma is None else {_CHECK_KW: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+def axis_size(axis_name) -> int:
+    """Size of a named mesh axis inside shard_map/pmap.
+
+    `jax.lax.axis_size` only exists in newer jax; `psum(1, axis)` is the
+    classic spelling and constant-folds to a static int at trace time.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

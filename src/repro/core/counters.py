@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import jax
 import jax.numpy as jnp
 
 _DTYPES = {8: jnp.uint8, 16: jnp.uint16, 32: jnp.uint32}
@@ -100,6 +101,25 @@ class CounterSpec:
         # guard float roundoff: never let Value(c) exceed v by a full step
         too_high = self.decode(c) > v + 1e-6 * jnp.maximum(v, 1.0)
         return jnp.maximum(c - too_high.astype(jnp.float32), 0.0)
+
+    def reencode_stochastic(self, value: jnp.ndarray,
+                            rng: "jax.Array | None" = None) -> jnp.ndarray:
+        """Estimate-space value -> counter state, unbiased when rng given.
+
+        Floor state plus a Bernoulli bump with probability equal to the
+        residual in units of the local point mass, so
+        E[decode(reencode_stochastic(v))] == v (clipped at max_state).
+        With rng None the floor state is returned (deterministic
+        under-estimate by < one point mass).  Shared by
+        `sketch.merge(mode="estimate_sum")` and `stream.window.decay`.
+        Returns float32 states; callers cast to the cell dtype.
+        """
+        v = value.astype(jnp.float32)
+        s = self.encode_floor(v)
+        if rng is not None:
+            frac = (v - self.decode(s)) / self.point_mass(s)
+            s = s + (jax.random.uniform(rng, s.shape) < frac)
+        return jnp.clip(s, 0.0, float(self.max_state))
 
     def nfold(self, state: jnp.ndarray, n: jnp.ndarray, uniform: jnp.ndarray) -> jnp.ndarray:
         """Add n >= 0 events to counter `state` in one step.

@@ -24,6 +24,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.core import sketch as sk
 from repro.core.hashing import mix32
 
@@ -49,6 +51,31 @@ def lazy_update(sketch: sk.Sketch, keys: jnp.ndarray, rng: jax.Array,
     merged = pmax_merge(sketch, axis_names)
     table = jnp.where(do_merge, merged.table, sketch.table)
     return sk.Sketch(table=table, spec=sketch.spec)
+
+
+def pmax_merge_window(win, axis_names):
+    """Max-merge per-shard bucket rings across mesh axes (inside shard_map).
+
+    Every worker rotates on the same schedule (rotation is driven by the
+    host step counter, replicated by construction), so bucket b means the
+    same time slice on every shard and the ring merges bucket-wise exactly
+    like a plain sketch.  (repro.stream is imported lazily so core stays a
+    leaf package at import time.)"""
+    import repro.stream.window as w
+    return w.WindowedSketch(tables=jax.lax.pmax(win.tables, axis_names),
+                            cursor=win.cursor, spec=win.spec)
+
+
+def lazy_update_window(win, keys: jnp.ndarray, rng: jax.Array,
+                       step: jnp.ndarray, merge_every: int, axis_names):
+    """Windowed analogue of `lazy_update`: local active-bucket update plus a
+    periodic fleet-wide bucket-wise pmax merge."""
+    import repro.stream.window as w
+    win = w.window_update(win, keys, rng)
+    do_merge = (step % merge_every) == (merge_every - 1)
+    merged = pmax_merge_window(win, axis_names)
+    tables = jnp.where(do_merge, merged.tables, win.tables)
+    return w.WindowedSketch(tables=tables, cursor=win.cursor, spec=win.spec)
 
 
 # --------------------------------------------------------------------------
@@ -90,7 +117,7 @@ def _dispatch_layout(keys: jnp.ndarray, n_shards: int, capacity: int):
 def routed_update(local: sk.Sketch, keys: jnp.ndarray, rng: jax.Array,
                   axis_name: str, capacity: int) -> sk.Sketch:
     """Update a key-routed sketch (call inside shard_map over `axis_name`)."""
-    n_shards = jax.lax.axis_size(axis_name)
+    n_shards = compat.axis_size(axis_name)
     buf, _, _ = _dispatch_layout(keys, n_shards, capacity)
     # (n_shards, cap) -> received (n_shards, cap): row j came from device j
     recv = jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=0)
@@ -107,7 +134,7 @@ def routed_query(local: sk.Sketch, keys: jnp.ndarray, axis_name: str,
     Keys dropped by capacity overflow return -1.0 (caller may retry or fall
     back to a replicated sketch; overflow is sized away in practice).
     """
-    n_shards = jax.lax.axis_size(axis_name)
+    n_shards = compat.axis_size(axis_name)
     buf, slot_of_key, kept = _dispatch_layout(keys, n_shards, capacity)
     recv = jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=0)
     est = sk.query(local, recv.reshape(-1))

@@ -136,12 +136,26 @@ def _dedup(keys: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     n is the multiplicity at each segment's first position and 0 elsewhere,
     so downstream writes become no-ops for duplicate rows (masked by n == 0).
     """
+    return dedup_weighted(keys, jnp.ones(keys.shape, jnp.float32))
+
+
+def dedup_weighted(keys: jnp.ndarray, weights: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Weighted dedup: sort keys, sum each key's weights at its first slot.
+
+    Returns (sorted_keys, total_weight_at_first_occurrence); duplicates and
+    zero-weight entries carry weight 0, i.e. they are no-ops downstream.
+    vmap-safe, so stacked multi-tenant batches dedup in one shot.
+    """
     n = keys.shape[0]
-    sk = jnp.sort(keys)
-    start = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    order = jnp.argsort(keys)
+    sorted_keys = keys[order]
+    w_sorted = weights[order].astype(jnp.float32)
+    start = jnp.concatenate([jnp.ones((1,), bool),
+                             sorted_keys[1:] != sorted_keys[:-1]])
     seg = jnp.cumsum(start) - 1
-    counts = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), seg, num_segments=n)
-    return sk, jnp.where(start, counts[seg], 0.0)
+    totals = jax.ops.segment_sum(w_sorted, seg, num_segments=n)
+    return sorted_keys, jnp.where(start, totals[seg], 0.0)
 
 
 def update_batched(sketch: Sketch, keys: jnp.ndarray, rng: jax.Array,
@@ -166,13 +180,7 @@ def update_batched(sketch: Sketch, keys: jnp.ndarray, rng: jax.Array,
     if weights is None:
         sk_keys, mult = _dedup(keys)
     else:
-        order = jnp.argsort(keys)
-        sk_keys = keys[order]
-        w_sorted = weights[order].astype(jnp.float32)
-        start = jnp.concatenate([jnp.ones((1,), bool), sk_keys[1:] != sk_keys[:-1]])
-        seg = jnp.cumsum(start) - 1
-        totals = jax.ops.segment_sum(w_sorted, seg, num_segments=n)
-        mult = jnp.where(start, totals[seg], 0.0)
+        sk_keys, mult = dedup_weighted(keys, weights)
 
     cols = row_hashes(sk_keys, sketch.row_seeds, spec.width)     # (d, N)
     rows = jnp.arange(spec.depth)[:, None]
@@ -225,11 +233,7 @@ def merge(a: Sketch, b: Sketch, mode: str = "max", rng: jax.Array | None = None
         table = jnp.maximum(a.table, b.table)
     elif mode == "estimate_sum":
         v = c.decode(a.table) + c.decode(b.table)
-        s = c.encode_floor(v)
-        if rng is not None:
-            frac = (v - c.decode(s)) / c.point_mass(s)
-            s = s + (jax.random.uniform(rng, s.shape) < frac)
-        table = jnp.clip(s, 0, c.max_state).astype(a.table.dtype)
+        table = c.reencode_stochastic(v, rng).astype(a.table.dtype)
     else:
         raise ValueError(f"unknown merge mode {mode!r}")
     return Sketch(table=table, spec=a.spec)

@@ -12,7 +12,8 @@ import jax.numpy as jnp
 
 from repro.core import sketch as sk
 from repro.core.hashing import make_row_seeds
-from repro.kernels.sketch import CHUNK, query_pallas, update_pallas
+from repro.kernels.sketch import (CHUNK, fused_update_pallas, query_pallas,
+                                  update_pallas)
 
 # VMEM budget the resident-table strategy is valid for (per TPU core).
 VMEM_TABLE_LIMIT = 12 * 1024 * 1024
@@ -51,3 +52,29 @@ def update(sketch: sk.Sketch, keys: jnp.ndarray, rng: jax.Array) -> sk.Sketch:
                           counter=sketch.spec.counter,
                           interpret=_interpret())
     return sk.Sketch(table=table, spec=sketch.spec)
+
+
+def update_many(tables: jnp.ndarray, spec: sk.SketchSpec, keys: jnp.ndarray,
+                rng: jax.Array, weights: jnp.ndarray | None = None
+                ) -> jnp.ndarray:
+    """Fused multi-tenant update: tables (T, d, w), keys/weights (T, N).
+
+    Dedups each tenant's stream (vmapped), then lands all T updates in ONE
+    kernel launch (the per-tenant table is the VMEM-resident grid block).
+    Entries with weight 0 are no-ops — ragged tenant queues pad with them.
+    Falls back to a vmapped jnp update for tables past the VMEM budget.
+    """
+    if weights is None:
+        weights = jnp.ones(keys.shape, jnp.float32)
+    if not fits_vmem(spec):
+        rngs = jax.random.split(rng, tables.shape[0])
+
+        def one(table, k, w, r):
+            s = sk.Sketch(table=table, spec=spec)
+            return sk.update_batched(s, k, r, weights=w).table
+        return jax.vmap(one)(tables, keys, weights, rngs)
+    sorted_keys, mult = jax.vmap(sk.dedup_weighted)(keys, weights)
+    uniforms = jax.random.uniform(rng, sorted_keys.shape)
+    return fused_update_pallas(tables, sorted_keys, mult, uniforms,
+                               seeds=_seeds_tuple(spec), width=spec.width,
+                               counter=spec.counter, interpret=_interpret())

@@ -59,27 +59,33 @@ def _query_kernel(table_ref, keys_ref, out_ref, *, seeds, width, counter):
     out_ref[...] = counter.decode(cmin)
 
 
-def _update_kernel(table_ref, keys_ref, mult_ref, unif_ref, out_ref, *,
-                   seeds, width, counter):
-    keys = keys_ref[...].astype(jnp.uint32)
-    mult = mult_ref[...]
-    unif = unif_ref[...]
-    # Pass 1: gather current states, take the row-min (conservative floor).
+def _fused_update_kernel(tables_ref, keys_ref, mult_ref, unif_ref, out_ref, *,
+                         seeds, width, counter):
+    """One (tenant, key-chunk) grid step of the multi-tenant ingest.
+
+    Blocks: tables/out (1, d, w) — tenant t's table, VMEM-resident across
+    that tenant's chunk sweep; keys/mult/unif (1, 8, 128) key tiles.  The
+    grid's last axis (chunks) varies fastest, so for a fixed tenant the
+    aliased output block stays resident and each chunk sees the previous
+    chunk's conservative writes — the same sequential-grid contract as
+    `_update_kernel`, now amortized over T tenants in ONE launch.
+    """
+    keys = keys_ref[0].astype(jnp.uint32)                # (8, 128)
+    mult = mult_ref[0]
+    unif = unif_ref[0]
     all_cols = []
     cmin = None
     for k, seed in enumerate(seeds):
         cols = (_mix32(keys ^ jnp.uint32(seed)) % jnp.uint32(width)).astype(jnp.int32)
         all_cols.append(cols.reshape(-1))
-        row = out_ref[k, :]  # read the aliased output: sees prior chunks
+        row = out_ref[0, k, :]  # aliased output: sees this tenant's prior chunks
         vals = row[cols.reshape(-1)].reshape(cols.shape)
         cmin = vals if cmin is None else jnp.minimum(cmin, vals)
-    # Fused n-fold Morris increment (paper Alg. 1 generalized to n events).
     new_state = counter.nfold(cmin, mult, unif)
     write = jnp.where(mult > 0, new_state, jnp.zeros_like(new_state)).reshape(-1)
-    # Pass 2: conservative write — raise every hashed cell to >= new state.
     for k in range(len(seeds)):
-        row = out_ref[k, :]
-        out_ref[k, :] = row.at[all_cols[k]].max(write)
+        row = out_ref[0, k, :]
+        out_ref[0, k, :] = row.at[all_cols[k]].max(write)
 
 
 def _pad_tiles(x, pad_value):
@@ -119,23 +125,52 @@ def update_pallas(table, keys, mult, uniforms, *, seeds: tuple, width: int,
 
     table (d, w); keys/mult/uniforms (N,).  Returns the new table (the input
     buffer is donated via input_output_aliases — in-place on device).
+    The single-tenant case IS the fused kernel at T=1 (one source of truth
+    for the conservative-update logic)."""
+    return fused_update_pallas(table[None], keys[None], mult[None],
+                               uniforms[None], seeds=seeds, width=width,
+                               counter=counter, interpret=interpret)[0]
+
+
+def _pad_tiles_2d(x, pad_value):
+    """Pad (T, N) per-tenant streams to a CHUNK multiple and tile each
+    tenant's row to (rows, 128): returns (T, rows, 128) with rows % 8 == 0."""
+    t, n = x.shape
+    padded = CHUNK * max(1, math.ceil(n / CHUNK))
+    x = jnp.pad(x, ((0, 0), (0, padded - n)), constant_values=pad_value)
+    return x.reshape(t, padded // LANES, LANES), padded
+
+
+@functools.partial(jax.jit, static_argnames=("width", "counter", "seeds", "interpret"))
+def fused_update_pallas(tables, keys, mult, uniforms, *, seeds: tuple,
+                        width: int, counter: CounterSpec,
+                        interpret: bool = True):
+    """Multi-tenant batched conservative update in ONE kernel launch.
+
+    tables (T, d, w): stacked per-tenant sketch tables (identical spec);
+    keys/mult/uniforms (T, N): each tenant's pre-deduplicated microbatch
+    (entries with mult == 0 are no-ops, which is how ragged queues pad).
+    Grids over (tenant, key-chunk) with tenant t's (d, w) table the
+    VMEM-resident block, so T tenants cost one launch instead of T.
+    Returns the new (T, d, w) tables (input buffer donated/aliased).
     """
-    d = table.shape[0]
-    key_t, padded = _pad_tiles(keys.astype(jnp.uint32), 0)
-    mult_t, _ = _pad_tiles(mult.astype(jnp.float32), 0.0)
-    unif_t, _ = _pad_tiles(uniforms.astype(jnp.float32), 1.0)
-    grid = padded // CHUNK
+    t, d, _ = tables.shape
+    key_t, padded = _pad_tiles_2d(keys.astype(jnp.uint32), 0)
+    mult_t, _ = _pad_tiles_2d(mult.astype(jnp.float32), 0.0)
+    unif_t, _ = _pad_tiles_2d(uniforms.astype(jnp.float32), 1.0)
+    chunks = padded // CHUNK
     return pl.pallas_call(
-        functools.partial(_update_kernel, seeds=seeds, width=width, counter=counter),
-        grid=(grid,),
+        functools.partial(_fused_update_kernel, seeds=seeds, width=width,
+                          counter=counter),
+        grid=(t, chunks),
         in_specs=[
-            pl.BlockSpec((d, width), lambda i: (0, 0)),
-            pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, d, width), lambda ti, ci: (ti, 0, 0)),
+            pl.BlockSpec((1, SUBLANES, LANES), lambda ti, ci: (ti, ci, 0)),
+            pl.BlockSpec((1, SUBLANES, LANES), lambda ti, ci: (ti, ci, 0)),
+            pl.BlockSpec((1, SUBLANES, LANES), lambda ti, ci: (ti, ci, 0)),
         ],
-        out_specs=pl.BlockSpec((d, width), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct(table.shape, table.dtype),
+        out_specs=pl.BlockSpec((1, d, width), lambda ti, ci: (ti, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(tables.shape, tables.dtype),
         input_output_aliases={0: 0},
         interpret=interpret,
-    )(table, key_t, mult_t, unif_t)
+    )(tables, key_t, mult_t, unif_t)

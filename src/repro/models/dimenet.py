@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import shard_map
 from repro.models.layers import dense
 from repro.models.params import P
 from repro.sharding import constrain
@@ -293,8 +294,8 @@ def loss_fn_sharded(params, batch, cfg: DimeNetConfig, rules, mesh):
         loss, metrics = loss_fn(p, b, cfg, psum_axes=mesh.axis_names)
         return loss
 
-    loss = jax.shard_map(body, mesh=mesh, in_specs=(p_specs, b_specs),
-                         out_specs=PS(), check_vma=False)(params, batch)
+    loss = shard_map(body, mesh=mesh, in_specs=(p_specs, b_specs),
+                     out_specs=PS(), check_vma=False)(params, batch)
     return loss, {}
 
 

@@ -21,6 +21,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.models import attention as attn
 from repro.models.layers import (dense, embedding_bag, layer_norm)
 from repro.models.params import P
@@ -154,8 +155,8 @@ def dlrm_lookup_a2a(tables, sparse, c: DLRMConfig, rules, mesh) -> jnp.ndarray:
             outs.append(send_back(rows, routing, "model"))
         return jnp.stack(outs, axis=1)
 
-    return jax.shard_map(body, mesh=mesh, in_specs=(t_specs, ids_spec),
-                         out_specs=out_spec, check_vma=False)(tables, sparse)
+    return shard_map(body, mesh=mesh, in_specs=(t_specs, ids_spec),
+                     out_specs=out_spec, check_vma=False)(tables, sparse)
 
 
 def dlrm_apply_from_emb(params, dense, embs, c: DLRMConfig):
@@ -267,10 +268,10 @@ def dlrm_sparse_update_sharded(tables, accs, sparse_ids, g_emb, c: DLRMConfig,
             new_a[key] = {"acc": acc}
         return new_t, new_a
 
-    return jax.shard_map(body, mesh=mesh,
-                         in_specs=(t_specs, a_specs, ids_spec, g_spec),
-                         out_specs=(t_specs, a_specs),
-                         check_vma=False)(tables, accs, sparse_ids, g_emb)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(t_specs, a_specs, ids_spec, g_spec),
+                     out_specs=(t_specs, a_specs),
+                     check_vma=False)(tables, accs, sparse_ids, g_emb)
 
 
 def dlrm_train_step_sparse(params, opt_state, batch, opt_step, seed,

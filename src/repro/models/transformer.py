@@ -21,6 +21,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.models import attention as attn
 from repro.models import moe as moe_lib
 from repro.models.layers import (cross_entropy, dense, embed_lookup,
@@ -227,8 +228,8 @@ def _moe_shardmap(params, h, cfg: LMConfig):
                                        mean_axes=mesh.axis_names)
         return y.reshape(h_loc.shape), aux
 
-    return jax.shard_map(body, mesh=mesh, in_specs=(p_specs, h_spec),
-                         out_specs=(h_spec, PS()), check_vma=False)(params, h)
+    return shard_map(body, mesh=mesh, in_specs=(p_specs, h_spec),
+                     out_specs=(h_spec, PS()), check_vma=False)(params, h)
 
 
 def _group_fwd(block, x, positions, cfg: LMConfig, caches=None,

@@ -1,0 +1,20 @@
+"""Streaming counting plane: time-scoped sketches + multi-tenant serving.
+
+  * `window`  — ring of B bucket sketches (sliding-window counts) and an
+    exponential-decay variant (recency-weighted counts), both built from
+    the paper's CML counters without changing their semantics.
+  * `service` — multi-tenant registry whose tables are stacked into one
+    (T, d, w) array and ingested by a single fused Pallas kernel launch.
+"""
+from repro.stream.window import (DecayedSketch, WindowSpec, WindowedSketch,
+                                 decay, decayed_init, decayed_update,
+                                 window_init, window_query, window_rotate,
+                                 window_update)
+from repro.stream.service import CountService
+
+__all__ = [
+    "WindowSpec", "WindowedSketch", "window_init", "window_update",
+    "window_rotate", "window_query",
+    "DecayedSketch", "decay", "decayed_init", "decayed_update",
+    "CountService",
+]

@@ -1,0 +1,186 @@
+"""Multi-tenant counting service: one fused kernel launch for T tenants.
+
+A production counting plane serves many *logical* sketches — one per
+product surface, per model, per experiment arm.  Launching one update
+kernel per tenant wastes the accelerator on dispatch overhead (the tables
+are KBs-to-MBs; the launch is the cost).  `CountService` therefore:
+
+  * registers named tenants that share one `SketchSpec` and stacks their
+    tables along a leading axis into a single (T, d, w) device array;
+  * buffers incoming events per tenant in a fixed-capacity host-side
+    microbatch queue (`enqueue`), flushing automatically when a tenant's
+    queue fills;
+  * on `flush`, dedups every tenant's pending events (vmapped) and lands
+    ALL tenants' updates with ONE `fused_update_pallas` launch — the grid
+    walks (tenant, key-chunk) with the per-tenant table VMEM-resident and
+    the table buffer input/output aliased (see kernels/sketch.py);
+  * snapshots/restores the whole plane (tables + queues + RNG lane) via
+    `train/checkpoint`, with tenant names and spec recorded in the
+    manifest metadata so a restored service rebuilds its registry.
+
+Queries are read-your-writes: they flush pending events first.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch as sk
+from repro.core.counters import CounterSpec
+from repro.core.sketch import Sketch, SketchSpec
+from repro.kernels import ops
+from repro.train import checkpoint
+
+
+class CountService:
+    """Registry of named sketches with fused microbatch ingest."""
+
+    def __init__(self, spec: SketchSpec, tenants: Sequence[str] = (),
+                 queue_capacity: int = 4096, seed: int = 0):
+        if queue_capacity < 1:
+            raise ValueError("queue_capacity must be positive")
+        self.spec = spec
+        self.queue_capacity = int(queue_capacity)
+        self._index: dict[str, int] = {}
+        self.tables = jnp.zeros((0, spec.depth, spec.width),
+                                spec.counter.dtype)
+        self._queue = np.zeros((0, self.queue_capacity), np.uint32)
+        self._fill = np.zeros((0,), np.int64)
+        self._rng = jax.random.PRNGKey(seed)
+        self.stats = {"events": 0, "flushes": 0}
+        for name in tenants:
+            self.add_tenant(name)
+
+    # ---- registry ----
+
+    @property
+    def tenants(self) -> list[str]:
+        return sorted(self._index, key=self._index.get)
+
+    def add_tenant(self, name: str) -> int:
+        """Register a tenant; returns its row in the stacked table.
+
+        Growing T reshapes the stacked array, so the next flush recompiles
+        the fused kernel for the new tenant count (amortized: tenant churn
+        is rare next to ingest).
+        """
+        if name in self._index:
+            raise ValueError(f"tenant {name!r} already registered")
+        t = len(self._index)
+        self._index[name] = t
+        zero = jnp.zeros((1, self.spec.depth, self.spec.width),
+                         self.spec.counter.dtype)
+        self.tables = jnp.concatenate([self.tables, zero], axis=0)
+        self._queue = np.concatenate(
+            [self._queue, np.zeros((1, self.queue_capacity), np.uint32)])
+        self._fill = np.concatenate([self._fill, np.zeros((1,), np.int64)])
+        return t
+
+    def _row(self, name: str) -> int:
+        if name not in self._index:
+            raise KeyError(f"unknown tenant {name!r}; have {self.tenants}")
+        return self._index[name]
+
+    def sketch_of(self, name: str) -> Sketch:
+        """Flushed view of one tenant's sketch (shares the table slice)."""
+        self.flush()
+        return Sketch(table=self.tables[self._row(name)], spec=self.spec)
+
+    # ---- ingest ----
+
+    def enqueue(self, name: str, keys) -> None:
+        """Buffer events for a tenant; auto-flushes on queue pressure."""
+        t = self._row(name)
+        keys = np.asarray(keys, np.uint32).ravel()
+        self.stats["events"] += keys.size
+        cap = self.queue_capacity
+        while keys.size:
+            free = cap - self._fill[t]
+            if free == 0:
+                self.flush()
+                free = cap
+            take = min(free, keys.size)
+            self._queue[t, self._fill[t]:self._fill[t] + take] = keys[:take]
+            self._fill[t] += take
+            keys = keys[take:]
+
+    def flush(self) -> int:
+        """Land every tenant's pending events in one fused launch.
+
+        Returns the number of events ingested.  Stale queue slots (beyond
+        each tenant's fill) ride along with weight 0 — no-ops in the
+        kernel — which keeps the launch statically shaped.
+        """
+        pending = int(self._fill.sum())
+        if pending == 0:
+            return 0
+        self._rng, r = jax.random.split(self._rng)
+        weights = (np.arange(self.queue_capacity)[None, :]
+                   < self._fill[:, None]).astype(np.float32)
+        self.tables = ops.update_many(self.tables, self.spec,
+                                      jnp.asarray(self._queue), r,
+                                      weights=jnp.asarray(weights))
+        self._fill[:] = 0
+        self.stats["flushes"] += 1
+        return pending
+
+    # ---- serving ----
+
+    def query(self, name: str, keys) -> jnp.ndarray:
+        """Estimated counts for one tenant (flushes first: read-your-writes)."""
+        self.flush()
+        t = self._row(name)
+        return ops.query(Sketch(table=self.tables[t], spec=self.spec),
+                         jnp.asarray(np.asarray(keys, np.uint32)))
+
+    # ---- persistence ----
+
+    def _meta(self) -> dict:
+        c = self.spec.counter
+        return {
+            "tenants": self.tenants,
+            "queue_capacity": self.queue_capacity,
+            "spec": {"width": self.spec.width, "depth": self.spec.depth,
+                     "seed": self.spec.seed,
+                     "counter": {"kind": c.kind, "base": c.base,
+                                 "bits": c.bits}},
+        }
+
+    def snapshot(self, root: str, step: int) -> str:
+        """Atomic checkpoint of the whole plane (pending events included)."""
+        tree = {"tables": self.tables,
+                "queue": jnp.asarray(self._queue),
+                "fill": jnp.asarray(self._fill),
+                "rng": self._rng}
+        return checkpoint.save(root, step, tree, metadata=self._meta())
+
+    @classmethod
+    def restore(cls, root: str, step: Optional[int] = None) -> "CountService":
+        """Rebuild a service (registry + tables + queues) from a snapshot."""
+        if step is None:
+            step = checkpoint.latest_step(root)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint under {root}")
+        with open(os.path.join(root, f"step_{step:08d}", "manifest.json")) as f:
+            meta = json.load(f)["metadata"]
+        spec = SketchSpec(width=meta["spec"]["width"],
+                          depth=meta["spec"]["depth"],
+                          seed=meta["spec"]["seed"],
+                          counter=CounterSpec(**meta["spec"]["counter"]))
+        svc = cls(spec, tenants=meta["tenants"],
+                  queue_capacity=meta["queue_capacity"])
+        target = {"tables": svc.tables,
+                  "queue": jnp.asarray(svc._queue),
+                  "fill": jnp.asarray(svc._fill),
+                  "rng": svc._rng}
+        tree, _ = checkpoint.restore(root, target, step=step)
+        svc.tables = tree["tables"]
+        svc._queue = np.asarray(tree["queue"], np.uint32)
+        svc._fill = np.asarray(tree["fill"], np.int64)
+        svc._rng = jnp.asarray(tree["rng"], jnp.uint32)
+        return svc

@@ -1,0 +1,187 @@
+"""Time-scoped sketches: sliding-window bucket ring + exponential decay.
+
+Production counting questions are almost always time-scoped ("how often in
+the last hour"), while the paper's sketch counts since boot.  Two standard
+constructions, both reusing the CML counter semantics unchanged:
+
+  * WindowedSketch — a ring of B bucket `Sketch`es.  The active bucket
+    absorbs updates; `window_rotate` advances the ring and zeroes the
+    oldest bucket, so bucket b holds exactly the events of one rotation
+    interval.  A window query over the last k buckets combines per-bucket
+    estimates:
+
+      - mode="sum" (default): query each bucket (min over rows, decode)
+        and sum the estimates.  Buckets see disjoint time slices, so the
+        sum is the union-count estimator — per-bucket min-then-sum is
+        tighter than merging tables cell-wise and querying once.
+      - mode="max": elementwise max of per-bucket estimates — the
+        conservative mergeable lower bound (matches `sketch.merge` "max"
+        semantics; what a pmax over shards preserves).
+
+  * DecayedSketch — one sketch whose *estimates* decay geometrically: each
+    `decayed_update` first scales the whole table by gamma in estimate
+    space (decode -> gamma * value -> stochastic re-encode via
+    `encode_floor`/`point_mass`), then applies a normal conservative
+    update.  The stochastic rounding keeps the log-counter estimator
+    unbiased: E[decode(decay(c))] == gamma * decode(c) exactly.
+
+Both are pytrees (tables + cursor leaves, spec static), so they jit,
+checkpoint via train/checkpoint, and pmax-merge via core/sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch as sk
+from repro.core.sketch import Sketch, SketchSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowSpec:
+    """Static geometry of a bucket ring: B buckets of one SketchSpec."""
+
+    sketch: SketchSpec
+    buckets: int = 8
+
+    def __post_init__(self):
+        if self.buckets < 1:
+            raise ValueError("need at least one bucket")
+
+    @property
+    def memory_bytes(self) -> int:
+        return self.buckets * self.sketch.memory_bytes
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class WindowedSketch:
+    tables: jnp.ndarray  # (B, d, w) bucket counter states
+    cursor: jnp.ndarray  # () int32: index of the active (newest) bucket
+    spec: WindowSpec     # static
+
+    def tree_flatten(self):
+        return (self.tables, self.cursor), self.spec
+
+    @classmethod
+    def tree_unflatten(cls, spec, leaves):
+        return cls(tables=leaves[0], cursor=leaves[1], spec=spec)
+
+    def bucket(self, b) -> Sketch:
+        """View bucket b as a plain Sketch (shares the table slice)."""
+        return Sketch(table=self.tables[b], spec=self.spec.sketch)
+
+
+def window_init(spec: WindowSpec) -> WindowedSketch:
+    s = spec.sketch
+    tables = jnp.zeros((spec.buckets, s.depth, s.width), s.counter.dtype)
+    return WindowedSketch(tables=tables, cursor=jnp.zeros((), jnp.int32),
+                          spec=spec)
+
+
+def window_update(win: WindowedSketch, keys: jnp.ndarray, rng: jax.Array,
+                  weights: jnp.ndarray | None = None) -> WindowedSketch:
+    """Conservative-update the active bucket (jit/scan friendly)."""
+    active = jax.lax.dynamic_index_in_dim(win.tables, win.cursor, 0,
+                                          keepdims=False)
+    s = sk.update_batched(Sketch(table=active, spec=win.spec.sketch), keys,
+                          rng, weights=weights)
+    tables = jax.lax.dynamic_update_index_in_dim(win.tables, s.table,
+                                                 win.cursor, 0)
+    return WindowedSketch(tables=tables, cursor=win.cursor, spec=win.spec)
+
+
+def window_rotate(win: WindowedSketch) -> WindowedSketch:
+    """Advance the ring one interval: the oldest bucket becomes the new
+    (zeroed) active bucket.  Call on a fixed wall-clock cadence."""
+    nxt = (win.cursor + 1) % win.spec.buckets
+    zero = jnp.zeros(win.tables.shape[1:], win.tables.dtype)
+    tables = jax.lax.dynamic_update_index_in_dim(win.tables, zero, nxt, 0)
+    return WindowedSketch(tables=tables, cursor=nxt, spec=win.spec)
+
+
+def _bucket_ages(win: WindowedSketch) -> jnp.ndarray:
+    """(B,) rotations since each bucket was active (0 = current bucket)."""
+    b = win.spec.buckets
+    return (win.cursor - jnp.arange(b, dtype=jnp.int32)) % b
+
+
+def window_query(win: WindowedSketch, keys: jnp.ndarray,
+                 n_buckets: int | None = None, mode: str = "sum"
+                 ) -> jnp.ndarray:
+    """Estimate event counts over the last `n_buckets` rotation intervals.
+
+    n_buckets defaults to the whole ring (B intervals).  Buckets older than
+    the window contribute nothing.  Returns float32 (N,).
+    """
+    b = win.spec.buckets
+    k = b if n_buckets is None else n_buckets
+    if not 1 <= k <= b:
+        raise ValueError(f"window of {k} buckets outside ring of {b}")
+    spec = win.spec.sketch
+
+    def one(table):
+        return sk.query(Sketch(table=table, spec=spec), keys)
+
+    per_bucket = jax.vmap(one)(win.tables)                    # (B, N)
+    live = (_bucket_ages(win) < k)[:, None]                   # (B, 1)
+    per_bucket = jnp.where(live, per_bucket, 0.0)
+    if mode == "sum":
+        return per_bucket.sum(axis=0)
+    if mode == "max":
+        return per_bucket.max(axis=0)
+    raise ValueError(f"unknown window query mode {mode!r}")
+
+
+# --------------------------------------------------------------------------
+# exponential decay in estimate space
+# --------------------------------------------------------------------------
+
+def decay(sketch: Sketch, gamma: float, rng: jax.Array) -> Sketch:
+    """Scale every cell's *estimate* by gamma with stochastic re-encode.
+
+    decode -> gamma * value -> `CounterSpec.reencode_stochastic`, the same
+    mechanism as `merge(mode="estimate_sum")`, so the log-counter stays
+    unbiased: E[decode(new)] == gamma * decode(old) cell-for-cell.
+    """
+    if not 0.0 < gamma <= 1.0:
+        raise ValueError("gamma must be in (0, 1]")
+    c = sketch.spec.counter
+    v = c.decode(sketch.table) * jnp.float32(gamma)
+    table = c.reencode_stochastic(v, rng).astype(sketch.table.dtype)
+    return Sketch(table=table, spec=sketch.spec)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DecayedSketch:
+    """Sketch whose counts are recency-weighted: each batch's events carry
+    weight gamma^age_in_batches.  Not conservative-monotone (cells go down
+    by design); queries answer "decayed count", e.g. for trending scores."""
+
+    sketch: Sketch
+    gamma: float  # static
+
+    def tree_flatten(self):
+        return (self.sketch,), self.gamma
+
+    @classmethod
+    def tree_unflatten(cls, gamma, leaves):
+        return cls(sketch=leaves[0], gamma=gamma)
+
+
+def decayed_init(spec: SketchSpec, gamma: float = 0.98) -> DecayedSketch:
+    if not 0.0 < gamma <= 1.0:
+        raise ValueError("gamma must be in (0, 1]")
+    return DecayedSketch(sketch=sk.init(spec), gamma=gamma)
+
+
+def decayed_update(ds: DecayedSketch, keys: jnp.ndarray, rng: jax.Array,
+                   weights: jnp.ndarray | None = None) -> DecayedSketch:
+    """Decay the table one step, then absorb the batch."""
+    r_decay, r_upd = jax.random.split(rng)
+    s = decay(ds.sketch, ds.gamma, r_decay)
+    s = sk.update_batched(s, keys, r_upd, weights=weights)
+    return DecayedSketch(sketch=s, gamma=ds.gamma)

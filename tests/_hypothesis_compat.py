@@ -1,0 +1,70 @@
+"""Optional-`hypothesis` shim for the property-based tests.
+
+When `hypothesis` is installed the real library is re-exported unchanged.
+When it is absent (the CI image pins only jax/pytest) the property tests
+still run against a fixed-seed sampler: each `@given` test is executed
+`max_examples` times with arguments drawn from a deterministic PRNG, so
+tier-1 keeps exercising the same invariants, just without shrinking or
+adaptive example search.
+
+Only the strategy surface this repo uses is implemented: `integers`,
+`floats`, `lists`, `sampled_from`.
+"""
+from __future__ import annotations
+
+import random
+
+try:  # pragma: no cover - exercised implicitly when hypothesis is present
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _SEED = 0xC0FFEE
+
+    class _Strategies:
+        """Fixed-seed stand-ins: a strategy is `draw(rnd) -> value`."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return lambda rnd: rnd.randint(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return lambda rnd: rnd.uniform(min_value, max_value)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rnd):
+                n = rnd.randint(min_size, max_size)
+                return [elements(rnd) for _ in range(n)]
+            return draw
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return lambda rnd: rnd.choice(seq)
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # NB: zero-arg wrapper, and no functools.wraps — copying
+            # __wrapped__ would make pytest read the inner signature and
+            # look for fixtures named like the drawn parameters.
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", 20)
+                for i in range(n):
+                    rnd = random.Random(_SEED ^ (i * 0x9E37_79B1))
+                    fn(*(s(rnd) for s in strategies))
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._max_examples = 20
+            return wrapper
+        return deco

@@ -60,7 +60,7 @@ def test_key_routed_sketch_multidevice():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, PartitionSpec as P
-        from jax import shard_map
+        from repro.compat import shard_map
         from repro.core import SketchSpec, CMLS16, init
         from repro.core import sketch as sk, sharded
 
@@ -107,7 +107,7 @@ def test_lazy_pmax_merge_multidevice():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        from repro.compat import shard_map
         from repro.core import SketchSpec, CMS32, init
         from repro.core import sketch as sk, sharded
 
@@ -143,7 +143,7 @@ def test_compressed_allreduce_multidevice():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        from repro.compat import shard_map
         from repro.train.compression import compressed_allreduce_mean
 
         mesh = jax.make_mesh((8,), ("data",))

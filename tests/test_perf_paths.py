@@ -83,6 +83,7 @@ def test_routing_roundtrip_multidevice():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.routing import route, send_back
         mesh = jax.make_mesh((8,), ("x",))
         def body(vals, dest):
@@ -92,8 +93,8 @@ def test_routing_roundtrip_multidevice():
         vals = jnp.arange(8 * 32, dtype=jnp.float32).reshape(8, 32)
         dest = jnp.asarray(np.random.default_rng(0).integers(0, 8, (8, 32)),
                            jnp.int32)
-        got = jax.shard_map(body, mesh=mesh, in_specs=(P("x"), P("x")),
-                            out_specs=P("x"), check_vma=False)(vals, dest)
+        got = shard_map(body, mesh=mesh, in_specs=(P("x"), P("x")),
+                        out_specs=P("x"), check_vma=False)(vals, dest)
         # every row comes back +100 (capacity ample -> nothing dropped)
         assert jnp.allclose(got, vals + 100.0), (got - vals)
         print("roundtrip ok")
@@ -106,6 +107,7 @@ def test_moe_a2a_matches_dense_multidevice():
     out = _run("""
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.models import moe as M
         from repro.models.params import init_tree
         mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -122,10 +124,10 @@ def test_moe_a2a_matches_dense_multidevice():
         def body(p_loc, x_loc):
             return M.moe_apply_a2a(p_loc, x_loc, cfg, axis_name="model",
                                    mean_axes=("data", "model"))
-        y2, _ = jax.shard_map(body, mesh=mesh,
-                              in_specs=(p_specs, P("data", None)),
-                              out_specs=(P("data", None), P()),
-                              check_vma=False)(params, x)
+        y2, _ = shard_map(body, mesh=mesh,
+                          in_specs=(p_specs, P("data", None)),
+                          out_specs=(P("data", None), P()),
+                          check_vma=False)(params, x)
         err = float(jnp.abs(y_ref - y2).max())
         assert err < 1e-5, err
         print("moe ok", err)

@@ -1,0 +1,200 @@
+"""Multi-tenant CountService + fused ingest kernel vs per-tenant oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CMLS8, CMLS16, CMS32, SketchSpec, init
+from repro.core import sketch as sk
+from repro.core.hashing import make_row_seeds
+from repro.kernels import ops, ref
+from repro.kernels.sketch import fused_update_pallas, update_pallas
+from repro.stream import CountService
+
+COUNTERS = {"cms32": CMS32, "cmls16": CMLS16, "cmls8": CMLS8}
+
+
+def _zipf(n, vocab, seed=0):
+    return (np.random.default_rng(seed).zipf(1.3, n) % vocab).astype(np.uint32)
+
+
+def _tenant_inputs(spec, t, n, seed=0):
+    keys = jnp.asarray(np.stack([_zipf(n, 700, seed=seed + i)
+                                 for i in range(t)]))
+    sorted_keys, mult = jax.vmap(sk.dedup_weighted)(
+        keys, jnp.ones(keys.shape, jnp.float32))
+    unif = jax.random.uniform(jax.random.PRNGKey(seed), sorted_keys.shape)
+    tables = jnp.stack([init(spec).table] * t)
+    return tables, sorted_keys, mult, unif
+
+
+# --------------------------------------------------------------------------
+# fused kernel vs oracles
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("counter_name", list(COUNTERS))
+@pytest.mark.parametrize("t,width,depth,n", [
+    (1, 128, 2, 700), (3, 512, 3, 1000), (8, 1024, 2, 2500), (5, 2048, 4, 900),
+])
+def test_fused_kernel_matches_per_tenant_kernel(counter_name, t, width,
+                                                depth, n):
+    """One fused launch must be bit-identical to T single-tenant launches."""
+    counter = COUNTERS[counter_name]
+    spec = SketchSpec(width=width, depth=depth, counter=counter)
+    tables, keys, mult, unif = _tenant_inputs(spec, t, n, seed=width + t)
+    seeds = tuple(int(x) for x in make_row_seeds(spec.seed, depth))
+    got = fused_update_pallas(tables, keys, mult, unif, seeds=seeds,
+                              width=width, counter=counter, interpret=True)
+    want = jnp.stack([
+        update_pallas(tables[i], keys[i], mult[i], unif[i], seeds=seeds,
+                      width=width, counter=counter, interpret=True)
+        for i in range(t)])
+    assert got.dtype == tables.dtype
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_kernel_matches_jnp_ref():
+    spec = SketchSpec(width=512, depth=3, counter=CMLS16)
+    tables, keys, mult, unif = _tenant_inputs(spec, 4, 1500, seed=9)
+    seeds = make_row_seeds(spec.seed, spec.depth)
+    got = fused_update_pallas(tables, keys, mult, unif,
+                              seeds=tuple(int(x) for x in seeds),
+                              width=spec.width, counter=spec.counter,
+                              interpret=True)
+    want = jnp.stack([ref.update_ref(tables[i], keys[i], mult[i], unif[i],
+                                     seeds, spec.counter) for i in range(4)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_update_many_counts_and_isolation():
+    """ops.update_many: per-tenant accuracy and strict tenant isolation."""
+    spec = SketchSpec(width=4096, depth=4, counter=CMLS16)
+    t = 4
+    keys = jnp.asarray(np.stack(
+        [_zipf(3000, 500, seed=i) + i * 10_000 for i in range(t)]))
+    tables = jnp.stack([init(spec).table] * t)
+    tables = ops.update_many(tables, spec, keys, jax.random.PRNGKey(0))
+    for i in range(t):
+        uniq, true = np.unique(np.asarray(keys[i]), return_counts=True)
+        est = np.asarray(sk.query(sk.Sketch(table=tables[i], spec=spec),
+                                  jnp.asarray(uniq)))
+        are = np.mean(np.abs(est - true) / true)
+        assert are < 0.35, f"tenant {i} ARE={are}"
+        # other tenants' key ranges stay empty in this tenant's table
+        foreign = jnp.asarray(np.arange(20, dtype=np.uint32) +
+                              ((i + 1) % t) * 10_000)
+        est_f = np.asarray(sk.query(sk.Sketch(table=tables[i], spec=spec),
+                                    foreign))
+        assert (est_f <= 1.0).all()
+
+
+def test_update_many_falls_back_past_vmem():
+    """Past the VMEM budget update_many routes through the vmapped core
+    update; counts must still land per tenant."""
+    spec = SketchSpec.from_memory(64 << 20, depth=2, counter=CMS32)
+    assert not ops.fits_vmem(spec)
+    keys = jnp.asarray(np.stack([np.full(64, 5, np.uint32),
+                                 np.full(64, 9, np.uint32)]))
+    tables = jnp.stack([init(spec).table] * 2)
+    out = ops.update_many(tables, spec, keys, jax.random.PRNGKey(0))
+    est0 = float(sk.query(sk.Sketch(table=out[0], spec=spec),
+                          jnp.asarray([5], jnp.uint32))[0])
+    est1 = float(sk.query(sk.Sketch(table=out[1], spec=spec),
+                          jnp.asarray([9], jnp.uint32))[0])
+    assert est0 == 64.0 and est1 == 64.0
+
+
+def test_update_many_weighted_zero_is_noop():
+    spec = SketchSpec(width=512, depth=2, counter=CMLS16)
+    tables = jnp.stack([init(spec).table] * 2)
+    keys = jnp.asarray(np.stack([_zipf(256, 50, seed=1),
+                                 _zipf(256, 50, seed=2)]))
+    weights = jnp.stack([jnp.ones((256,)), jnp.zeros((256,))])
+    out = ops.update_many(tables, spec, keys, jax.random.PRNGKey(0),
+                          weights=weights)
+    assert (np.asarray(out[0]) > 0).any()
+    assert (np.asarray(out[1]) == 0).all()
+
+
+# --------------------------------------------------------------------------
+# CountService
+# --------------------------------------------------------------------------
+
+def _service(cap=1024, tenants=("ads", "search")):
+    spec = SketchSpec(width=2048, depth=3, counter=CMLS16)
+    return CountService(spec, tenants=tenants, queue_capacity=cap)
+
+
+def test_service_counts_track_truth_per_tenant():
+    svc = _service()
+    streams = {"ads": _zipf(6000, 400, seed=1),
+               "search": _zipf(2000, 400, seed=2) + 50_000}
+    for name, keys in streams.items():
+        for i in range(0, len(keys), 1500):  # several microbatches
+            svc.enqueue(name, keys[i:i + 1500])
+    for name, keys in streams.items():
+        uniq, true = np.unique(keys, return_counts=True)
+        est = np.asarray(svc.query(name, uniq))
+        are = np.mean(np.abs(est - true) / true)
+        assert are < 0.35, f"{name} ARE={are}"
+
+
+def test_service_read_your_writes_and_autoflush():
+    svc = _service(cap=256)
+    svc.enqueue("ads", np.full(100, 42, np.uint32))
+    # query flushes the 100 pending events before answering
+    assert float(svc.query("ads", [42])[0]) > 50
+    # enqueue beyond capacity forces intermediate flushes, loses nothing
+    svc.enqueue("ads", np.full(1000, 42, np.uint32))
+    est = float(svc.query("ads", [42])[0])
+    assert abs(est - 1100) / 1100 < 0.25
+    assert svc.stats["flushes"] >= 2
+    assert svc.stats["events"] == 1100
+
+
+def test_service_registry_validation():
+    svc = _service()
+    with pytest.raises(ValueError):
+        svc.add_tenant("ads")
+    with pytest.raises(KeyError):
+        svc.query("nope", [1])
+    with pytest.raises(ValueError):
+        CountService(svc.spec, queue_capacity=0)
+    assert svc.tenants == ["ads", "search"]
+
+
+def test_service_add_tenant_after_traffic():
+    svc = _service()
+    svc.enqueue("ads", _zipf(500, 100, seed=3))
+    svc.add_tenant("feed")
+    svc.enqueue("feed", np.full(64, 9, np.uint32))
+    assert float(svc.query("feed", [9])[0]) >= 32
+    assert svc.tenants == ["ads", "search", "feed"]
+    # pre-existing tenant unaffected by the re-stack
+    assert float(np.asarray(svc.query("ads", np.arange(100))).sum()) > 0
+
+
+def test_service_snapshot_restore_roundtrip(tmp_path):
+    svc = _service()
+    svc.enqueue("ads", _zipf(2000, 300, seed=5))
+    svc.enqueue("search", _zipf(500, 300, seed=6) + 7_000)
+    q_before = np.asarray(svc.query("ads", np.arange(64)))
+    # leave un-flushed residue in the queue to prove it survives
+    svc.enqueue("search", np.full(37, 123_456, np.uint32))
+    svc.snapshot(str(tmp_path), step=7)
+
+    svc2 = CountService.restore(str(tmp_path))
+    assert svc2.tenants == svc.tenants
+    assert svc2.spec == svc.spec
+    q_after = np.asarray(svc2.query("ads", np.arange(64)))
+    np.testing.assert_array_equal(q_before, q_after)
+    # the 37 queued events were persisted and replay on flush
+    assert float(svc2.query("search", [123_456])[0]) >= 18
+
+
+def test_service_sketch_of_view():
+    svc = _service()
+    svc.enqueue("ads", np.full(200, 5, np.uint32))
+    s = svc.sketch_of("ads")
+    assert isinstance(s, sk.Sketch)
+    assert float(sk.query(s, jnp.asarray([5], jnp.uint32))[0]) > 100

@@ -1,0 +1,62 @@
+"""Heavy-hitter buffer: eviction, re-entry, and estimate refresh."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CMS32, SketchSpec
+from repro.core import sketch as sk
+from repro.core import topk
+
+
+def _sketch_with_counts(counts: dict[int, int], width=1 << 14, depth=4):
+    """Exact linear CU sketch holding the given key -> count map."""
+    spec = SketchSpec(width=width, depth=depth, counter=CMS32)
+    keys = jnp.asarray(list(counts), jnp.uint32)
+    w = jnp.asarray([counts[int(k)] for k in keys], jnp.float32)
+    return sk.update_batched(sk.init(spec), keys, jax.random.PRNGKey(0),
+                             weights=w)
+
+
+def test_topk_fills_and_ranks():
+    s = _sketch_with_counts({1: 100, 2: 80, 3: 60, 4: 40})
+    tr = topk.refresh(topk.init(3), s, jnp.asarray([1, 2, 3, 4], jnp.uint32))
+    assert set(np.asarray(tr.keys).tolist()) == {1, 2, 3}
+    np.testing.assert_allclose(np.asarray(tr.estimates), [100, 80, 60])
+
+
+def test_topk_buffer_refresh_after_eviction():
+    """An evicted key re-enters when it turns hot, and survivors' estimates
+    refresh to the sketch's current (tightened) values."""
+    spec = SketchSpec(width=1 << 14, depth=4, counter=CMS32)
+    s = sk.update_batched(sk.init(spec), jnp.asarray([1, 2, 3], jnp.uint32),
+                          jax.random.PRNGKey(0),
+                          weights=jnp.asarray([100.0, 80.0, 60.0]))
+    tr = topk.refresh(topk.init(3), s, jnp.asarray([1, 2, 3], jnp.uint32))
+    assert set(np.asarray(tr.keys).tolist()) == {1, 2, 3}
+
+    # key 4 surges past key 3 -> 3 is evicted on the next refresh
+    s = sk.update_batched(s, jnp.asarray([4], jnp.uint32),
+                          jax.random.PRNGKey(1),
+                          weights=jnp.asarray([70.0]))
+    tr = topk.refresh(tr, s, jnp.asarray([4], jnp.uint32))
+    assert set(np.asarray(tr.keys).tolist()) == {1, 2, 4}
+
+    # the evicted key comes back hotter: buffer must re-admit it even though
+    # it is no longer in the candidate buffer (arrives via the batch)
+    s = sk.update_batched(s, jnp.asarray([3], jnp.uint32),
+                          jax.random.PRNGKey(2),
+                          weights=jnp.asarray([90.0]))
+    tr = topk.refresh(tr, s, jnp.asarray([3, 9], jnp.uint32))
+    assert set(np.asarray(tr.keys).tolist()) == {1, 3, 2}
+    # and every surviving estimate reflects the CURRENT sketch state
+    est = {int(k): float(e) for k, e in zip(np.asarray(tr.keys),
+                                            np.asarray(tr.estimates))}
+    assert est[3] == 150.0 and est[1] == 100.0 and est[2] == 80.0
+
+
+def test_topk_dedup_within_batch():
+    s = _sketch_with_counts({5: 50, 6: 40})
+    tr = topk.refresh(topk.init(4),
+                      s, jnp.asarray([5, 5, 5, 6], jnp.uint32))
+    keys = np.asarray(tr.keys).tolist()
+    assert keys.count(5) == 1 and keys.count(6) == 1
