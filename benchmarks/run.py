@@ -14,8 +14,8 @@ import sys
 import time
 
 from benchmarks import (bench_are_counts, bench_batched_divergence,
-                        bench_damped_update, bench_pmi, bench_throughput,
-                        bench_window)
+                        bench_damped_update, bench_pmi, bench_query,
+                        bench_throughput, bench_window)
 from benchmarks.common import emit
 
 SUITES = [
@@ -25,6 +25,7 @@ SUITES = [
     ("batched_divergence", bench_batched_divergence.run),
     ("paper_next_steps", bench_damped_update.run),
     ("streaming_window", bench_window.run),
+    ("query_plane", bench_query.run),
 ]
 
 

@@ -4,8 +4,9 @@ A catalogue of items receives Zipfian background traffic; partway through,
 a handful of cold items go viral.  An all-time CML sketch keeps ranking
 the long-term heads; a sliding-window ring (last W intervals) surfaces the
 burst within one rotation, and an exponentially-decayed sketch ranks by
-recency-weighted count — the three time semantics of the streaming plane
-side by side, all constant memory.
+recency-weighted count (gamma^age applied lazily in the fused window-query
+kernel) — the three time semantics of the streaming plane side by side,
+all constant memory.
 
     PYTHONPATH=src python examples/trending_items.py [--rotations 12]
 """
@@ -17,9 +18,9 @@ import numpy as np
 
 from repro.core import CMLS16, SketchSpec
 from repro.core import sketch as sk
-from repro.stream import (WindowSpec, decayed_init, decayed_update,
-                          window_init, window_query, window_rotate,
-                          window_update)
+from repro.stream import (WindowSpec, decayed_init, decayed_query,
+                          decayed_update, window_init, window_query,
+                          window_rotate, window_update)
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--rotations", type=int, default=12)
@@ -33,7 +34,7 @@ BURST_START = args.rotations - 3                      # viral in the last 3
 spec = SketchSpec(width=8192, depth=4, counter=CMLS16)
 win = window_init(WindowSpec(sketch=spec, buckets=8))
 alltime = sk.init(spec)
-decayed = decayed_init(spec, gamma=0.7)
+decayed = decayed_init(spec, gamma=0.7, history=8)
 
 upd_w = jax.jit(window_update)
 rot_w = jax.jit(window_rotate)
@@ -59,7 +60,7 @@ probe = jnp.arange(args.vocab, dtype=jnp.uint32)
 scores = {
     "all-time": np.asarray(sk.query(alltime, probe)),
     "window(3)": np.asarray(window_query(win, probe, n_buckets=3)),
-    "decayed(g=0.7)": np.asarray(sk.query(decayed.sketch, probe)),
+    "decayed(g=0.7)": np.asarray(decayed_query(decayed, probe)),
 }
 
 print(f"burst items {BURST_ITEMS[0]}..{BURST_ITEMS[-1]} went viral in the "

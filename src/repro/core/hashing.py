@@ -33,6 +33,26 @@ def make_row_seeds(seed: int, depth: int) -> jnp.ndarray:
     return mix32(base ^ jnp.uint32(seed & 0xFFFF_FFFF))
 
 
+def host_row_seeds(seed: int, depth: int) -> tuple:
+    """`make_row_seeds` as plain Python ints, computed host-side.
+
+    Bit-identical to the jnp version (asserted in tests) but safe to call
+    under a jit/shard_map trace — the kernel wrappers need concrete seeds
+    as static arguments even when the surrounding computation is traced.
+    """
+    def fmix(x: int) -> int:
+        x ^= x >> 16
+        x = (x * _C1) & 0xFFFF_FFFF
+        x ^= x >> 13
+        x = (x * _C2) & 0xFFFF_FFFF
+        x ^= x >> 16
+        return x
+
+    s = seed & 0xFFFF_FFFF
+    return tuple(fmix(((i * _GOLDEN) & 0xFFFF_FFFF) ^ s)
+                 for i in range(1, depth + 1))
+
+
 def row_hashes(keys: jnp.ndarray, row_seeds: jnp.ndarray, width: int) -> jnp.ndarray:
     """Hash keys into every sketch row.
 

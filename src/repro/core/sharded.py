@@ -21,6 +21,8 @@ any mesh size (the multi-pod dry-run exercises them on 512 devices).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -57,25 +59,25 @@ def pmax_merge_window(win, axis_names):
     """Max-merge per-shard bucket rings across mesh axes (inside shard_map).
 
     Every worker rotates on the same schedule (rotation is driven by the
-    host step counter, replicated by construction), so bucket b means the
-    same time slice on every shard and the ring merges bucket-wise exactly
-    like a plain sketch.  (repro.stream is imported lazily so core stays a
-    leaf package at import time.)"""
-    import repro.stream.window as w
-    return w.WindowedSketch(tables=jax.lax.pmax(win.tables, axis_names),
-                            cursor=win.cursor, spec=win.spec)
+    host step counter or a shared watermark, replicated by construction),
+    so bucket b means the same time slice on every shard and the ring
+    merges bucket-wise exactly like a plain sketch."""
+    return dataclasses.replace(win,
+                               tables=jax.lax.pmax(win.tables, axis_names))
 
 
 def lazy_update_window(win, keys: jnp.ndarray, rng: jax.Array,
                        step: jnp.ndarray, merge_every: int, axis_names):
     """Windowed analogue of `lazy_update`: local active-bucket update plus a
-    periodic fleet-wide bucket-wise pmax merge."""
+    periodic fleet-wide bucket-wise pmax merge.  (repro.stream is imported
+    lazily here and in the routed-window functions so core stays a leaf
+    package at import time.)"""
     import repro.stream.window as w
     win = w.window_update(win, keys, rng)
     do_merge = (step % merge_every) == (merge_every - 1)
     merged = pmax_merge_window(win, axis_names)
     tables = jnp.where(do_merge, merged.tables, win.tables)
-    return w.WindowedSketch(tables=tables, cursor=win.cursor, spec=win.spec)
+    return dataclasses.replace(win, tables=tables)
 
 
 # --------------------------------------------------------------------------
@@ -127,6 +129,25 @@ def routed_update(local: sk.Sketch, keys: jnp.ndarray, rng: jax.Array,
     return sk.update_batched(local, flat, rng, weights=valid.astype(jnp.float32))
 
 
+def _route_estimates_back(est: jnp.ndarray, recv_keys: jnp.ndarray,
+                          slot_of_key: jnp.ndarray, kept: jnp.ndarray,
+                          axis_name: str, n_shards: int, capacity: int
+                          ) -> jnp.ndarray:
+    """Return each shard's local estimates to the shards that asked.
+
+    est/recv_keys: flattened received probes and their local estimates;
+    sentinel (fill) probes are zeroed, estimates all_to_all back to their
+    origin, and each origin re-orders them to align with its original
+    keys.  Keys dropped by capacity overflow come back as -1.0.
+    """
+    est = jnp.where(recv_keys == SENTINEL, 0.0, est)
+    back = jax.lax.all_to_all(est.reshape(n_shards, capacity), axis_name,
+                              split_axis=0, concat_axis=0).reshape(-1)
+    padded = jnp.concatenate([back, jnp.full((1,), -1.0, back.dtype)])
+    out = padded[jnp.minimum(slot_of_key, n_shards * capacity)]
+    return jnp.where(kept, out, -1.0)
+
+
 def routed_query(local: sk.Sketch, keys: jnp.ndarray, axis_name: str,
                  capacity: int) -> jnp.ndarray:
     """Query a key-routed sketch; returns estimates aligned with `keys`.
@@ -137,10 +158,58 @@ def routed_query(local: sk.Sketch, keys: jnp.ndarray, axis_name: str,
     n_shards = compat.axis_size(axis_name)
     buf, slot_of_key, kept = _dispatch_layout(keys, n_shards, capacity)
     recv = jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=0)
-    est = sk.query(local, recv.reshape(-1))
-    est = jnp.where(recv.reshape(-1) == SENTINEL, 0.0, est)
-    back = jax.lax.all_to_all(est.reshape(n_shards, capacity), axis_name,
-                              split_axis=0, concat_axis=0).reshape(-1)
-    padded = jnp.concatenate([back, jnp.full((1,), -1.0, back.dtype)])
-    out = padded[jnp.minimum(slot_of_key, n_shards * capacity)]
-    return jnp.where(kept, out, -1.0)
+    flat = recv.reshape(-1)
+    est = sk.query(local, flat)
+    return _route_estimates_back(est, flat, slot_of_key, kept, axis_name,
+                                 n_shards, capacity)
+
+
+# --------------------------------------------------------------------------
+# key-routed windows: bucket ring x routed dispatch, for windows too large
+# for one chip.  Each shard owns a full ring for its key partition; every
+# shard rotates on the same (replicated) schedule, so bucket b is the same
+# time slice fleet-wide and window semantics survive the sharding.
+# --------------------------------------------------------------------------
+
+def routed_window_update(win, keys: jnp.ndarray, rng: jax.Array,
+                         axis_name: str, capacity: int):
+    """Update a key-routed bucket ring (call inside shard_map).
+
+    Dispatches each key to its owning shard with the fixed-capacity
+    all_to_all, then conservative-updates that shard's ACTIVE bucket
+    (sentinel fill carries weight 0 -> no-op)."""
+    import repro.stream.window as w
+    n_shards = compat.axis_size(axis_name)
+    buf, _, _ = _dispatch_layout(keys, n_shards, capacity)
+    recv = jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=0)
+    flat = recv.reshape(-1)
+    valid = flat != SENTINEL
+    return w.window_update(win, flat, rng,
+                           weights=valid.astype(jnp.float32))
+
+
+def routed_window_query(win, keys: jnp.ndarray, axis_name: str,
+                        capacity: int, n_buckets: int | None = None,
+                        mode: str = "sum", gamma: float | None = None,
+                        engine: str = "auto") -> jnp.ndarray:
+    """Query a key-routed bucket ring; estimates aligned with `keys`.
+
+    Each shard answers its partition's keys with ONE fused window-query
+    launch (in-kernel bucket reduction + lazy gamma^age decay weights, the
+    same engine as the single-chip path), then routes the estimates back.
+    Keys dropped by capacity overflow return -1.0, as in `routed_query`.
+
+    shard_map has no replication rule for pallas_call, so the default
+    (fused-kernel) engine requires the enclosing shard_map to pass
+    `check_vma=False`; pass engine="jnp" to stay on the vmapped reference
+    under a replication-checked shard_map.
+    """
+    import repro.stream.window as w
+    n_shards = compat.axis_size(axis_name)
+    buf, slot_of_key, kept = _dispatch_layout(keys, n_shards, capacity)
+    recv = jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=0)
+    flat = recv.reshape(-1)
+    est = w.window_query(win, flat, n_buckets=n_buckets, mode=mode,
+                         gamma=gamma, engine=engine)
+    return _route_estimates_back(est, flat, slot_of_key, kept, axis_name,
+                                 n_shards, capacity)

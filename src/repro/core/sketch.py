@@ -93,6 +93,19 @@ def query(sketch: Sketch, keys: jnp.ndarray) -> jnp.ndarray:
     return sketch.spec.counter.decode(query_state(sketch, keys))
 
 
+def query_stacked(tables: jnp.ndarray, spec: SketchSpec, keys: jnp.ndarray
+                  ) -> jnp.ndarray:
+    """Vmapped multi-table query: tables (T, d, w), keys (T, N) -> (T, N).
+
+    The pure-jnp reference for `kernels.ops.query_many` (and its fallback
+    past the VMEM budget); T is tenants or window buckets.
+    """
+    def one(table, k):
+        return query(Sketch(table=table, spec=spec), k)
+
+    return jax.vmap(one)(tables, keys)
+
+
 # --------------------------------------------------------------------------
 # UPDATE — exact sequential semantics (paper Alg. 1)
 # --------------------------------------------------------------------------

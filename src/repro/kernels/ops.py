@@ -4,16 +4,24 @@ These take/return `repro.core.sketch.Sketch` pytrees and handle host-side
 prep (dedup, RNG, padding) so callers can swap `core.sketch.query/update`
 for the kernel path with one import.  On non-TPU backends the kernels run
 in interpret mode (bit-identical semantics, used for validation).
+
+Both halves of the hot path are fused across the leading axis: ingest via
+`update_many` (T tenants, one launch) and the read path via `query_many`
+(T tenants) / `window_query_tables` (B window buckets with the weighted
+sum/max reduction — and lazy gamma^age decay — inside the kernel).
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import sketch as sk
-from repro.core.hashing import make_row_seeds
-from repro.kernels.sketch import (CHUNK, fused_update_pallas, query_pallas,
-                                  update_pallas)
+from repro.core.hashing import host_row_seeds
+from repro.kernels.sketch import (CHUNK, fused_query_pallas,
+                                  fused_update_pallas, query_pallas,
+                                  update_pallas, window_query_pallas)
 
 # VMEM budget the resident-table strategy is valid for (per TPU core).
 VMEM_TABLE_LIMIT = 12 * 1024 * 1024
@@ -23,8 +31,12 @@ def fits_vmem(spec: sk.SketchSpec) -> bool:
     return spec.memory_bytes <= VMEM_TABLE_LIMIT
 
 
+@functools.lru_cache(maxsize=None)
 def _seeds_tuple(spec: sk.SketchSpec) -> tuple:
-    return tuple(int(s) for s in make_row_seeds(spec.seed, spec.depth))
+    # SketchSpec is a frozen dataclass, so the derived row seeds are cached
+    # per spec instead of re-derived on every query/update call; computed
+    # host-side so the wrappers stay callable under jit/shard_map traces.
+    return host_row_seeds(spec.seed, spec.depth)
 
 
 def _interpret() -> bool:
@@ -38,6 +50,62 @@ def query(sketch: sk.Sketch, keys: jnp.ndarray) -> jnp.ndarray:
     return query_pallas(sketch.table, keys, seeds=_seeds_tuple(sketch.spec),
                         width=sketch.spec.width, counter=sketch.spec.counter,
                         interpret=_interpret())
+
+
+def query_many(tables: jnp.ndarray, spec: sk.SketchSpec, keys: jnp.ndarray
+               ) -> jnp.ndarray:
+    """Fused multi-tenant query: tables (T, d, w), keys (T, N) or (N,).
+
+    1D keys are broadcast to every tenant (the common serving probe).  All
+    T queries land in ONE kernel launch (the per-tenant table is the
+    VMEM-resident grid block), bit-consistent with a per-tenant `query`
+    loop.  Falls back to the vmapped jnp query past the VMEM budget.
+    Returns float32 (T, N).
+    """
+    if keys.ndim == 1:
+        keys = jnp.broadcast_to(keys[None, :], (tables.shape[0], keys.shape[0]))
+    if keys.shape[0] != tables.shape[0]:
+        # the kernel grids over tables.shape[0] and would leave the extra
+        # output tiles unwritten — fail loudly instead
+        raise ValueError(f"per-tenant keys need {tables.shape[0]} rows, "
+                         f"got {keys.shape[0]}")
+    if not fits_vmem(spec):
+        return sk.query_stacked(tables, spec, keys)
+    return fused_query_pallas(tables, keys, seeds=_seeds_tuple(spec),
+                              width=spec.width, counter=spec.counter,
+                              interpret=_interpret())
+
+
+def window_query_tables(tables: jnp.ndarray, spec: sk.SketchSpec,
+                        keys: jnp.ndarray, weights: jnp.ndarray,
+                        mode: str = "sum", engine: str = "auto"
+                        ) -> jnp.ndarray:
+    """Weighted window reduction over a bucket ring: ONE fused launch.
+
+    tables (B, d, w) bucket ring, keys (N,), weights (B,) per-bucket
+    estimate weights (0 = expired, gamma^age = lazy decay).  mode "sum"
+    or "max".  engine: "kernel" forces the Pallas path, "jnp" the vmapped
+    reference (used inside collectives), "auto" picks the kernel when the
+    bucket table fits VMEM.  Returns float32 (N,).
+    """
+    if mode not in ("sum", "max"):
+        raise ValueError(f"unknown window query mode {mode!r}")
+    if weights.shape != (tables.shape[0],):
+        raise ValueError(f"need one weight per bucket: weights "
+                         f"{weights.shape} vs {tables.shape[0]} buckets")
+    if engine == "auto":
+        engine = "kernel" if fits_vmem(spec) else "jnp"
+    if engine == "jnp":
+        keys_b = jnp.broadcast_to(keys[None, :],
+                                  (tables.shape[0], keys.shape[0]))
+        per = sk.query_stacked(tables, spec, keys_b) * weights[:, None]
+        return per.sum(axis=0) if mode == "sum" else per.max(axis=0)
+    if engine != "kernel":
+        raise ValueError(f"unknown query engine {engine!r}")
+    return window_query_pallas(tables, keys, weights,
+                               seeds=_seeds_tuple(spec), width=spec.width,
+                               counter=spec.counter, mode=mode,
+                               interpret=_interpret())
 
 
 def update(sketch: sk.Sketch, keys: jnp.ndarray, rng: jax.Array) -> sk.Sketch:

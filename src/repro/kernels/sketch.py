@@ -6,6 +6,10 @@ single VMEM-resident block across every grid step and walk the *key stream*
 with the grid:
 
   * query:  hash -> in-VMEM gather -> min over rows -> Morris decode, fused.
+    Multi-tenant (`fused_query_pallas`) grids over (tenant, key-chunk);
+    windowed (`window_query_pallas`) grids over (key-chunk, bucket) with the
+    bucket axis innermost and does the weighted sum/max window reduction
+    in-kernel (lazy decay = gamma^age bucket weights).
   * update: sequential grid over key chunks; the table is input/output
     aliased, so each chunk's conservative scatter-max is visible to the
     next chunk (TPU grids execute sequentially on a core — the legal place
@@ -48,15 +52,58 @@ def _mix32(x):
     return x
 
 
-def _query_kernel(table_ref, keys_ref, out_ref, *, seeds, width, counter):
-    keys = keys_ref[...].astype(jnp.uint32)              # (8, 128)
+def _table_min(table_ref, keys, *, seeds, width, t=None):
+    """min over rows of the hashed cells: the shared read of every query
+    kernel.  table_ref block is (d, w) or, with leading index t, (1, d, w)."""
     cmin = None
     for k, seed in enumerate(seeds):
         cols = (_mix32(keys ^ jnp.uint32(seed)) % jnp.uint32(width)).astype(jnp.int32)
-        row = table_ref[k, :]                            # (w,) VMEM-resident
+        row = table_ref[k, :] if t is None else table_ref[t, k, :]
         vals = row[cols.reshape(-1)].reshape(cols.shape)  # rank-1 VMEM gather
         cmin = vals if cmin is None else jnp.minimum(cmin, vals)
-    out_ref[...] = counter.decode(cmin)
+    return cmin
+
+
+def _fused_query_kernel(tables_ref, keys_ref, out_ref, *, seeds, width, counter):
+    """One (tenant, key-chunk) grid step of the multi-tenant query.
+
+    Blocks: tables (1, d, w) — tenant t's table, VMEM-resident across that
+    tenant's chunk sweep; keys/out (1, 8, 128) key tiles.  hash -> in-VMEM
+    gather -> min over rows -> Morris decode, fused; T tenants cost one
+    launch instead of T (the same amortization as `_fused_update_kernel`).
+    """
+    keys = keys_ref[0].astype(jnp.uint32)                # (8, 128)
+    cmin = _table_min(tables_ref, keys, seeds=seeds, width=width, t=0)
+    out_ref[0] = counter.decode(cmin)
+
+
+def _window_query_kernel(tables_ref, keys_ref, w_ref, out_ref, *, seeds,
+                         width, counter, mode):
+    """One (key-chunk, bucket) grid step of the windowed query.
+
+    The bucket ring is the leading axis of `tables`; the grid's *last* axis
+    walks it, so for a fixed key chunk the output block stays resident while
+    every bucket streams through VMEM, and the window reduction (weighted
+    sum, or max) happens in-kernel — B buckets cost one launch and one
+    output write instead of B queries plus a host-side reduce.  w_ref holds
+    that bucket's weight (0 for expired buckets; gamma^age for lazy decay),
+    applied to the *estimate*, never the counter state.
+    """
+    b = pl.program_id(1)
+    keys = keys_ref[...].astype(jnp.uint32)              # (8, 128)
+    cmin = _table_min(tables_ref, keys, seeds=seeds, width=width, t=0)
+    est = counter.decode(cmin) * w_ref[0, 0]
+
+    @pl.when(b == 0)
+    def _init():
+        out_ref[...] = est
+
+    @pl.when(b != 0)
+    def _reduce():
+        if mode == "sum":
+            out_ref[...] = out_ref[...] + est
+        else:
+            out_ref[...] = jnp.maximum(out_ref[...], est)
 
 
 def _fused_update_kernel(tables_ref, keys_ref, mult_ref, unif_ref, out_ref, *,
@@ -99,23 +146,14 @@ def _pad_tiles(x, pad_value):
 @functools.partial(jax.jit, static_argnames=("width", "counter", "seeds", "interpret"))
 def query_pallas(table, keys, *, seeds: tuple, width: int,
                  counter: CounterSpec, interpret: bool = True):
-    """Fused sketch query. table (d, w); keys (N,) -> float32 (N,)."""
-    d = table.shape[0]
-    n = keys.shape[0]
-    tiles, padded = _pad_tiles(keys.astype(jnp.uint32), 0)
-    grid = padded // CHUNK
-    out = pl.pallas_call(
-        functools.partial(_query_kernel, seeds=seeds, width=width, counter=counter),
-        grid=(grid,),
-        in_specs=[
-            pl.BlockSpec((d, width), lambda i: (0, 0)),        # whole table in VMEM
-            pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),  # key tile
-        ],
-        out_specs=pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct(tiles.shape, jnp.float32),
-        interpret=interpret,
-    )(table, tiles)
-    return out.reshape(-1)[:n]
+    """Fused sketch query. table (d, w); keys (N,) -> float32 (N,).
+
+    The single-tenant case IS the fused kernel at T=1 (one source of truth
+    for the query logic), exactly as `update_pallas` wraps the fused update.
+    """
+    return fused_query_pallas(table[None], keys[None], seeds=seeds,
+                              width=width, counter=counter,
+                              interpret=interpret)[0]
 
 
 @functools.partial(jax.jit, static_argnames=("width", "counter", "seeds", "interpret"))
@@ -174,3 +212,71 @@ def fused_update_pallas(tables, keys, mult, uniforms, *, seeds: tuple,
         input_output_aliases={0: 0},
         interpret=interpret,
     )(tables, key_t, mult_t, unif_t)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "counter", "seeds", "interpret"))
+def fused_query_pallas(tables, keys, *, seeds: tuple, width: int,
+                       counter: CounterSpec, interpret: bool = True):
+    """Multi-tenant batched query in ONE kernel launch.
+
+    tables (T, d, w): stacked per-tenant sketch tables (identical spec);
+    keys (T, N): each tenant's probe keys.  Grids over (tenant, key-chunk)
+    with tenant t's (d, w) table the VMEM-resident block.  Returns float32
+    (T, N) estimates, bit-identical to T per-tenant `query_pallas` calls.
+    """
+    t, d, _ = tables.shape
+    n = keys.shape[1]
+    tiles, padded = _pad_tiles_2d(keys.astype(jnp.uint32), 0)
+    chunks = padded // CHUNK
+    out = pl.pallas_call(
+        functools.partial(_fused_query_kernel, seeds=seeds, width=width,
+                          counter=counter),
+        grid=(t, chunks),
+        in_specs=[
+            pl.BlockSpec((1, d, width), lambda ti, ci: (ti, 0, 0)),
+            pl.BlockSpec((1, SUBLANES, LANES), lambda ti, ci: (ti, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, SUBLANES, LANES), lambda ti, ci: (ti, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct(tiles.shape, jnp.float32),
+        interpret=interpret,
+    )(tables, tiles)
+    return out.reshape(t, -1)[:, :n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("width", "counter", "seeds", "mode",
+                                    "interpret"))
+def window_query_pallas(tables, keys, weights, *, seeds: tuple, width: int,
+                        counter: CounterSpec, mode: str = "sum",
+                        interpret: bool = True):
+    """Windowed query with the in-kernel bucket reduction.
+
+    tables (B, d, w): the bucket ring (leading axis = bucket); keys (N,);
+    weights (B,): per-bucket estimate weights — 0 for buckets outside the
+    window, gamma^age for lazy decay, 1 for a plain window sum.  Grids over
+    (key-chunk, bucket) with the bucket axis innermost, so each key chunk's
+    output block stays resident while the B bucket tables stream through
+    VMEM and the weighted sum (mode="sum") or max (mode="max") reduction
+    happens in-kernel.  Returns float32 (N,).
+    """
+    if mode not in ("sum", "max"):
+        raise ValueError(f"unknown window query mode {mode!r}")
+    b, d, _ = tables.shape
+    n = keys.shape[0]
+    tiles, padded = _pad_tiles(keys.astype(jnp.uint32), 0)
+    w_tiles = jnp.broadcast_to(weights.astype(jnp.float32)[:, None],
+                               (b, LANES))
+    out = pl.pallas_call(
+        functools.partial(_window_query_kernel, seeds=seeds, width=width,
+                          counter=counter, mode=mode),
+        grid=(padded // CHUNK, b),
+        in_specs=[
+            pl.BlockSpec((1, d, width), lambda ci, bi: (bi, 0, 0)),
+            pl.BlockSpec((SUBLANES, LANES), lambda ci, bi: (ci, 0)),
+            pl.BlockSpec((1, LANES), lambda ci, bi: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((SUBLANES, LANES), lambda ci, bi: (ci, 0)),
+        out_shape=jax.ShapeDtypeStruct(tiles.shape, jnp.float32),
+        interpret=interpret,
+    )(tables, tiles, w_tiles)
+    return out.reshape(-1)[:n]

@@ -7,14 +7,16 @@
     (T, d, w) array and ingested by a single fused Pallas kernel launch.
 """
 from repro.stream.window import (DecayedSketch, WindowSpec, WindowedSketch,
-                                 decay, decayed_init, decayed_update,
-                                 window_init, window_query, window_rotate,
-                                 window_update)
+                                 decay, decayed_init, decayed_query,
+                                 decayed_rotate, decayed_update,
+                                 window_advance_to, window_init, window_query,
+                                 window_rotate, window_update)
 from repro.stream.service import CountService
 
 __all__ = [
     "WindowSpec", "WindowedSketch", "window_init", "window_update",
-    "window_rotate", "window_query",
-    "DecayedSketch", "decay", "decayed_init", "decayed_update",
+    "window_rotate", "window_advance_to", "window_query",
+    "DecayedSketch", "decay", "decayed_init", "decayed_rotate",
+    "decayed_update", "decayed_query",
     "CountService",
 ]

@@ -18,7 +18,10 @@ are KBs-to-MBs; the launch is the cost).  `CountService` therefore:
     `train/checkpoint`, with tenant names and spec recorded in the
     manifest metadata so a restored service rebuilds its registry.
 
-Queries are read-your-writes: they flush pending events first.
+Queries are read-your-writes: they flush pending events first.  The read
+path mirrors the ingest path: `query_all` answers every tenant's probes
+with ONE `fused_query_pallas` launch (grid (tenant, key-chunk), table
+VMEM-resident), and `query` is its T=1 case.
 """
 from __future__ import annotations
 
@@ -112,18 +115,24 @@ class CountService:
     def flush(self) -> int:
         """Land every tenant's pending events in one fused launch.
 
-        Returns the number of events ingested.  Stale queue slots (beyond
-        each tenant's fill) ride along with weight 0 — no-ops in the
-        kernel — which keeps the launch statically shaped.
+        Returns the number of events ingested.  The upload is trimmed to
+        the fullest tenant's fill, rounded up to the kernel CHUNK, so a
+        nearly-empty queue doesn't ship (T, queue_capacity) to the device;
+        within the trimmed slice, stale slots (beyond each tenant's fill)
+        ride along with weight 0 — no-ops in the kernel.  The launch shape
+        therefore varies only in CHUNK-quantized steps (at most
+        queue_capacity / CHUNK distinct compilations).
         """
         pending = int(self._fill.sum())
         if pending == 0:
             return 0
         self._rng, r = jax.random.split(self._rng)
-        weights = (np.arange(self.queue_capacity)[None, :]
+        cols = min(self.queue_capacity,
+                   ops.CHUNK * -(-int(self._fill.max()) // ops.CHUNK))
+        weights = (np.arange(cols)[None, :]
                    < self._fill[:, None]).astype(np.float32)
         self.tables = ops.update_many(self.tables, self.spec,
-                                      jnp.asarray(self._queue), r,
+                                      jnp.asarray(self._queue[:, :cols]), r,
                                       weights=jnp.asarray(weights))
         self._fill[:] = 0
         self.stats["flushes"] += 1
@@ -132,11 +141,29 @@ class CountService:
     # ---- serving ----
 
     def query(self, name: str, keys) -> jnp.ndarray:
-        """Estimated counts for one tenant (flushes first: read-your-writes)."""
+        """Estimated counts for one tenant (flushes first: read-your-writes).
+
+        One fused-kernel launch (the T=1 case of `query_all`'s kernel)."""
         self.flush()
         t = self._row(name)
         return ops.query(Sketch(table=self.tables[t], spec=self.spec),
                          jnp.asarray(np.asarray(keys, np.uint32)))
+
+    def query_all(self, keys) -> dict[str, jnp.ndarray]:
+        """Estimated counts for EVERY tenant in ONE fused kernel launch.
+
+        keys: (N,) probes shared by all tenants, or (T, N) per-tenant
+        probes (row order = registry order, `self.tenants`).  Returns
+        {tenant: float32 (N,) estimates}, bit-consistent with calling
+        `query` per tenant.  Flushes first: read-your-writes.
+        """
+        self.flush()
+        keys = jnp.asarray(np.asarray(keys, np.uint32))
+        if keys.ndim == 2 and keys.shape[0] != len(self._index):
+            raise ValueError(f"per-tenant probes need {len(self._index)} "
+                             f"rows, got {keys.shape[0]}")
+        est = ops.query_many(self.tables, self.spec, keys)
+        return {name: est[t] for name, t in self._index.items()}
 
     # ---- persistence ----
 

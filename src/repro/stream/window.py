@@ -5,10 +5,13 @@ the last hour"), while the paper's sketch counts since boot.  Two standard
 constructions, both reusing the CML counter semantics unchanged:
 
   * WindowedSketch — a ring of B bucket `Sketch`es.  The active bucket
-    absorbs updates; `window_rotate` advances the ring and zeroes the
-    oldest bucket, so bucket b holds exactly the events of one rotation
-    interval.  A window query over the last k buckets combines per-bucket
-    estimates:
+    absorbs updates; the ring advances either on caller cadence
+    (`window_rotate`) or, when `WindowSpec.interval` is set, from event
+    timestamps via watermarks (`window_advance_to`), zeroing the oldest
+    bucket so bucket b holds exactly the events of one rotation interval.
+    A window query over the last k buckets combines per-bucket estimates
+    in ONE fused kernel launch (`kernels.ops.window_query_tables`: the
+    bucket ring is the leading table axis, the reduction runs in-kernel):
 
       - mode="sum" (default): query each bucket (min over rows, decode)
         and sum the estimates.  Buckets see disjoint time slices, so the
@@ -17,38 +20,55 @@ constructions, both reusing the CML counter semantics unchanged:
       - mode="max": elementwise max of per-bucket estimates — the
         conservative mergeable lower bound (matches `sketch.merge` "max"
         semantics; what a pmax over shards preserves).
+      - gamma: optional lazy decay — bucket b's estimate is weighted by
+        gamma^age at *query* time, so recency weighting costs nothing on
+        the ingest path.
 
-  * DecayedSketch — one sketch whose *estimates* decay geometrically: each
-    `decayed_update` first scales the whole table by gamma in estimate
-    space (decode -> gamma * value -> stochastic re-encode via
-    `encode_floor`/`point_mass`), then applies a normal conservative
-    update.  The stochastic rounding keeps the log-counter estimator
-    unbiased: E[decode(decay(c))] == gamma * decode(c) exactly.
+  * DecayedSketch — geometrically recency-weighted counts, ring-backed:
+    updates are plain conservative updates into the age-0 bucket (NO
+    decode/re-encode of the table), `decayed_rotate` ages the ring one
+    step by folding only the expiring bucket into a `tail` sketch holding
+    all older mass, and `decayed_query` applies gamma^age bucket weights
+    (and gamma^B for the tail) lazily in the fused window kernel.  The
+    stochastic re-encode of the fold keeps the estimator unbiased — the
+    same E[decode] algebra as the eager `decay`, but paid once per
+    rotation on one (d, w) bucket instead of on every update batch.
 
-Both are pytrees (tables + cursor leaves, spec static), so they jit,
+Both are pytrees (tables + cursor/epoch leaves, spec static), so they jit,
 checkpoint via train/checkpoint, and pmax-merge via core/sharded.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import sketch as sk
 from repro.core.sketch import Sketch, SketchSpec
+from repro.kernels import ops
 
 
 @dataclasses.dataclass(frozen=True)
 class WindowSpec:
-    """Static geometry of a bucket ring: B buckets of one SketchSpec."""
+    """Static geometry of a bucket ring: B buckets of one SketchSpec.
+
+    interval > 0 enables watermark-driven rotation: each bucket covers
+    `interval` timestamp units and `window_advance_to(ts)` rotates the ring
+    to the bucket owning ts.  interval == 0 means rotation is caller-cadence
+    (`window_rotate`) only.
+    """
 
     sketch: SketchSpec
     buckets: int = 8
+    interval: float = 0.0
 
     def __post_init__(self):
         if self.buckets < 1:
             raise ValueError("need at least one bucket")
+        if self.interval < 0:
+            raise ValueError("interval must be >= 0")
 
     @property
     def memory_bytes(self) -> int:
@@ -61,13 +81,17 @@ class WindowedSketch:
     tables: jnp.ndarray  # (B, d, w) bucket counter states
     cursor: jnp.ndarray  # () int32: index of the active (newest) bucket
     spec: WindowSpec     # static
+    # () int32 watermark: the interval index (floor(ts / interval)) the
+    # active bucket covers; None until the first window_advance_to.
+    epoch: jnp.ndarray | None = None
 
     def tree_flatten(self):
-        return (self.tables, self.cursor), self.spec
+        return (self.tables, self.cursor, self.epoch), self.spec
 
     @classmethod
     def tree_unflatten(cls, spec, leaves):
-        return cls(tables=leaves[0], cursor=leaves[1], spec=spec)
+        return cls(tables=leaves[0], cursor=leaves[1], epoch=leaves[2],
+                   spec=spec)
 
     def bucket(self, b) -> Sketch:
         """View bucket b as a plain Sketch (shares the table slice)."""
@@ -90,16 +114,53 @@ def window_update(win: WindowedSketch, keys: jnp.ndarray, rng: jax.Array,
                           rng, weights=weights)
     tables = jax.lax.dynamic_update_index_in_dim(win.tables, s.table,
                                                  win.cursor, 0)
-    return WindowedSketch(tables=tables, cursor=win.cursor, spec=win.spec)
+    return dataclasses.replace(win, tables=tables)
 
 
 def window_rotate(win: WindowedSketch) -> WindowedSketch:
     """Advance the ring one interval: the oldest bucket becomes the new
-    (zeroed) active bucket.  Call on a fixed wall-clock cadence."""
+    (zeroed) active bucket.  Call on a fixed wall-clock cadence (or let
+    `window_advance_to` drive it from event timestamps)."""
     nxt = (win.cursor + 1) % win.spec.buckets
     zero = jnp.zeros(win.tables.shape[1:], win.tables.dtype)
     tables = jax.lax.dynamic_update_index_in_dim(win.tables, zero, nxt, 0)
-    return WindowedSketch(tables=tables, cursor=nxt, spec=win.spec)
+    return dataclasses.replace(win, tables=tables, cursor=nxt)
+
+
+def window_advance_to(win: WindowedSketch, ts) -> WindowedSketch:
+    """Watermark-driven rotation: advance the ring to the bucket owning `ts`.
+
+    Rotates 0..B times depending on how many interval boundaries the event
+    timestamp crossed since the last watermark — ingest cadence and wall
+    clock fully decouple.  Advancing a full ring or more zeroes every
+    bucket (all content expired).  Host-side control-plane op (syncs the
+    stored epoch); timestamps may jitter within one interval, but a
+    timestamp regressing past an interval boundary raises.
+    """
+    interval = win.spec.interval
+    if interval <= 0:
+        raise ValueError("window_advance_to needs WindowSpec.interval > 0")
+    epoch = int(math.floor(float(ts) / interval))
+    if win.epoch is None:
+        return dataclasses.replace(win, epoch=jnp.asarray(epoch, jnp.int32))
+    have = int(win.epoch)
+    if epoch < have:
+        raise ValueError(
+            f"non-monotone watermark: ts {ts} (interval {epoch}) is behind "
+            f"the ring's watermark interval {have}")
+    steps = epoch - have
+    if steps == 0:
+        return win
+    b = win.spec.buckets
+    if steps >= b:
+        # everything in the ring predates the new window: zero it in one go
+        win = dataclasses.replace(
+            win, tables=jnp.zeros_like(win.tables),
+            cursor=(win.cursor + steps) % b)
+    else:
+        for _ in range(steps):
+            win = window_rotate(win)
+    return dataclasses.replace(win, epoch=jnp.asarray(epoch, jnp.int32))
 
 
 def _bucket_ages(win: WindowedSketch) -> jnp.ndarray:
@@ -108,31 +169,38 @@ def _bucket_ages(win: WindowedSketch) -> jnp.ndarray:
     return (win.cursor - jnp.arange(b, dtype=jnp.int32)) % b
 
 
+def _window_weights(win: WindowedSketch, k: int, gamma: float | None
+                    ) -> jnp.ndarray:
+    """(B,) per-bucket estimate weights: 0 past the window, else gamma^age."""
+    ages = _bucket_ages(win)
+    live = (ages < k).astype(jnp.float32)
+    if gamma is None:
+        return live
+    if not 0.0 < gamma <= 1.0:
+        raise ValueError("gamma must be in (0, 1]")
+    return live * jnp.float32(gamma) ** ages.astype(jnp.float32)
+
+
 def window_query(win: WindowedSketch, keys: jnp.ndarray,
-                 n_buckets: int | None = None, mode: str = "sum"
+                 n_buckets: int | None = None, mode: str = "sum",
+                 gamma: float | None = None, engine: str = "auto"
                  ) -> jnp.ndarray:
     """Estimate event counts over the last `n_buckets` rotation intervals.
 
     n_buckets defaults to the whole ring (B intervals).  Buckets older than
-    the window contribute nothing.  Returns float32 (N,).
+    the window contribute nothing; `gamma` additionally weights bucket b's
+    estimate by gamma^age (lazy decay — applied at query time, never to the
+    stored counters).  All live buckets are queried and reduced in ONE
+    fused kernel launch (see `kernels.ops.window_query_tables`; `engine`
+    selects the kernel vs the vmapped jnp reference).  Returns float32 (N,).
     """
     b = win.spec.buckets
     k = b if n_buckets is None else n_buckets
     if not 1 <= k <= b:
         raise ValueError(f"window of {k} buckets outside ring of {b}")
-    spec = win.spec.sketch
-
-    def one(table):
-        return sk.query(Sketch(table=table, spec=spec), keys)
-
-    per_bucket = jax.vmap(one)(win.tables)                    # (B, N)
-    live = (_bucket_ages(win) < k)[:, None]                   # (B, 1)
-    per_bucket = jnp.where(live, per_bucket, 0.0)
-    if mode == "sum":
-        return per_bucket.sum(axis=0)
-    if mode == "max":
-        return per_bucket.max(axis=0)
-    raise ValueError(f"unknown window query mode {mode!r}")
+    return ops.window_query_tables(win.tables, win.spec.sketch, keys,
+                                   _window_weights(win, k, gamma), mode=mode,
+                                   engine=engine)
 
 
 # --------------------------------------------------------------------------
@@ -157,31 +225,86 @@ def decay(sketch: Sketch, gamma: float, rng: jax.Array) -> Sketch:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class DecayedSketch:
-    """Sketch whose counts are recency-weighted: each batch's events carry
-    weight gamma^age_in_batches.  Not conservative-monotone (cells go down
-    by design); queries answer "decayed count", e.g. for trending scores."""
+    """Recency-weighted counts: events of age a (in rotations) carry weight
+    gamma^a.  Ring-backed lazy construction: the ring's buckets hold the
+    last B rotations' events *undecayed* and queries weight them by
+    gamma^age in the fused window kernel; `tail` is one sketch holding all
+    mass older than the ring, pre-aggregated so that gamma^B * decode(tail)
+    is its query-time contribution.  Updates therefore never decode or
+    re-encode a table — only `decayed_rotate` does, on the single expiring
+    bucket.  Queries answer "decayed count", e.g. for trending scores."""
 
-    sketch: Sketch
-    gamma: float  # static
+    win: WindowedSketch  # ring of the last B rotations (age 0 = active)
+    tail: jnp.ndarray    # (d, w) counters: every rotation older than the ring
+    gamma: float         # static
 
     def tree_flatten(self):
-        return (self.sketch,), self.gamma
+        return (self.win, self.tail), self.gamma
 
     @classmethod
     def tree_unflatten(cls, gamma, leaves):
-        return cls(sketch=leaves[0], gamma=gamma)
+        return cls(win=leaves[0], tail=leaves[1], gamma=gamma)
 
 
-def decayed_init(spec: SketchSpec, gamma: float = 0.98) -> DecayedSketch:
+def decayed_init(spec: SketchSpec, gamma: float = 0.98,
+                 history: int = 8) -> DecayedSketch:
+    """`history` = ring depth B: ages 0..B-1 are queried from their own
+    bucket; older mass lives in the shared tail (memory is (B+1) tables)."""
     if not 0.0 < gamma <= 1.0:
         raise ValueError("gamma must be in (0, 1]")
-    return DecayedSketch(sketch=sk.init(spec), gamma=gamma)
+    win = window_init(WindowSpec(sketch=spec, buckets=history))
+    tail = jnp.zeros((spec.depth, spec.width), spec.counter.dtype)
+    return DecayedSketch(win=win, tail=tail, gamma=gamma)
+
+
+def decayed_rotate(ds: DecayedSketch, rng: jax.Array) -> DecayedSketch:
+    """Age every event one rotation: fold ONLY the expiring bucket into the
+    tail, then advance the ring.
+
+    The expiring bucket (age B-1) ages to B, the tail's mass to B+1; both
+    are carried by the tail's stored value V' = V_expiring + gamma * V_tail
+    (contribution gamma^B * V' at query time).  One decode -> add ->
+    stochastic re-encode of a single (d, w) table — unbiased by the same
+    `reencode_stochastic` argument as eager `decay`, at 1/update-rate of
+    its cost.
+    """
+    c = ds.win.spec.sketch.counter
+    expiring = jax.lax.dynamic_index_in_dim(
+        ds.win.tables, (ds.win.cursor + 1) % ds.win.spec.buckets, 0,
+        keepdims=False)
+    v = c.decode(expiring) + jnp.float32(ds.gamma) * c.decode(ds.tail)
+    tail = c.reencode_stochastic(v, rng).astype(ds.tail.dtype)
+    return DecayedSketch(win=window_rotate(ds.win), tail=tail, gamma=ds.gamma)
 
 
 def decayed_update(ds: DecayedSketch, keys: jnp.ndarray, rng: jax.Array,
-                   weights: jnp.ndarray | None = None) -> DecayedSketch:
-    """Decay the table one step, then absorb the batch."""
-    r_decay, r_upd = jax.random.split(rng)
-    s = decay(ds.sketch, ds.gamma, r_decay)
-    s = sk.update_batched(s, keys, r_upd, weights=weights)
-    return DecayedSketch(sketch=s, gamma=ds.gamma)
+                   weights: jnp.ndarray | None = None,
+                   age_step: bool = True) -> DecayedSketch:
+    """Absorb a batch at age 0; by default aging the ring one step first
+    (the eager-decay cadence: one batch == one rotation).  Pass
+    age_step=False to micro-batch within one rotation interval — then
+    updates are plain conservative updates and the only estimate-space
+    re-encode is the per-rotation single-bucket fold in `decayed_rotate`.
+    """
+    r_rot, r_upd = jax.random.split(rng)
+    if age_step:
+        ds = decayed_rotate(ds, r_rot)
+    win = window_update(ds.win, keys, r_upd, weights=weights)
+    return DecayedSketch(win=win, tail=ds.tail, gamma=ds.gamma)
+
+
+def decayed_query(ds: DecayedSketch, keys: jnp.ndarray,
+                  engine: str = "auto") -> jnp.ndarray:
+    """Recency-weighted estimates: ONE fused launch over B buckets + tail.
+
+    The tail rides the same kernel as bucket B+1 with weight gamma^B, so
+    lazy decay costs exactly one extra grid step over a plain window query.
+    """
+    b = ds.win.spec.buckets
+    g = jnp.float32(ds.gamma)
+    weights = jnp.concatenate([
+        g ** _bucket_ages(ds.win).astype(jnp.float32),
+        g[None] ** b])
+    tables = jnp.concatenate([ds.win.tables, ds.tail[None]], axis=0)
+    return ops.window_query_tables(tables, ds.win.spec.sketch, keys, weights,
+                                   mode="sum", engine=engine)

@@ -103,6 +103,97 @@ def test_key_routed_sketch_multidevice():
 
 
 @pytest.mark.slow
+def test_key_routed_window_multidevice():
+    """Key-routed bucket ring: routed update into the active bucket, fused
+    routed window query (lazy decay weights included) aligned with keys."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.core import SketchSpec, CMLS16, sharded
+        from repro.stream import WindowSpec, window_init, window_rotate
+        from repro.stream import window as W
+
+        mesh = jax.make_mesh((8,), ("data",))
+        spec = SketchSpec(width=2048, depth=3, counter=CMLS16)
+        wspec = WindowSpec(sketch=spec, buckets=4)
+        win0 = window_init(wspec)
+        tables = jnp.stack([win0.tables] * 8)
+        rng = np.random.default_rng(0)
+
+        def upd(tb, cur, k, r):
+            w = W.WindowedSketch(tables=tb[0], cursor=cur[0], spec=wspec)
+            w = sharded.routed_window_update(w, k[0], r[0], "data",
+                                            capacity=512)
+            return w.tables[None]
+
+        def q(tb, cur, k):
+            w = W.WindowedSketch(tables=tb[0], cursor=cur[0], spec=wspec)
+            return sharded.routed_window_query(w, k[0], "data", capacity=512,
+                                               n_buckets=2)[None]
+
+        def q_jnp(tb, cur, k):
+            w = W.WindowedSketch(tables=tb[0], cursor=cur[0], spec=wspec)
+            return sharded.routed_window_query(w, k[0], "data", capacity=512,
+                                               n_buckets=2,
+                                               engine="jnp")[None]
+
+        cursor = jnp.zeros((8,), jnp.int32)
+        key = jax.random.PRNGKey(0)
+        all_rot = []
+        for rot in range(3):  # rotations 0,1,2; window = last 2
+            keys = jnp.asarray((rng.zipf(1.3, 8 * 1024) % 4096)
+                               .astype(np.uint32)).reshape(8, 1024)
+            all_rot.append(np.asarray(keys).ravel())
+            key, k = jax.random.split(key)
+            rngs = jax.random.split(k, 8)
+            tables = shard_map(upd, mesh=mesh,
+                               in_specs=(P("data"), P("data"), P("data"),
+                                         P("data")),
+                               out_specs=P("data"))(tables, cursor, keys,
+                                                    rngs)
+            if rot < 2:
+                # every shard rotates on the same replicated schedule
+                def rot_fn(tb, cur):
+                    w = W.WindowedSketch(tables=tb[0], cursor=cur[0],
+                                         spec=wspec)
+                    w = window_rotate(w)
+                    return w.tables[None], w.cursor[None]
+                tables, cursor = shard_map(
+                    rot_fn, mesh=mesh, in_specs=(P("data"), P("data")),
+                    out_specs=(P("data"), P("data")))(tables, cursor)
+
+        probe = jnp.tile(jnp.arange(512, dtype=jnp.uint32)[None], (8, 1))
+        # fused kernel engine: pallas_call has no shard_map replication
+        # rule, so the kernel path runs under check_vma=False
+        est = np.asarray(shard_map(q, mesh=mesh,
+                                   in_specs=(P("data"), P("data"),
+                                             P("data")),
+                                   out_specs=P("data"),
+                                   check_vma=False)(tables, cursor, probe))
+        est_jnp = np.asarray(shard_map(q_jnp, mesh=mesh,
+                                       in_specs=(P("data"), P("data"),
+                                                 P("data")),
+                                       out_specs=P("data"))(tables, cursor,
+                                                            probe))
+        assert np.allclose(est, est_jnp, atol=1e-4), "engines disagree"
+        assert np.allclose(est, est[0:1], atol=1e-5), "shards disagree"
+        window_events = np.concatenate(all_rot[-2:])
+        uniq, true = np.unique(window_events, return_counts=True)
+        sel = uniq < 512
+        rel = np.abs(est[0][uniq[sel]] - true[sel]) / true[sel]
+        print("ARE", rel.mean())
+        assert rel.mean() < 0.4
+        # expired (rotation-0-only) keys must not leak into the window
+        old_only = np.setdiff1d(all_rot[0], window_events)
+        old_only = old_only[old_only < 512]
+        if old_only.size:
+            assert (est[0][old_only] <= 2.0).mean() > 0.9
+    """)
+    assert "ARE" in out
+
+
+@pytest.mark.slow
 def test_lazy_pmax_merge_multidevice():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np

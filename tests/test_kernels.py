@@ -14,7 +14,8 @@ from repro.core import CMLS8, CMLS16, CMS32, SketchSpec, init
 from repro.core import sketch as sk
 from repro.core.hashing import make_row_seeds
 from repro.kernels import ops, ref
-from repro.kernels.sketch import CHUNK, query_pallas, update_pallas
+from repro.kernels.sketch import (CHUNK, fused_query_pallas, query_pallas,
+                                  update_pallas, window_query_pallas)
 
 COUNTERS = {"cms32": CMS32, "cmls16": CMLS16, "cmls8": CMLS8}
 
@@ -72,6 +73,128 @@ def test_query_kernel_matches_oracle(counter_name, width, depth, nq):
                        width=width, counter=counter, interpret=True)
     want = ref.query_ref(s.table, probe, seeds, counter)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("counter_name", list(COUNTERS))
+@pytest.mark.parametrize("t,width,depth,nq", [
+    (1, 128, 2, 64), (3, 512, 3, 1025), (8, 1024, 2, 2048),
+])
+def test_fused_query_matches_per_tenant_kernel(counter_name, t, width,
+                                               depth, nq):
+    """One fused launch must be bit-identical to T single-tenant queries."""
+    counter = COUNTERS[counter_name]
+    spec = SketchSpec(width=width, depth=depth, counter=counter)
+    seeds = tuple(int(x) for x in make_row_seeds(spec.seed, depth))
+    tables = jnp.stack([
+        sk.update_batched(init(spec), _keys(2000, width, seed=i),
+                          jax.random.PRNGKey(i)).table for i in range(t)])
+    probes = jnp.stack([_keys(nq, width * 3, seed=20 + i) for i in range(t)])
+    got = fused_query_pallas(tables, probes, seeds=seeds, width=width,
+                             counter=counter, interpret=True)
+    want = jnp.stack([
+        query_pallas(tables[i], probes[i], seeds=seeds, width=width,
+                     counter=counter, interpret=True) for i in range(t)])
+    assert got.shape == (t, nq) and got.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_query_matches_jnp_ref():
+    spec = SketchSpec(width=512, depth=3, counter=CMLS16)
+    seeds = make_row_seeds(spec.seed, spec.depth)
+    tables = jnp.stack([
+        sk.update_batched(init(spec), _keys(1500, 900, seed=i),
+                          jax.random.PRNGKey(i)).table for i in range(4)])
+    probes = jnp.stack([_keys(700, 900, seed=30 + i) for i in range(4)])
+    got = fused_query_pallas(tables, probes,
+                             seeds=tuple(int(x) for x in seeds),
+                             width=spec.width, counter=spec.counter,
+                             interpret=True)
+    want = jnp.stack([ref.query_ref(tables[i], probes[i], seeds, spec.counter)
+                      for i in range(4)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["sum", "max"])
+@pytest.mark.parametrize("b,width,depth,nq", [
+    (1, 128, 2, 64), (4, 1024, 3, 1025), (8, 512, 2, 2048),
+])
+def test_window_query_kernel_matches_weighted_ref(mode, b, width, depth, nq):
+    """In-kernel bucket reduction == per-bucket oracle + weighted reduce."""
+    counter = CMLS16
+    spec = SketchSpec(width=width, depth=depth, counter=counter)
+    seeds = make_row_seeds(spec.seed, depth)
+    tables = jnp.stack([
+        sk.update_batched(init(spec), _keys(1200, width, seed=40 + i),
+                          jax.random.PRNGKey(i)).table for i in range(b)])
+    probe = _keys(nq, width * 2, seed=50)
+    # expired bucket (weight 0) + decay-style fractional weights
+    weights = jnp.asarray([0.0 if i == b - 1 else 0.8 ** i
+                           for i in range(b)], jnp.float32)
+    got = window_query_pallas(tables, probe, weights,
+                              seeds=tuple(int(x) for x in seeds),
+                              width=width, counter=counter, mode=mode,
+                              interpret=True)
+    per = jnp.stack([ref.query_ref(tables[i], probe, seeds, counter)
+                     for i in range(b)]) * weights[:, None]
+    want = per.sum(axis=0) if mode == "sum" else per.max(axis=0)
+    assert got.shape == (nq,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_window_query_kernel_rejects_bad_mode():
+    spec = SketchSpec(width=128, depth=1, counter=CMS32)
+    tables = jnp.zeros((2, 1, 128), jnp.uint32)
+    with pytest.raises(ValueError):
+        window_query_pallas(tables, jnp.arange(8, dtype=jnp.uint32),
+                            jnp.ones((2,)), seeds=(1,), width=128,
+                            counter=CMS32, mode="median", interpret=True)
+
+
+def test_query_many_bit_consistent_with_query_and_broadcast():
+    """ops.query_many == per-tenant ops.query, for shared and (T, N) probes."""
+    spec = SketchSpec(width=1024, depth=3, counter=CMLS16)
+    tables = jnp.stack([
+        sk.update_batched(init(spec), _keys(2500, 800, seed=i),
+                          jax.random.PRNGKey(i)).table for i in range(5)])
+    probe = _keys(333, 800, seed=60)
+    got = ops.query_many(tables, spec, probe)        # (N,) broadcast form
+    assert got.shape == (5, 333)
+    for i in range(5):
+        want = ops.query(sk.Sketch(table=tables[i], spec=spec), probe)
+        np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(want))
+    per_tenant = jnp.stack([_keys(333, 800, seed=70 + i) for i in range(5)])
+    got2 = ops.query_many(tables, spec, per_tenant)  # (T, N) form
+    for i in range(5):
+        want = ops.query(sk.Sketch(table=tables[i], spec=spec),
+                         per_tenant[i])
+        np.testing.assert_array_equal(np.asarray(got2[i]), np.asarray(want))
+
+
+def test_query_many_and_window_reject_shape_mismatch():
+    """Row-count mismatches must fail loudly, not leave output tiles
+    unwritten (the kernel grids over tables.shape[0])."""
+    spec = SketchSpec(width=256, depth=2, counter=CMLS16)
+    tables = jnp.stack([init(spec).table] * 2)
+    with pytest.raises(ValueError):
+        ops.query_many(tables, spec, jnp.zeros((4, 16), jnp.uint32))
+    with pytest.raises(ValueError):
+        ops.window_query_tables(tables, spec, jnp.zeros((16,), jnp.uint32),
+                                jnp.ones((3,)))
+
+
+def test_query_many_falls_back_past_vmem():
+    spec = SketchSpec.from_memory(64 << 20, depth=2, counter=CMS32)
+    assert not ops.fits_vmem(spec)
+    tables = jnp.stack([init(spec).table] * 2)
+    est = ops.query_many(tables, spec, jnp.arange(10, dtype=jnp.uint32))
+    assert est.shape == (2, 10)
+    np.testing.assert_array_equal(
+        np.asarray(est),
+        np.asarray(sk.query_stacked(
+            tables, spec,
+            jnp.broadcast_to(jnp.arange(10, dtype=jnp.uint32)[None],
+                             (2, 10)))))
 
 
 def test_ops_roundtrip_matches_core():

@@ -152,6 +152,55 @@ def test_service_read_your_writes_and_autoflush():
     assert svc.stats["events"] == 1100
 
 
+def test_service_query_all_one_launch_matches_per_tenant():
+    """query_all == per-tenant query bit-for-bit, for shared and (T, N)
+    probe shapes, and it reads its own writes."""
+    svc = _service(tenants=("ads", "search", "feed"))
+    for i, name in enumerate(svc.tenants):
+        svc.enqueue(name, _zipf(3000, 300, seed=i) + i * 10_000)
+    probe = np.arange(128, dtype=np.uint32)
+    all_est = svc.query_all(probe)
+    assert set(all_est) == {"ads", "search", "feed"}
+    for name in svc.tenants:
+        np.testing.assert_array_equal(np.asarray(all_est[name]),
+                                      np.asarray(svc.query(name, probe)))
+    # per-tenant probe rows, aligned with registry order
+    probes = np.stack([probe + i * 10_000 for i in range(3)])
+    per = svc.query_all(probes)
+    for i, name in enumerate(svc.tenants):
+        np.testing.assert_array_equal(
+            np.asarray(per[name]), np.asarray(svc.query(name, probes[i])))
+    with pytest.raises(ValueError):
+        svc.query_all(np.zeros((2, 8), np.uint32))  # 2 rows, 3 tenants
+    # read-your-writes: pending events are flushed before answering
+    svc.enqueue("ads", np.full(50, 7, np.uint32))
+    assert float(svc.query_all([7])["ads"][0]) >= 25
+
+
+def test_service_flush_trims_upload_to_fill():
+    """A nearly-empty queue uploads only ceil(max_fill/CHUNK) chunks, and
+    trimming never changes the counts that land."""
+    svc = _service(cap=64 * ops.CHUNK)
+    seen = []
+    orig = ops.update_many
+
+    def spy(tables, spec, keys, rng, weights=None):
+        seen.append(keys.shape[1])
+        return orig(tables, spec, keys, rng, weights=weights)
+
+    try:
+        ops_update_many, ops.update_many = ops.update_many, spy
+        svc.enqueue("ads", np.full(10, 3, np.uint32))
+        svc.flush()
+        svc.enqueue("search", _zipf(ops.CHUNK + 5, 100, seed=1))
+        svc.enqueue("ads", np.full(4, 3, np.uint32))
+        svc.flush()
+    finally:
+        ops.update_many = ops_update_many
+    assert seen == [ops.CHUNK, 2 * ops.CHUNK]  # not 64 * CHUNK
+    assert float(svc.query("ads", [3])[0]) >= 7  # all 14 events landed
+
+
 def test_service_registry_validation():
     svc = _service()
     with pytest.raises(ValueError):

@@ -188,3 +188,14 @@ def test_property_query_state_is_min_over_rows(seed, depth):
     cols = row_hashes(probe, make_row_seeds(seed, depth), 257)
     manual = np.asarray(s.table)[np.arange(depth)[:, None], np.asarray(cols)].min(0)
     assert (np.asarray(query_state(s, probe)) == manual).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**63), st.integers(1, 16))
+def test_property_host_row_seeds_match_device(seed, depth):
+    """The host-side (trace-safe) seed derivation is bit-identical to the
+    jnp one — the kernel wrappers rely on this to cache seeds per spec."""
+    from repro.core.hashing import host_row_seeds, make_row_seeds
+    got = host_row_seeds(seed, depth)
+    want = tuple(int(x) for x in np.asarray(make_row_seeds(seed, depth)))
+    assert got == want

@@ -12,8 +12,9 @@ import pytest
 from repro.core import CMLS8, CMLS16, SketchSpec
 from repro.core import sketch as sk
 from repro.stream import (DecayedSketch, WindowSpec, decay, decayed_init,
-                          decayed_update, window_init, window_query,
-                          window_rotate, window_update)
+                          decayed_query, decayed_update, window_advance_to,
+                          window_init, window_query, window_rotate,
+                          window_update)
 
 
 def _zipf(n, vocab, seed=0):
@@ -138,7 +139,8 @@ def test_decay_validation_and_identity():
 
 def test_decayed_sketch_downweights_old_batches():
     spec = SketchSpec(width=4096, depth=4, counter=CMLS16)
-    ds = decayed_init(spec, gamma=0.5)
+    # history=4 < 7 batches, so the oldest batches live in the tail fold
+    ds = decayed_init(spec, gamma=0.5, history=4)
     key = jax.random.PRNGKey(3)
     old_key, new_key = jnp.uint32(11), jnp.uint32(22)
     batches = [jnp.full((256,), old_key)] + \
@@ -148,10 +150,143 @@ def test_decayed_sketch_downweights_old_batches():
         key, k = jax.random.split(key)
         ds = decayed_update(ds, b, k)
     assert isinstance(ds, DecayedSketch)
-    est = np.asarray(sk.query(ds.sketch,
-                              jnp.asarray([old_key, new_key])))
+    est = np.asarray(decayed_query(ds, jnp.asarray([old_key, new_key])))
     # both keys saw 256 events; the old batch decayed through 6 more steps
     assert est[1] > 4 * est[0]
+
+
+def test_lazy_decay_matches_eager_decay():
+    """E[query(lazy gamma^age ring)] == query(eager decayed table) within
+    counter tolerance (ISSUE acceptance) — including tail folds, since the
+    stream is longer than the ring."""
+    spec = SketchSpec(width=1 << 13, depth=4, counter=CMLS16)
+    gamma = 0.6
+    batches = [_zipf(2500, 400, seed=100 + r) for r in range(10)]
+
+    # eager: decode -> gamma * value -> re-encode the WHOLE table, per batch
+    s = sk.init(spec)
+    key = jax.random.PRNGKey(42)
+    for b in batches:
+        key, k1, k2 = jax.random.split(key, 3)
+        s = decay(s, gamma, k1)
+        s = sk.update_batched(s, jnp.asarray(b), k2)
+
+    # lazy: plain updates into the ring; decay applied at query time only
+    ds = decayed_init(spec, gamma=gamma, history=6)
+    key = jax.random.PRNGKey(43)
+    for b in batches:
+        key, k = jax.random.split(key)
+        ds = decayed_update(ds, jnp.asarray(b), k)
+
+    uniq = np.unique(np.concatenate(batches))
+    true = np.zeros(uniq.shape)
+    for age, b in enumerate(reversed(batches)):
+        u, c = np.unique(b, return_counts=True)
+        true[np.searchsorted(uniq, u)] += gamma ** age * c
+    eager = np.asarray(sk.query(s, jnp.asarray(uniq)))
+    lazy = np.asarray(decayed_query(ds, jnp.asarray(uniq)))
+    sel = true >= 5.0  # keys with enough decayed mass to measure against
+    rel_lazy = np.abs(lazy[sel] - true[sel]) / true[sel]
+    rel_eager = np.abs(eager[sel] - true[sel]) / true[sel]
+    assert rel_lazy.mean() < 0.2, rel_lazy.mean()
+    # the two estimators agree in aggregate (both unbiased for the same
+    # decayed count; eager pays B x the re-encode noise)
+    assert abs(lazy[sel].mean() - eager[sel].mean()) / eager[sel].mean() \
+        < 0.1
+    assert rel_lazy.mean() < rel_eager.mean() + 0.05
+
+
+def test_decayed_microbatching_skips_age_step():
+    """age_step=False lands micro-batches in the same rotation interval."""
+    spec = SketchSpec(width=4096, depth=3, counter=CMLS16)
+    ds = decayed_init(spec, gamma=0.5, history=4)
+    key = jax.random.PRNGKey(0)
+    for i in range(4):  # 4 micro-batches, ONE decay interval
+        key, k = jax.random.split(key)
+        ds = decayed_update(ds, jnp.full((64,), 9, jnp.uint32), k,
+                            age_step=(i == 0))
+    est = float(decayed_query(ds, jnp.asarray([9], jnp.uint32))[0])
+    assert abs(est - 256) / 256 < 0.1  # all at age 0: no decay applied
+
+
+# --------------------------------------------------------------------------
+# watermark-driven rotation
+# --------------------------------------------------------------------------
+
+def _wm_spec(buckets=4, interval=10.0, width=2048):
+    return WindowSpec(sketch=SketchSpec(width=width, depth=3, counter=CMLS16),
+                      buckets=buckets, interval=interval)
+
+
+def test_watermark_rotates_by_event_time():
+    win = window_init(_wm_spec())
+    win = window_advance_to(win, 105.0)      # first watermark: no rotation
+    assert int(win.epoch) == 10 and int(win.cursor) == 0
+    key = jax.random.PRNGKey(0)
+    win = window_update(win, jnp.full((64,), 1, jnp.uint32), key)
+    win = window_advance_to(win, 108.0)      # same interval: no-op
+    assert int(win.cursor) == 0
+    win = window_advance_to(win, 127.0)      # +2 intervals -> 2 rotations
+    assert int(win.cursor) == 2 and int(win.epoch) == 12
+    win = window_update(win, jnp.full((64,), 2, jnp.uint32),
+                        jax.random.PRNGKey(1))
+    est_now = np.asarray(window_query(win, jnp.asarray([1, 2], jnp.uint32),
+                                      n_buckets=1))
+    est_all = np.asarray(window_query(win, jnp.asarray([1, 2], jnp.uint32)))
+    assert est_now[0] <= 1.0 and est_now[1] >= 32   # old key out of window=1
+    assert est_all[0] >= 32 and est_all[1] >= 32    # both in the full ring
+
+
+def test_watermark_advance_past_full_ring_zeroes_everything():
+    win = window_init(_wm_spec(buckets=3))
+    win = window_advance_to(win, 0.0)
+    for i in range(3):
+        win = window_update(win, jnp.full((32,), i, jnp.uint32),
+                            jax.random.PRNGKey(i))
+        win = window_advance_to(win, 10.0 * (i + 1))
+    assert (np.asarray(win.tables) > 0).any()
+    win = window_advance_to(win, 1e6)        # far future: all expired
+    assert (np.asarray(win.tables) == 0).all()
+    assert int(win.epoch) == 100_000
+    # cursor stays phase-consistent with the number of intervals elapsed
+    assert int(win.cursor) == (3 + (100_000 - 3)) % 3
+
+
+def test_watermark_validation():
+    win = window_init(_wm_spec())
+    win = window_advance_to(win, 50.0)
+    with pytest.raises(ValueError):          # non-monotone: 50 -> 30
+        window_advance_to(win, 30.0)
+    window_advance_to(win, 51.0)             # jitter inside one interval: ok
+    with pytest.raises(ValueError):          # cadence-only ring has no clock
+        window_advance_to(window_init(_wm_spec(interval=0.0)), 1.0)
+    with pytest.raises(ValueError):
+        WindowSpec(sketch=_wm_spec().sketch, interval=-1.0)
+
+
+# --------------------------------------------------------------------------
+# lazy decay weights + engines in window_query
+# --------------------------------------------------------------------------
+
+def test_window_query_gamma_weights_and_engines_agree():
+    spec = SketchSpec(width=2048, depth=3, counter=CMLS16)
+    win, _ = _stream_rotations(
+        window_init(WindowSpec(sketch=spec, buckets=4)), rotations=4)
+    probe = jnp.arange(200, dtype=jnp.uint32)
+    for mode in ("sum", "max"):
+        for gamma in (None, 0.5):
+            a = np.asarray(window_query(win, probe, mode=mode, gamma=gamma,
+                                        engine="kernel"))
+            b = np.asarray(window_query(win, probe, mode=mode, gamma=gamma,
+                                        engine="jnp"))
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+    plain = np.asarray(window_query(win, probe))
+    decayed = np.asarray(window_query(win, probe, gamma=0.5))
+    assert (decayed <= plain + 1e-5).all()   # downweighting only shrinks
+    with pytest.raises(ValueError):
+        window_query(win, probe, gamma=1.5)
+    with pytest.raises(ValueError):
+        window_query(win, probe, engine="cuda")
 
 
 @pytest.mark.slow
