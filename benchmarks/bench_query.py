@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import timer
 from repro.core import CMLS16, SketchSpec
 from repro.core import sketch as sk
@@ -81,12 +82,14 @@ def _fusion_rows(quick: bool):
 
         def fused(tb, k):
             return fused_query_pallas(tb, k, seeds=seeds, width=spec.width,
-                                      counter=spec.counter, interpret=True)
+                                      counter=spec.counter,
+                                      interpret=common.interpret_flag())
 
         def loop(tb, k):
             return jnp.stack([
                 query_pallas(tb[i], k[i], seeds=seeds, width=spec.width,
-                             counter=spec.counter, interpret=True)
+                             counter=spec.counter,
+                             interpret=common.interpret_flag())
                 for i in range(t)])
 
         t_fused, out_f = timer(fused, tables, probes)
@@ -118,7 +121,8 @@ def _window_rows(quick: bool):
         def kernel(tb, k, w):
             return window_query_pallas(tb, k, w, seeds=seeds,
                                        width=spec.width, counter=spec.counter,
-                                       mode="sum", interpret=True)
+                                       mode="sum",
+                                       interpret=common.interpret_flag())
 
         @jax.jit
         def jnp_path(tb, k, w):
@@ -143,8 +147,9 @@ def _window_rows(quick: bool):
 def run(quick: bool = False) -> list[dict]:
     rows = _fusion_rows(quick) + _window_rows(quick)
     os.makedirs("results", exist_ok=True)
+    methodology = dict(METHODOLOGY, **common.mode_methodology())
     with open("results/bench_query.json", "w") as f:
-        json.dump({"methodology": METHODOLOGY, "rows": rows}, f, indent=1)
+        json.dump({"methodology": methodology, "rows": rows}, f, indent=1)
     return rows
 
 
@@ -152,7 +157,9 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    common.add_mode_flags(ap)
     args = ap.parse_args()
+    common.set_kernel_mode(args.mode)
     print("name,us_per_call,derived")
     from benchmarks.common import emit
     emit(run(quick=args.quick))

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import timer
 from repro.core import CMLS16, SketchSpec
 from repro.core import sketch as sk
@@ -118,13 +119,13 @@ def _throughput_rows(quick: bool):
         def fused(tb, k, m, u):
             return fused_update_pallas(tb, k, m, u, seeds=seeds,
                                        width=spec.width, counter=spec.counter,
-                                       interpret=True)
+                                       interpret=common.interpret_flag())
 
         def loop(tb, k, m, u):
             return jnp.stack([
                 update_pallas(tb[i], k[i], m[i], u[i], seeds=seeds,
                               width=spec.width, counter=spec.counter,
-                              interpret=True)
+                              interpret=common.interpret_flag())
                 for i in range(t)])
 
         t_fused, out_f = timer(fused, tables, sorted_keys, mult, unif)
@@ -146,8 +147,9 @@ def _throughput_rows(quick: bool):
 def run(quick: bool = False) -> list[dict]:
     rows = _accuracy_rows(quick) + _throughput_rows(quick)
     os.makedirs("results", exist_ok=True)
+    methodology = dict(METHODOLOGY, **common.mode_methodology())
     with open("results/bench_window.json", "w") as f:
-        json.dump({"methodology": METHODOLOGY, "rows": rows}, f, indent=1)
+        json.dump({"methodology": methodology, "rows": rows}, f, indent=1)
     return rows
 
 
@@ -155,7 +157,9 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    common.add_mode_flags(ap)
     args = ap.parse_args()
+    common.set_kernel_mode(args.mode)
     print("name,us_per_call,derived")
     from benchmarks.common import emit
     emit(run(quick=args.quick))

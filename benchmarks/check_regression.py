@@ -1,0 +1,133 @@
+"""Bench-regression gate: diff fresh results/*.json against committed baselines.
+
+    PYTHONPATH=src python -m benchmarks.check_regression [--threshold 1.25]
+    PYTHONPATH=src python -m benchmarks.check_regression --update
+
+Compares the timed rows (us_per_call) of the ingest/query suites against
+the baselines committed under benchmarks/baselines/, suite by suite, and
+fails when the MEDIAN per-row slowdown exceeds the threshold (default
++25%).  Two defenses against machine noise, since the baseline may have
+been recorded on different hardware than the CI runner:
+
+  * median-of-ratios across a suite's rows tolerates per-row jitter while
+    still catching regressions that slow a whole suite down;
+  * a calibration workload (NumPy pass + host->device transfer + jitted
+    reduction — the same cost classes the queue benches exercise) is timed
+    at --update time and stored in each baseline; the checker re-times it
+    and divides the slowdown ratios by the machines' calibration ratio, so
+    a uniformly slower runner does not read as a regression.
+
+Both sides are interpret-mode numbers produced by the same quick-mode
+commands CI runs (see .github/workflows/ci.yml, bench-smoke job).
+Accuracy rows (no us_per_call) are ignored.  --update rewrites the
+baselines from the current results/ directory (run the quick benches
+first, then commit the refreshed files).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+import time
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+SUITES = ["bench_ingest.json", "bench_query.json"]
+
+
+def calibration_us(reps: int = 9) -> float:
+    """Median time of a fixed NumPy + transfer + jit workload (us)."""
+    import jax
+    import numpy as np
+
+    a = np.arange(1 << 20, dtype=np.float32)
+
+    @jax.jit
+    def f(x):
+        return (x * 2.0 + 1.0).sum()
+
+    jax.block_until_ready(f(a))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        b = a * 0.5                      # NumPy pass (host staging class)
+        jax.block_until_ready(f(b))      # upload + jitted dispatch class
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts) * 1e6
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _timed_rows(doc: dict) -> dict[str, float]:
+    return {r["name"]: float(r["us_per_call"]) for r in doc["rows"]
+            if r.get("us_per_call")}
+
+
+def check(threshold: float) -> int:
+    failures = []
+    cal_here = calibration_us()
+    for suite in SUITES:
+        base_path = os.path.join(BASELINE_DIR, suite)
+        new_path = os.path.join("results", suite)
+        for path, what in ((base_path, "baseline"), (new_path, "fresh")):
+            if not os.path.exists(path):
+                print(f"FAIL {suite}: missing {what} file {path}")
+                failures.append(suite)
+                break
+        else:
+            base_doc = _load(base_path)
+            base = _timed_rows(base_doc)
+            new = _timed_rows(_load(new_path))
+            shared = sorted(set(base) & set(new))
+            if not shared:
+                print(f"FAIL {suite}: no shared timed rows")
+                failures.append(suite)
+                continue
+            # machine-speed normalization: ratio of calibration timings
+            cal_base = float(base_doc.get("calibration_us", 0)) or cal_here
+            scale = cal_here / cal_base
+            ratios = [new[k] / base[k] / scale for k in shared]
+            med = statistics.median(ratios)
+            worst = max(shared, key=lambda k: new[k] / base[k])
+            status = "ok" if med <= threshold else "FAIL"
+            print(f"{status} {suite}: median normalized ratio {med:.2f} "
+                  f"over {len(shared)} rows (threshold {threshold:.2f}, "
+                  f"machine scale {scale:.2f}); worst {worst} "
+                  f"{base[worst]:.0f} -> {new[worst]:.0f} us")
+            if med > threshold:
+                failures.append(suite)
+    return 1 if failures else 0
+
+
+def update() -> int:
+    os.makedirs(BASELINE_DIR, exist_ok=True)
+    cal = calibration_us()
+    for suite in SUITES:
+        src = os.path.join("results", suite)
+        if not os.path.exists(src):
+            print(f"missing {src}: run the quick benches first")
+            return 1
+        doc = _load(src)
+        doc["calibration_us"] = cal
+        with open(os.path.join(BASELINE_DIR, suite), "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"baseline updated: {suite} (calibration {cal:.0f} us)")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="max allowed median slowdown ratio (default 1.25)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite baselines from the current results/")
+    args = ap.parse_args()
+    sys.exit(update() if args.update else check(args.threshold))
+
+
+if __name__ == "__main__":
+    main()

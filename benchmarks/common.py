@@ -11,6 +11,43 @@ import numpy as np
 from repro.configs.paper_sketch import CFG as PAPER
 from repro.core import sketch as sk
 from repro.data import corpus, ngrams
+from repro.kernels import ops
+
+# "interpret" (Pallas interpreter, any backend — CI's mode) or "compiled"
+# (real pallas_call lowering — the mode for TPU hardware numbers).  Set via
+# benchmarks/run.py --interpret/--compiled; every suite records it in its
+# JSON methodology block.
+KERNEL_MODE = "interpret"
+
+
+def set_kernel_mode(mode: str) -> None:
+    global KERNEL_MODE
+    if mode not in ("interpret", "compiled"):
+        raise ValueError(f"unknown kernel mode {mode!r}")
+    KERNEL_MODE = mode
+    ops.set_interpret_override(mode == "interpret")
+
+
+def interpret_flag() -> bool:
+    """The `interpret=` value benchmarks pass to direct kernel calls."""
+    return KERNEL_MODE == "interpret"
+
+
+def mode_methodology() -> dict:
+    """Execution-mode fields every suite embeds in its methodology block."""
+    return {"kernel_mode": KERNEL_MODE, "backend": jax.default_backend(),
+            "device": jax.devices()[0].device_kind}
+
+
+def add_mode_flags(ap) -> None:
+    """--interpret / --compiled on a benchmark argparser."""
+    g = ap.add_mutually_exclusive_group()
+    g.add_argument("--interpret", dest="mode", action="store_const",
+                   const="interpret", default="interpret",
+                   help="run Pallas kernels in interpreter mode (default)")
+    g.add_argument("--compiled", dest="mode", action="store_const",
+                   const="compiled",
+                   help="lower Pallas kernels for the real backend (TPU)")
 
 
 @functools.lru_cache(maxsize=2)

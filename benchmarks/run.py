@@ -1,9 +1,12 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--interpret|--compiled]
 
 Prints ``name,us_per_call,derived`` CSV (required format) and mirrors the
-rows into results/benchmarks.json.
+rows into results/benchmarks.json.  --compiled lowers the Pallas kernels
+for the real backend (the flag that turns these scripts into TPU-hardware
+numbers); the default --interpret runs them in interpreter mode, and every
+suite records the mode in its JSON methodology block.
 """
 from __future__ import annotations
 
@@ -14,9 +17,9 @@ import sys
 import time
 
 from benchmarks import (bench_are_counts, bench_batched_divergence,
-                        bench_damped_update, bench_pmi, bench_query,
-                        bench_throughput, bench_window)
-from benchmarks.common import emit
+                        bench_damped_update, bench_ingest, bench_pmi,
+                        bench_query, bench_throughput, bench_window)
+from benchmarks.common import add_mode_flags, emit, set_kernel_mode
 
 SUITES = [
     ("fig1_are_counts", bench_are_counts.run),
@@ -26,6 +29,7 @@ SUITES = [
     ("paper_next_steps", bench_damped_update.run),
     ("streaming_window", bench_window.run),
     ("query_plane", bench_query.run),
+    ("ingest_plane", bench_ingest.run),
 ]
 
 
@@ -35,7 +39,9 @@ def main() -> None:
                     help="reduced corpus + budget grid (CI-speed)")
     ap.add_argument("--suite", default=None,
                     help="run one suite by name")
+    add_mode_flags(ap)
     args = ap.parse_args()
+    set_kernel_mode(args.mode)
 
     print("name,us_per_call,derived")
     all_rows = []

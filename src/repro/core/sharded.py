@@ -172,13 +172,31 @@ def routed_query(local: sk.Sketch, keys: jnp.ndarray, axis_name: str,
 # --------------------------------------------------------------------------
 
 def routed_window_update(win, keys: jnp.ndarray, rng: jax.Array,
-                         axis_name: str, capacity: int):
+                         axis_name: str, capacity: int, epoch=None):
     """Update a key-routed bucket ring (call inside shard_map).
 
     Dispatches each key to its owning shard with the fixed-capacity
     all_to_all, then conservative-updates that shard's ACTIVE bucket
-    (sentinel fill carries weight 0 -> no-op)."""
+    (sentinel fill carries weight 0 -> no-op).
+
+    epoch: optional event-time watermark (the interval index the batch
+    belongs to, e.g. `CountService.epoch_of` or floor(ts / interval)) —
+    a replicated device scalar.  When given, every shard first advances
+    its ring by (epoch - win.epoch) rotations via the traced
+    `window_advance_steps` (clamped at 0, so a stale epoch is a no-op
+    rather than an error inside the collective), which replaces the
+    caller-cadence `window_rotate` schedule: the stream's own timestamps
+    keep every shard's bucket b meaning the same time slice.  Requires a
+    ring initialized with a concrete epoch (`window_init(spec, epoch=0)`).
+    """
     import repro.stream.window as w
+    if epoch is not None:
+        if win.epoch is None:
+            raise ValueError("epoch-driven routed updates need a ring with "
+                             "an initialized watermark: window_init(spec, "
+                             "epoch=...)")
+        steps = jnp.maximum(jnp.asarray(epoch, jnp.int32) - win.epoch, 0)
+        win = w.window_advance_steps(win, steps)
     n_shards = compat.axis_size(axis_name)
     buf, _, _ = _dispatch_layout(keys, n_shards, capacity)
     recv = jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=0)

@@ -8,7 +8,11 @@ in interpret mode (bit-identical semantics, used for validation).
 Both halves of the hot path are fused across the leading axis: ingest via
 `update_many` (T tenants, one launch) and the read path via `query_many`
 (T tenants) / `window_query_tables` (B window buckets with the weighted
-sum/max reduction — and lazy gamma^age decay — inside the kernel).
+sum/max reduction — and lazy gamma^age decay — inside the kernel).  The
+ingest queue itself is device-resident: `queue_append` lands microbatches
+in the (T, capw) ring with one scatter-append launch (ring donated, fill
+mirrored on the host), and `queue_weights` turns the host fill mirror into
+the flush mask without ever shipping the ring back.
 """
 from __future__ import annotations
 
@@ -16,15 +20,28 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import sketch as sk
 from repro.core.hashing import host_row_seeds
-from repro.kernels.sketch import (CHUNK, fused_query_pallas,
-                                  fused_update_pallas, query_pallas,
-                                  update_pallas, window_query_pallas)
+from repro.kernels.sketch import (CHUNK, LANES, _shift_to_fill,
+                                  fused_query_pallas, fused_update_pallas,
+                                  query_pallas, queue_append_dense_pallas,
+                                  queue_append_pallas, update_pallas,
+                                  window_query_pallas)
 
 # VMEM budget the resident-table strategy is valid for (per TPU core).
 VMEM_TABLE_LIMIT = 12 * 1024 * 1024
+
+# None = auto (interpret off-TPU); benchmarks/run.py's --interpret/--compiled
+# flag pins it so the same scripts produce real-TPU numbers on hardware.
+_INTERPRET_OVERRIDE: bool | None = None
+
+
+def set_interpret_override(value: bool | None) -> None:
+    """Force (True/False) or restore auto (None) kernel interpret mode."""
+    global _INTERPRET_OVERRIDE
+    _INTERPRET_OVERRIDE = value
 
 
 def fits_vmem(spec: sk.SketchSpec) -> bool:
@@ -40,6 +57,8 @@ def _seeds_tuple(spec: sk.SketchSpec) -> tuple:
 
 
 def _interpret() -> bool:
+    if _INTERPRET_OVERRIDE is not None:
+        return _INTERPRET_OVERRIDE
     return jax.default_backend() != "tpu"
 
 
@@ -146,3 +165,98 @@ def update_many(tables: jnp.ndarray, spec: sk.SketchSpec, keys: jnp.ndarray,
     return fused_update_pallas(tables, sorted_keys, mult, uniforms,
                                seeds=_seeds_tuple(spec), width=spec.width,
                                counter=spec.counter, interpret=_interpret())
+
+
+# --------------------------------------------------------------------------
+# device-resident ingest queue
+# --------------------------------------------------------------------------
+
+def ring_width(capacity: int) -> int:
+    """Lane-aligned device ring width for a logical queue capacity."""
+    return max(LANES, LANES * -(-int(capacity) // LANES))
+
+
+def queue_init(tenants: int, capacity: int) -> jnp.ndarray:
+    """Fresh (T, capw) device ring (uint32 keys, lane-aligned width)."""
+    return jnp.zeros((tenants, ring_width(capacity)), jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("aligned",),
+                   donate_argnames=("queue",))
+def _queue_append_rows_xla(queue, keys, meta, *, aligned):
+    """XLA reference of `queue_append_pallas`: gather target rows, masked-
+    merge the shifted batches, scatter the rows back (ring donated, so XLA
+    updates it in place)."""
+    rows, fill, count = meta[0], meta[1], meta[2]
+    capw = queue.shape[1]
+    buf = _shift_to_fill(keys, fill, capw, queue.dtype, aligned)
+    cols = jnp.arange(capw, dtype=jnp.int32)[None, :]
+    valid = (cols >= fill[:, None]) & (cols < (fill + count)[:, None])
+    return queue.at[rows].set(jnp.where(valid, buf, queue[rows]))
+
+
+@functools.partial(jax.jit, static_argnames=("aligned",),
+                   donate_argnames=("queue",))
+def _queue_append_dense_xla(queue, keys, meta, *, aligned):
+    """XLA reference of `queue_append_dense_pallas` (whole-plane append)."""
+    fill, count = meta[0], meta[1]
+    buf = _shift_to_fill(keys, fill, queue.shape[1], queue.dtype, aligned)
+    cols = jnp.arange(queue.shape[1], dtype=jnp.int32)[None, :]
+    valid = (cols >= fill[:, None]) & (cols < (fill + count)[:, None])
+    return jnp.where(valid, buf, queue)
+
+
+def queue_append(queue: jnp.ndarray, keys: jnp.ndarray, rows, fill, count,
+                 engine: str = "auto") -> jnp.ndarray:
+    """Append R tenant microbatches to the device ring in ONE launch.
+
+    queue (T, capw) is donated (mutated in place on device); keys (R, N)
+    ragged per `count`; rows/fill/count (R,) int32, packed into ONE (3, R)
+    scalar array so an append costs a single small host->device transfer
+    next to the keys.  The caller tracks fill on the host (it is
+    deterministic), so the ring never crosses back to the host — see
+    `kernels.sketch.queue_append_pallas`.  A whole-plane append (rows ==
+    0..T-1, the batched `enqueue_many` regime) takes the dense whole-block
+    variant instead of the row-indirected one.
+
+    engine: "kernel" forces the Pallas path, "xla" the jitted gather/
+    merge/scatter reference (bit-identical; what tests cross-check), and
+    "auto" — like `window_query_tables` — picks the kernel on TPU and the
+    XLA reference elsewhere, where interpreter-mode Pallas would tax the
+    ingest hot path with per-block emulation cost.
+    """
+    if engine not in ("auto", "kernel", "xla"):
+        raise ValueError(f"unknown queue_append engine {engine!r}")
+    rows = np.asarray(rows, np.int32)
+    fill = np.asarray(fill, np.int32)
+    count = np.asarray(count, np.int32)
+    interpret = _interpret()
+    if engine == "auto":
+        engine = "xla" if interpret else "kernel"
+    aligned = not fill.any()  # append-right-after-flush: plain masked copy
+    if rows.shape[0] == queue.shape[0] and \
+            np.array_equal(rows, np.arange(queue.shape[0], dtype=np.int32)):
+        meta = np.stack([fill, count])
+        if engine == "xla":
+            return _queue_append_dense_xla(queue, keys, meta, aligned=aligned)
+        return queue_append_dense_pallas(queue, keys, meta,
+                                         interpret=interpret,
+                                         aligned=aligned)
+    meta = np.stack([rows, fill, count])
+    if engine == "xla":
+        return _queue_append_rows_xla(queue, keys, meta, aligned=aligned)
+    return queue_append_pallas(queue, keys, meta, interpret=interpret,
+                               aligned=aligned)
+
+
+@functools.partial(jax.jit, static_argnames=("cols",))
+def flush_inputs(queue: jnp.ndarray, fill: jnp.ndarray, cols: int):
+    """(queue[:, :cols], (T, cols) float32 live-slot mask) in ONE dispatch.
+
+    The host-queue path built the mask with NumPy and shipped queue AND
+    mask up every flush; here only the (T,) fill vector crosses to the
+    device and both flush inputs come out of a single fused computation.
+    """
+    weights = (jnp.arange(cols, dtype=jnp.int32)[None, :]
+               < fill[:, None].astype(jnp.int32)).astype(jnp.float32)
+    return queue[:, :cols], weights

@@ -14,6 +14,11 @@ with the grid:
     aliased, so each chunk's conservative scatter-max is visible to the
     next chunk (TPU grids execute sequentially on a core — the legal place
     for read-modify-write).
+  * queue append (`queue_append_pallas`): the ingest queue itself lives on
+    device as a (T, capw) ring; appends grid over the batched tenant rows,
+    with the per-row fill counters in SMEM (scalar prefetch drives the
+    block index map) and the ring input/output aliased, so `enqueue` is a
+    device call that never ships the queue back to the host.
 
 Keys are laid out as (8k, 128) tiles to match the 8x128 vector lanes; the
 per-row hash/gather/scatter loop is unrolled in Python over the small depth
@@ -33,6 +38,7 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.counters import CounterSpec
 
@@ -241,6 +247,139 @@ def fused_query_pallas(tables, keys, *, seeds: tuple, width: int,
         interpret=interpret,
     )(tables, tiles)
     return out.reshape(t, -1)[:, :n]
+
+
+def _queue_append_kernel(meta_ref, queue_ref, buf_ref, out_ref):
+    """One row of the device-ring scatter append.
+
+    The ingest queue lives on device as a (T, capw) ring; appending tenant
+    row r's microbatch is a masked copy of the pre-shifted key buffer into
+    that row: cell c takes buf[c] iff fill <= c < fill + count.  The
+    (3, R) meta scalars — target row / fill / count — ride in SMEM (scalar
+    prefetch), so the block index map can pick the target tenant row before
+    the body runs; the ring is input/output aliased, so untouched rows (and
+    the live prefix of this row) persist in place — `enqueue` never
+    round-trips the queue through the host.
+    """
+    ri = pl.program_id(0)
+    w = out_ref.shape[1]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, w), 1)[0]
+    fill, count = meta_ref[1, ri], meta_ref[2, ri]
+    valid = (cols >= fill) & (cols < fill + count)
+    out_ref[0, :] = jnp.where(valid, buf_ref[0, :], out_ref[0, :])
+
+
+def _shift_to_fill(keys, fill, capw, dtype, aligned):
+    """(R, capw) key buffers with row i's batch starting at fill[i].
+
+    `aligned` (static) asserts every fill is 0 — the common append-right-
+    after-flush case — turning the shift into a plain pad/cast.  Otherwise
+    the landing pad is capw + n wide so the dynamic_update_slice start
+    never clamps (fill <= capw by the caller contract), then trimmed.
+    """
+    n = keys.shape[1]
+    if aligned:
+        out = keys.astype(dtype)
+        if n < capw:  # batches narrower than the ring: zero-extend
+            return jnp.pad(out, ((0, 0), (0, capw - n)))
+        return out[:, :capw]  # CHUNK-quantized staging may overshoot capw
+
+    def one(k, f):
+        pad = jnp.zeros((capw + n,), dtype)
+        return jax.lax.dynamic_update_slice(pad, k.astype(dtype), (f,))[:capw]
+
+    return jax.vmap(one)(keys, fill)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "aligned"),
+                   donate_argnames=("queue",))
+def queue_append_pallas(queue, keys, meta, *, interpret: bool = True,
+                        aligned: bool = False):
+    """Scatter-append R tenant microbatches into the device ring: ONE launch.
+
+    queue (T, capw) uint32: the device-resident ring (capw lane-aligned);
+    keys (R, N): per-row microbatches, ragged via the counts; meta (3, R)
+    int32 rows: target tenant row, its current fill, and the number of live
+    keys in that row's batch (entries past the count are padding) — packed
+    into one array so an append costs a single small host->device transfer.
+    Each grid step appends one batch at its row's fill offset: the keys are
+    shifted to the fill position with one dynamic_update_slice (outside the
+    kernel, so the kernel body is a pure masked lane copy — no
+    gather/scatter for Mosaic to choke on) and merged into the aliased row
+    block.  The ring is donated: appends mutate it in place on device, and
+    the caller is responsible for tracking fill on the host (it knows
+    exactly what it appended, so no device sync is ever needed).
+
+    Caller contract: fill[i] + count[i] <= capw, rows unique within a call.
+    Returns the updated (T, capw) ring.
+    """
+    r = keys.shape[0]
+    capw = queue.shape[1]
+    buf = _shift_to_fill(keys, meta[1], capw, queue.dtype, aligned)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, capw), lambda ri, meta: (meta[0, ri], 0)),
+            pl.BlockSpec((1, capw), lambda ri, meta: (ri, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, capw), lambda ri, meta: (meta[0, ri], 0)),
+    )
+    return pl.pallas_call(
+        _queue_append_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(queue.shape, queue.dtype),
+        input_output_aliases={1: 0},  # ring aliased past the meta scalars
+        interpret=interpret,
+    )(meta, queue, buf)
+
+
+def _queue_append_dense_kernel(meta_ref, queue_ref, buf_ref, out_ref):
+    """Whole-plane append: every tenant row in ONE grid step.
+
+    The full (T, capw) ring is the resident block; the (2, T) fill/count
+    scalars are read from SMEM (unrolled over the small static T) and the
+    masked copy lands all rows at once — the batched-ingest fast path
+    `enqueue_many` hits when a microbatch covers the whole plane.  The
+    single block covers the whole output, so this variant is functional
+    (no in-kernel aliasing): the jit wrapper donates the ring instead.
+    """
+    t, _ = out_ref.shape
+    fill = jnp.stack([meta_ref[0, i] for i in range(t)])
+    count = jnp.stack([meta_ref[1, i] for i in range(t)])
+    cols = jax.lax.broadcasted_iota(jnp.int32, out_ref.shape, 1)
+    valid = (cols >= fill[:, None]) & (cols < (fill + count)[:, None])
+    out_ref[...] = jnp.where(valid, buf_ref[...], queue_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "aligned"),
+                   donate_argnames=("queue",))
+def queue_append_dense_pallas(queue, keys, meta, *, interpret: bool = True,
+                              aligned: bool = False):
+    """Append one microbatch per tenant row (row i -> tenant i): ONE grid
+    step over the whole (T, capw) ring.  Same contract as
+    `queue_append_pallas` with rows == arange(T) and meta (2, T) =
+    [fill; count], minus the row indirection; the block is the full plane,
+    so T * capw is bounded by VMEM exactly like the stacked tables the
+    plane already keeps resident.
+    """
+    t, capw = queue.shape
+    buf = _shift_to_fill(keys, meta[0], capw, queue.dtype, aligned)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((t, capw), lambda i, meta: (0, 0)),
+            pl.BlockSpec((t, capw), lambda i, meta: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, capw), lambda i, meta: (0, 0)),
+    )
+    return pl.pallas_call(
+        _queue_append_dense_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(queue.shape, queue.dtype),
+        interpret=interpret,
+    )(meta, queue, buf)
 
 
 @functools.partial(jax.jit,

@@ -1,14 +1,17 @@
-"""Counting-plane serving driver: multi-tenant fused ingest + queries.
+"""Counting-plane serving driver: spec-bucketed planes + device-ring ingest.
 
     PYTHONPATH=src python -m repro.launch.serve_counts \
         --tenants 8 --batches 50 --batch 4096
 
-Stands up a `CountService` with T tenants sharing one CML sketch spec,
-pushes a Zipfian event stream through the microbatch queue (every flush is
-ONE fused kernel launch for all tenants), serves ALL tenants' hot-key
-queries with one fused query launch, round-trips the whole plane through a
-checkpoint, and runs a watermark-rotated sliding window with lazy decay
-over an event-time stream (the time-aware half of the query plane).
+Stands up a `CountService` whose tenants span TWO sketch specs (a wide
+CMLS16 plane and a narrow CMS32 metrics plane) plus a watermark-windowed
+tenant, pushes a Zipfian event stream through the device-resident ingest
+rings (`enqueue_many`: one scatter-append launch per plane per microbatch;
+every flush is one fused update launch per plane), serves ALL tenants'
+hot-key queries with one fused query launch per plane, and round-trips the
+whole multi-plane registry through a checkpoint.  The ingest loop runs
+under `jax.transfer_guard_device_to_host("disallow")` — the queue buffers
+provably never cross back to the host.
 """
 from __future__ import annotations
 
@@ -16,13 +19,12 @@ import argparse
 import tempfile
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CMLS16, SketchSpec
-from repro.stream import (CountService, WindowSpec, window_advance_to,
-                          window_init, window_query, window_update)
+import jax
+
+from repro.core import CMLS16, CMS32, SketchSpec
+from repro.stream import CountService, WindowPlane, WindowSpec
 
 
 def main(argv=None) -> None:
@@ -37,60 +39,82 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     spec = SketchSpec(width=args.width, depth=args.depth, counter=CMLS16)
+    metrics_spec = SketchSpec(width=1024, depth=2, counter=CMS32)
     names = [f"tenant_{t:02d}" for t in range(args.tenants)]
     svc = CountService(spec, tenants=names, queue_capacity=args.queue_cap,
                        seed=args.seed)
+    # heterogeneous plane: two CMS32 metrics tenants ride the same service
+    svc.add_tenant("metrics_qps", spec=metrics_spec)
+    svc.add_tenant("metrics_err", spec=metrics_spec)
+    # watermark-windowed tenant: 60s buckets, rotation driven by event time
+    wspec = WindowSpec(sketch=spec, buckets=8, interval=60.0)
+    svc.add_tenant("trending", window=wspec)
     rng = np.random.default_rng(args.seed)
 
     t0 = time.time()
-    for _ in range(args.batches):
-        for t, name in enumerate(names):
-            # each tenant counts its own key universe (offset by tenant id)
-            keys = (rng.zipf(1.3, args.batch) % 10_000) + t * 1_000_000
-            svc.enqueue(name, keys.astype(np.uint32))
-    svc.flush()
+    ts = 0.0
+    with jax.transfer_guard_device_to_host("disallow"):
+        for _ in range(args.batches):
+            events = {}
+            for t, name in enumerate(names):
+                # each tenant counts its own key universe (offset by id)
+                keys = (rng.zipf(1.3, args.batch) % 10_000) + t * 1_000_000
+                events[name] = keys.astype(np.uint32)
+            events["metrics_qps"] = (rng.zipf(1.3, 256) % 500).astype(
+                np.uint32)
+            svc.enqueue_many(events)
+            ts += float(rng.exponential(25.0))
+            svc.enqueue("trending",
+                        (rng.zipf(1.3, args.batch) % 10_000).astype(
+                            np.uint32), ts=ts)
+        svc.flush()
     dt = time.time() - t0
-    total = args.tenants * args.batches * args.batch
-    print(f"[serve_counts] ingested {total} events for {args.tenants} tenants "
+    total = svc.stats["events"]
+    print(f"[serve_counts] ingested {total} events for "
+          f"{len(svc.tenants)} tenants across {len(svc.planes)} planes "
           f"in {dt:.2f}s ({total/dt/1e6:.2f} M events/s, "
-          f"{svc.stats['flushes']} fused launches)")
+          f"{svc.stats['flushes']} flushes, device rings donated "
+          f"end-to-end — no host read-back)")
 
-    # every tenant's hot keys answered by ONE fused query launch
-    probes = np.stack([np.arange(8, dtype=np.uint32) + t * 1_000_000
-                       for t in range(args.tenants)])
+    # every tenant's hot keys answered by one fused query launch per plane
+    probes = np.stack(
+        [np.arange(8, dtype=np.uint32) + t * 1_000_000
+         for t in range(args.tenants)]
+        + [np.arange(8, dtype=np.uint32)] * 3)  # metrics x2 + trending
     t0 = time.time()
     counts = svc.query_all(probes)
     dt_q = time.time() - t0
-    for name in names[:3]:
+    for name in names[:2] + ["metrics_qps"]:
         print(f"[serve_counts] {name} hot-key counts: "
               f"{[round(float(x), 1) for x in np.asarray(counts[name])]}")
-    print(f"[serve_counts] served {args.tenants} tenants x {probes.shape[1]} "
-          f"probes in one fused query launch ({dt_q*1e3:.1f} ms)")
+    # one fused launch per sketch plane + one bucket-fused launch per
+    # windowed tenant
+    launches = sum(len(p.names) if isinstance(p, WindowPlane) else 1
+                   for p in svc.planes)
+    print(f"[serve_counts] served {len(svc.tenants)} tenants x "
+          f"{probes.shape[1]} probes in {launches} fused launches "
+          f"({dt_q*1e3:.1f} ms)")
+
+    # the time-aware tenant: watermark epoch + lazy decay at query time
+    est_w = np.asarray(svc.query("trending", np.arange(8), n_buckets=5))
+    est_d = np.asarray(svc.query("trending", np.arange(8), gamma=0.8))
+    print(f"[serve_counts] trending (last 5 of 8 x 60s buckets, watermark "
+          f"epoch {svc.epoch_of('trending')}): "
+          f"{[round(float(x)) for x in est_w]}")
+    print(f"[serve_counts] trending lazy-decayed (gamma=0.8/interval):    "
+          f"{[round(float(x)) for x in est_d]}")
 
     with tempfile.TemporaryDirectory() as d:
         svc.snapshot(d, step=1)
         svc2 = CountService.restore(d)
-        same = bool((np.asarray(svc2.tables) == np.asarray(svc.tables)).all())
-        print(f"[serve_counts] snapshot/restore roundtrip: tables match={same}, "
-              f"tenants={len(svc2.tenants)}")
-
-    # time-aware plane: watermark-rotated window, decay applied at query time
-    win = window_init(WindowSpec(spec, buckets=8, interval=60.0))
-    key = jax.random.PRNGKey(args.seed)
-    ts = 0.0
-    for _ in range(24):  # event-time stream: ~2.5 batches per interval
-        ts += float(rng.exponential(25.0))
-        win = window_advance_to(win, ts)
-        key, k = jax.random.split(key)
-        ev = (rng.zipf(1.3, args.batch) % 10_000).astype(np.uint32)
-        win = window_update(win, jnp.asarray(ev), k)
-    probe = jnp.arange(8, dtype=jnp.uint32)
-    est_w = np.asarray(window_query(win, probe, n_buckets=5))
-    est_d = np.asarray(window_query(win, probe, gamma=0.8))
-    print(f"[serve_counts] watermark window (last 5 of 8 x 60s, cursor at "
-          f"bucket {int(win.cursor)}): {[round(float(x)) for x in est_w]}")
-    print(f"[serve_counts] lazy-decayed (gamma=0.8 per interval):        "
-          f"{[round(float(x)) for x in est_d]}")
+        probe = np.arange(16, dtype=np.uint32)
+        same = all(
+            bool((np.asarray(svc.query(n, probe))
+                  == np.asarray(svc2.query(n, probe))).all())
+            for n in svc.tenants)
+        print(f"[serve_counts] snapshot/restore roundtrip: queries match="
+              f"{same}, tenants={len(svc2.tenants)}, planes="
+              f"{len(svc2.planes)}, stats={svc2.stats}")
 
 
 if __name__ == "__main__":

@@ -3,20 +3,24 @@
   * `window`  — ring of B bucket sketches (sliding-window counts) and an
     exponential-decay variant (recency-weighted counts), both built from
     the paper's CML counters without changing their semantics.
-  * `service` — multi-tenant registry whose tables are stacked into one
-    (T, d, w) array and ingested by a single fused Pallas kernel launch.
+  * `service` — multi-tenant registry bucketed into spec-sharing planes:
+    each plane stacks its tenants' tables into one (T, d, w) array,
+    buffers events in a device-resident ring (scatter-append kernel), and
+    ingests/serves the whole plane with single fused Pallas launches.
 """
 from repro.stream.window import (DecayedSketch, WindowSpec, WindowedSketch,
                                  decay, decayed_init, decayed_query,
                                  decayed_rotate, decayed_update,
+                                 interval_epoch, window_advance_steps,
                                  window_advance_to, window_init, window_query,
                                  window_rotate, window_update)
-from repro.stream.service import CountService
+from repro.stream.service import CountService, TenantPlane, WindowPlane
 
 __all__ = [
     "WindowSpec", "WindowedSketch", "window_init", "window_update",
-    "window_rotate", "window_advance_to", "window_query",
+    "window_rotate", "window_advance_steps", "window_advance_to",
+    "window_query", "interval_epoch",
     "DecayedSketch", "decay", "decayed_init", "decayed_rotate",
     "decayed_update", "decayed_query",
-    "CountService",
+    "CountService", "TenantPlane", "WindowPlane",
 ]

@@ -1,32 +1,43 @@
-"""Multi-tenant counting service: one fused kernel launch for T tenants.
+"""Multi-tenant counting service: spec-bucketed planes + device-resident ingest.
 
 A production counting plane serves many *logical* sketches — one per
-product surface, per model, per experiment arm.  Launching one update
-kernel per tenant wastes the accelerator on dispatch overhead (the tables
-are KBs-to-MBs; the launch is the cost).  `CountService` therefore:
+product surface, per model, per experiment arm — and they do not all agree
+on geometry.  `CountService` is therefore a registry of **planes**:
 
-  * registers named tenants that share one `SketchSpec` and stacks their
-    tables along a leading axis into a single (T, d, w) device array;
-  * buffers incoming events per tenant in a fixed-capacity host-side
-    microbatch queue (`enqueue`), flushing automatically when a tenant's
-    queue fills;
-  * on `flush`, dedups every tenant's pending events (vmapped) and lands
-    ALL tenants' updates with ONE `fused_update_pallas` launch — the grid
-    walks (tenant, key-chunk) with the per-tenant table VMEM-resident and
-    the table buffer input/output aliased (see kernels/sketch.py);
-  * snapshots/restores the whole plane (tables + queues + RNG lane) via
-    `train/checkpoint`, with tenant names and spec recorded in the
-    manifest metadata so a restored service rebuilds its registry.
+  * tenants sharing one `SketchSpec` stack into a `TenantPlane` whose
+    tables form a single (T, d, w) device array, flushed and queried with
+    ONE fused kernel launch each (`fused_update_pallas` /
+    `fused_query_pallas`, grid (tenant, key-chunk), per-tenant table
+    VMEM-resident, table buffer input/output aliased);
+  * tenants with a *different* spec land in their own plane — heterogeneous
+    widths/depths/counter kinds coexist in one service, each plane paying
+    one launch, and `query_all` fans across planes and reassembles the
+    per-tenant dict;
+  * time-scoped tenants register with a `WindowSpec` and live in a
+    `WindowPlane` of ring-backed `WindowedSketch`es: `enqueue(name, keys,
+    ts=...)` drives watermark rotation from event time
+    (`window_advance_to`), and flushes land every window tenant's active
+    bucket with one fused launch.
 
-Queries are read-your-writes: they flush pending events first.  The read
-path mirrors the ingest path: `query_all` answers every tenant's probes
-with ONE `fused_query_pallas` launch (grid (tenant, key-chunk), table
-VMEM-resident), and `query` is its T=1 case.
+The ingest queue is **device-resident**: each plane owns a (T, capw)
+uint32 ring appended by `kernels.ops.queue_append` — ONE scatter-append
+launch per plane (`queue_append_pallas` on TPU: ring input/output
+aliased, fill counters in SMEM; its bit-identical jitted XLA reference
+elsewhere), so `enqueue` is a device call with no host round-trip — the
+host keeps a deterministic fill mirror (it knows exactly what it
+appended) and `flush` feeds `fused_update_pallas` straight from device
+memory.  Keys are validated at the API boundary (integers in [0, 2^32) —
+no silent truncation).
+
+Queries are read-your-writes: they flush pending events first.  The whole
+service (tables + rings + fill mirrors + RNG lane + stats) snapshots and
+restores via `train/checkpoint`; the manifest metadata records the plane
+layout (schema v2) and restore still accepts the v1 single-plane layout of
+earlier checkpoints.
 """
 from __future__ import annotations
 
-import json
-import os
+import dataclasses
 from typing import Optional, Sequence
 
 import jax
@@ -37,24 +48,275 @@ from repro.core import sketch as sk
 from repro.core.counters import CounterSpec
 from repro.core.sketch import Sketch, SketchSpec
 from repro.kernels import ops
+from repro.stream import window as w
 from repro.train import checkpoint
+
+_KEY_MAX = 0xFFFF_FFFF
+
+
+def _as_keys(keys) -> np.ndarray:
+    """Validate and normalize event/probe keys to a flat uint32 array.
+
+    Floats, negatives, and values past 32 bits are rejected instead of
+    being silently truncated by a blind uint32 cast.
+    """
+    arr = np.asarray(keys)
+    if arr.dtype == np.uint32:
+        return arr.ravel()
+    if not np.issubdtype(arr.dtype, np.integer):
+        raise TypeError(f"keys must be integers, got dtype {arr.dtype}")
+    flat = arr.ravel()
+    if flat.size:
+        lo, hi = flat.min(), flat.max()
+        if lo < 0:
+            raise ValueError(f"keys must be non-negative, got {lo}")
+        if hi > _KEY_MAX:
+            raise ValueError(f"keys must fit in 32 bits, got {hi}")
+    return flat.astype(np.uint32)
+
+
+def _spec_meta(spec: SketchSpec) -> dict:
+    c = spec.counter
+    return {"width": spec.width, "depth": spec.depth, "seed": spec.seed,
+            "counter": {"kind": c.kind, "base": c.base, "bits": c.bits}}
+
+
+def _spec_from_meta(meta: dict) -> SketchSpec:
+    return SketchSpec(width=meta["width"], depth=meta["depth"],
+                      seed=meta["seed"],
+                      counter=CounterSpec(**meta["counter"]))
+
+
+class _RngLane:
+    """Per-plane counter-based PRNG lane: flush number f draws the raw
+    threefry key (seed, f).
+
+    Distinct raw keys give independent threefry streams (the same
+    guarantee `fold_in` provides, computed host-side for free), so a flush
+    costs zero RNG dispatches and no device traffic.  Each plane counts
+    its own flushes from the service seed, exactly as a dedicated
+    single-spec service would — which is what makes a heterogeneous
+    service bit-consistent with one service per spec.  The lane state is
+    one integer, so it snapshots into the manifest metadata.
+    """
+
+    def __init__(self, seed: int, draws: int = 0):
+        self.seed = int(seed) & 0xFFFF_FFFF
+        self.draws = int(draws)
+
+    def next(self) -> np.ndarray:
+        key = np.asarray([self.seed, self.draws], np.uint32)
+        self.draws += 1
+        return key
+
+
+class _DeviceRing:
+    """(T, capw) device ring + deterministic host fill mirror.
+
+    The ring only ever moves host->device (key microbatches) — the mirror
+    is advanced by the same arithmetic the kernel applies, so no read-back
+    is needed for control flow, flush trimming, or snapshots of `fill`.
+    """
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self.queue = ops.queue_init(0, capacity)
+        self.fill = np.zeros((0,), np.int64)
+
+    def add_row(self) -> int:
+        t = self.queue.shape[0]
+        self.queue = jnp.concatenate(
+            [self.queue, ops.queue_init(1, self.capacity)])
+        self.fill = np.concatenate([self.fill, np.zeros((1,), np.int64)])
+        return t
+
+    def free(self, row: int) -> int:
+        return self.capacity - int(self.fill[row])
+
+    def append(self, rows: Sequence[int], batches: Sequence[np.ndarray]
+               ) -> None:
+        """Append per-row microbatches (caller guarantees they fit): one
+        host-side staging pass, then ONE scatter-append launch."""
+        n = max(b.size for b in batches)
+        n_pad = ops.CHUNK * -(-n // ops.CHUNK)  # CHUNK-quantized launches
+        keys = np.zeros((len(rows), n_pad), np.uint32)
+        count = np.empty(len(rows), np.int32)
+        for i, b in enumerate(batches):
+            keys[i, :b.size] = b
+            count[i] = b.size
+        fill = self.fill[list(rows)].astype(np.int32)
+        self.queue = ops.queue_append(self.queue, keys,
+                                      np.asarray(rows, np.int32), fill, count)
+        for r, b in zip(rows, batches):
+            self.fill[r] += b.size
+
+    def live_slice(self):
+        """(queue[:, :cols], weights (T, cols)) for a flush, device-side.
+
+        cols is the fullest row's fill rounded up to the kernel CHUNK (so
+        launch shapes stay quantized); stale slots ride along with weight
+        0.  Only the (T,) fill vector crosses to the device (ONE fused
+        dispatch, `ops.flush_inputs`).
+        """
+        cols = min(self.queue.shape[1],
+                   ops.CHUNK * -(-int(self.fill.max()) // ops.CHUNK))
+        return ops.flush_inputs(self.queue, self.fill.astype(np.int32), cols)
+
+    def reset(self) -> None:
+        self.fill[:] = 0
+
+
+class TenantPlane:
+    """Tenants sharing one SketchSpec: stacked (T, d, w) tables + ring."""
+
+    def __init__(self, spec: SketchSpec, queue_capacity: int, seed: int = 0):
+        self.spec = spec
+        self.tables = jnp.zeros((0, spec.depth, spec.width),
+                                spec.counter.dtype)
+        self.ring = _DeviceRing(queue_capacity)
+        self.rng = _RngLane(seed)
+        self.names: list[str] = []
+
+    @property
+    def queue_capacity(self) -> int:
+        return self.ring.capacity
+
+    def add(self, name: str) -> int:
+        zero = jnp.zeros((1, self.spec.depth, self.spec.width),
+                         self.spec.counter.dtype)
+        self.tables = jnp.concatenate([self.tables, zero], axis=0)
+        self.names.append(name)
+        return self.ring.add_row()
+
+    def pending(self) -> int:
+        return int(self.ring.fill.sum())
+
+    def flush(self) -> int:
+        """Land every tenant's pending events in one fused launch."""
+        pending = self.pending()
+        if pending == 0:
+            return 0
+        keys, weights = self.ring.live_slice()
+        self.tables = ops.update_many(self.tables, self.spec, keys,
+                                      self.rng.next(), weights=weights)
+        self.ring.reset()
+        return pending
+
+    def query_rows(self, keys: jnp.ndarray) -> jnp.ndarray:
+        """(T, N) estimates, ONE fused launch (keys (N,) broadcast or (T, N))."""
+        return ops.query_many(self.tables, self.spec, keys)
+
+
+class WindowPlane:
+    """Watermark-windowed tenants sharing one WindowSpec.
+
+    Each tenant owns a ring-backed `WindowedSketch`; ingest buffers in the
+    shared device ring and a flush gathers every tenant's ACTIVE bucket
+    into a (T, d, w) stack for one fused update launch, then scatters the
+    buckets back.  Event time (`ts`) drives rotation: crossing an interval
+    boundary flushes buffered events into their own interval's bucket
+    first, then advances the ring (so bucket b still holds exactly the
+    events of one interval, as in the single-tenant watermark path).
+    """
+
+    def __init__(self, wspec: w.WindowSpec, queue_capacity: int,
+                 seed: int = 0):
+        self.wspec = wspec
+        self.wins: list[w.WindowedSketch] = []
+        self.ring = _DeviceRing(queue_capacity)
+        self.rng = _RngLane(seed)
+        self.names: list[str] = []
+        # host mirror of each ring's watermark interval (the device epoch
+        # leaf is kept in lockstep): enqueue-time watermark checks must not
+        # read a device scalar back on the ingest hot path
+        self.epochs: list[Optional[int]] = []
+
+    @property
+    def spec(self) -> SketchSpec:
+        return self.wspec.sketch
+
+    @property
+    def queue_capacity(self) -> int:
+        return self.ring.capacity
+
+    def add(self, name: str) -> int:
+        self.wins.append(w.window_init(self.wspec))
+        self.names.append(name)
+        self.epochs.append(None)
+        return self.ring.add_row()
+
+    def pending(self) -> int:
+        return int(self.ring.fill.sum())
+
+    def advance(self, row: int, ts, flush_cb) -> None:
+        """Advance tenant `row`'s watermark to own `ts`, flushing first if
+        buffered events would otherwise leak into the new interval.
+
+        The watermark comparison runs against the host epoch mirror, so a
+        same-interval enqueue (the common case) costs no device work and
+        no read-back; a boundary crossing advances the ring with the
+        traced `window_advance_steps` (the device epoch leaf advances in
+        lockstep, still without a read-back)."""
+        target = w.interval_epoch(self.wspec, ts)
+        have = self.epochs[row]
+        if have is None:
+            self.wins[row] = dataclasses.replace(
+                self.wins[row], epoch=jnp.asarray(target, jnp.int32))
+            self.epochs[row] = target
+            return
+        if target < have:
+            raise ValueError(
+                f"non-monotone watermark: ts {ts} (interval {target}) is "
+                f"behind the ring's watermark interval {have}")
+        if target == have:
+            return
+        if self.ring.fill[row]:
+            flush_cb()  # rebinds self.wins[row]: re-read before advancing
+        self.wins[row] = w.window_advance_steps(self.wins[row],
+                                                target - have)
+        self.epochs[row] = target
+
+    def flush(self) -> int:
+        """Land every tenant's pending events in its ACTIVE bucket: one
+        fused launch over the gathered (T, d, w) active-bucket stack."""
+        pending = self.pending()
+        if pending == 0:
+            return 0
+        keys, weights = self.ring.live_slice()
+        active = jnp.stack([
+            jax.lax.dynamic_index_in_dim(win.tables, win.cursor, 0,
+                                         keepdims=False)
+            for win in self.wins])
+        active = ops.update_many(active, self.spec, keys, self.rng.next(),
+                                 weights=weights)
+        for i, win in enumerate(self.wins):
+            tables = jax.lax.dynamic_update_index_in_dim(
+                win.tables, active[i], win.cursor, 0)
+            self.wins[i] = w.WindowedSketch(tables=tables, cursor=win.cursor,
+                                            spec=win.spec, epoch=win.epoch)
+        self.ring.reset()
+        return pending
+
+    def query_row(self, row: int, keys: jnp.ndarray, **kw) -> jnp.ndarray:
+        """Window estimate for one tenant (fused in-kernel bucket reduce)."""
+        return w.window_query(self.wins[row], keys, **kw)
 
 
 class CountService:
-    """Registry of named sketches with fused microbatch ingest."""
+    """Registry of named sketches bucketed into fused-ingest planes."""
 
-    def __init__(self, spec: SketchSpec, tenants: Sequence[str] = (),
-                 queue_capacity: int = 4096, seed: int = 0):
+    def __init__(self, spec: Optional[SketchSpec] = None,
+                 tenants: Sequence[str] = (), queue_capacity: int = 4096,
+                 seed: int = 0):
         if queue_capacity < 1:
             raise ValueError("queue_capacity must be positive")
-        self.spec = spec
+        self.default_spec = spec
         self.queue_capacity = int(queue_capacity)
-        self._index: dict[str, int] = {}
-        self.tables = jnp.zeros((0, spec.depth, spec.width),
-                                spec.counter.dtype)
-        self._queue = np.zeros((0, self.queue_capacity), np.uint32)
-        self._fill = np.zeros((0,), np.int64)
-        self._rng = jax.random.PRNGKey(seed)
+        self.seed = int(seed)
+        self._planes: dict[SketchSpec, TenantPlane] = {}
+        self._wplanes: dict[w.WindowSpec, WindowPlane] = {}
+        self._where: dict[str, tuple[object, int]] = {}
+        self._order: list[str] = []
         self.stats = {"events": 0, "flushes": 0}
         for name in tenants:
             self.add_tenant(name)
@@ -62,95 +324,185 @@ class CountService:
     # ---- registry ----
 
     @property
+    def spec(self) -> Optional[SketchSpec]:
+        """The default SketchSpec (tenants registered without an explicit
+        spec use it) — kept for source compatibility with the single-spec
+        service."""
+        return self.default_spec
+
+    @property
     def tenants(self) -> list[str]:
-        return sorted(self._index, key=self._index.get)
+        return list(self._order)
 
-    def add_tenant(self, name: str) -> int:
-        """Register a tenant; returns its row in the stacked table.
+    @property
+    def planes(self) -> list[object]:
+        """All planes, sketch planes first (inspection/benchmark hook)."""
+        return list(self._planes.values()) + list(self._wplanes.values())
 
-        Growing T reshapes the stacked array, so the next flush recompiles
-        the fused kernel for the new tenant count (amortized: tenant churn
-        is rare next to ingest).
+    def add_tenant(self, name: str, spec: Optional[SketchSpec] = None,
+                   window: Optional[w.WindowSpec] = None) -> int:
+        """Register a tenant; returns its row in its plane's stacked table.
+
+        spec: sketch geometry (defaults to the service-level spec).
+        window: register a watermark-windowed tenant instead (ring-backed
+        `WindowedSketch`; `enqueue(..., ts=...)` drives rotation).  Growing
+        a plane reshapes its stacked arrays, so that plane's next flush
+        recompiles the fused kernel (amortized: tenant churn is rare next
+        to ingest).
         """
-        if name in self._index:
+        if name in self._where:
             raise ValueError(f"tenant {name!r} already registered")
-        t = len(self._index)
-        self._index[name] = t
-        zero = jnp.zeros((1, self.spec.depth, self.spec.width),
-                         self.spec.counter.dtype)
-        self.tables = jnp.concatenate([self.tables, zero], axis=0)
-        self._queue = np.concatenate(
-            [self._queue, np.zeros((1, self.queue_capacity), np.uint32)])
-        self._fill = np.concatenate([self._fill, np.zeros((1,), np.int64)])
-        return t
+        if window is not None:
+            if spec is not None and spec != window.sketch:
+                raise ValueError("pass the sketch spec inside WindowSpec "
+                                 "for windowed tenants")
+            plane = self._wplanes.get(window)
+            if plane is None:
+                plane = self._wplanes.setdefault(
+                    window, WindowPlane(window, self.queue_capacity,
+                                        self.seed))
+        else:
+            spec = spec or self.default_spec
+            if spec is None:
+                raise ValueError("no spec: pass one (or a WindowSpec), or "
+                                 "construct the service with a default")
+            plane = self._planes.get(spec)
+            if plane is None:
+                plane = self._planes.setdefault(
+                    spec, TenantPlane(spec, self.queue_capacity, self.seed))
+        row = plane.add(name)
+        self._where[name] = (plane, row)
+        self._order.append(name)
+        return row
 
-    def _row(self, name: str) -> int:
-        if name not in self._index:
+    def _lookup(self, name: str) -> tuple[object, int]:
+        if name not in self._where:
             raise KeyError(f"unknown tenant {name!r}; have {self.tenants}")
-        return self._index[name]
+        return self._where[name]
+
+    def spec_of(self, name: str) -> SketchSpec:
+        plane, _ = self._lookup(name)
+        return plane.spec
+
+    def epoch_of(self, name: str) -> Optional[int]:
+        """Watermark interval index of a windowed tenant (None until the
+        first timestamped enqueue)."""
+        plane, row = self._lookup(name)
+        if not isinstance(plane, WindowPlane):
+            raise ValueError(f"tenant {name!r} is not windowed")
+        return plane.epochs[row]
 
     def sketch_of(self, name: str) -> Sketch:
-        """Flushed view of one tenant's sketch (shares the table slice)."""
+        """Flushed view of one tenant's sketch (shares the table slice).
+
+        For windowed tenants this is the ACTIVE bucket's sketch."""
         self.flush()
-        return Sketch(table=self.tables[self._row(name)], spec=self.spec)
+        plane, row = self._lookup(name)
+        if isinstance(plane, WindowPlane):
+            win = plane.wins[row]
+            table = jax.lax.dynamic_index_in_dim(win.tables, win.cursor, 0,
+                                                 keepdims=False)
+            return Sketch(table=table, spec=plane.spec)
+        return Sketch(table=plane.tables[row], spec=plane.spec)
 
     # ---- ingest ----
 
-    def enqueue(self, name: str, keys) -> None:
-        """Buffer events for a tenant; auto-flushes on queue pressure."""
-        t = self._row(name)
-        keys = np.asarray(keys, np.uint32).ravel()
-        self.stats["events"] += keys.size
-        cap = self.queue_capacity
+    def enqueue(self, name: str, keys, ts=None) -> None:
+        """Buffer events for a tenant in its plane's device ring.
+
+        Auto-flushes on queue pressure.  `ts` (event time) is required
+        semantics for windowed tenants: it advances the tenant's watermark
+        (`window_advance_to`) before the events are buffered, flushing
+        first when the batch crosses into a new interval.
+        """
+        plane, row = self._lookup(name)
+        keys = _as_keys(keys)
+        if ts is not None:
+            if not isinstance(plane, WindowPlane):
+                raise ValueError(f"tenant {name!r} is not windowed; "
+                                 "register with a WindowSpec to use ts")
+            plane.advance(row, ts, self.flush)
+        self.stats["events"] += int(keys.size)
+        cap = plane.queue_capacity
         while keys.size:
-            free = cap - self._fill[t]
+            free = plane.ring.free(row)
             if free == 0:
                 self.flush()
                 free = cap
             take = min(free, keys.size)
-            self._queue[t, self._fill[t]:self._fill[t] + take] = keys[:take]
-            self._fill[t] += take
+            plane.ring.append([row], [keys[:take]])
             keys = keys[take:]
 
-    def flush(self) -> int:
-        """Land every tenant's pending events in one fused launch.
+    def enqueue_many(self, events: dict, ts=None) -> None:
+        """Buffer several tenants' microbatches with ONE scatter-append
+        launch per plane (the batched regime `bench_ingest` measures).
 
-        Returns the number of events ingested.  The upload is trimmed to
-        the fullest tenant's fill, rounded up to the kernel CHUNK, so a
-        nearly-empty queue doesn't ship (T, queue_capacity) to the device;
-        within the trimmed slice, stale slots (beyond each tenant's fill)
-        ride along with weight 0 — no-ops in the kernel.  The launch shape
-        therefore varies only in CHUNK-quantized steps (at most
-        queue_capacity / CHUNK distinct compilations).
+        `ts` carries the same contract as `enqueue`: it advances every
+        windowed tenant's watermark and raises for plain tenants (instead
+        of silently dropping the event-time semantics).  Falls back to
+        per-tenant `enqueue` for any batch that does not fit its tenant's
+        free queue space in one piece.
         """
-        pending = int(self._fill.sum())
-        if pending == 0:
-            return 0
-        self._rng, r = jax.random.split(self._rng)
-        cols = min(self.queue_capacity,
-                   ops.CHUNK * -(-int(self._fill.max()) // ops.CHUNK))
-        weights = (np.arange(cols)[None, :]
-                   < self._fill[:, None]).astype(np.float32)
-        self.tables = ops.update_many(self.tables, self.spec,
-                                      jnp.asarray(self._queue[:, :cols]), r,
-                                      weights=jnp.asarray(weights))
-        self._fill[:] = 0
-        self.stats["flushes"] += 1
-        return pending
+        by_plane: dict[int, tuple[object, list, list]] = {}
+        overflow: list[tuple[str, np.ndarray]] = []
+        for name, keys in events.items():
+            plane, row = self._lookup(name)
+            keys = _as_keys(keys)
+            if ts is not None:
+                if not isinstance(plane, WindowPlane):
+                    raise ValueError(f"tenant {name!r} is not windowed; "
+                                     "register with a WindowSpec to use ts")
+                plane.advance(row, ts, self.flush)
+            if keys.size == 0:
+                continue
+            if keys.size > plane.ring.free(row):
+                overflow.append((name, keys))
+                continue
+            _, rows, batches = by_plane.setdefault(id(plane), (plane, [], []))
+            rows.append(row)
+            batches.append(keys)
+            self.stats["events"] += int(keys.size)
+        for plane, rows, batches in by_plane.values():
+            plane.ring.append(rows, batches)
+        for name, keys in overflow:
+            self.enqueue(name, keys)
+
+    def flush(self) -> int:
+        """Land every plane's pending events (one fused launch per plane).
+
+        Returns the number of events ingested; the per-plane launch shape
+        is CHUNK-quantized via the fill trim (see `_DeviceRing.live_slice`).
+        Each plane draws from its own PRNG lane (seeded with the service
+        seed), so per-plane state evolves exactly as in a dedicated
+        single-spec service.
+        """
+        total = sum(plane.flush() for plane in self.planes)
+        if total:
+            self.stats["flushes"] += 1
+        return total
 
     # ---- serving ----
 
-    def query(self, name: str, keys) -> jnp.ndarray:
+    def query(self, name: str, keys, **window_kw) -> jnp.ndarray:
         """Estimated counts for one tenant (flushes first: read-your-writes).
 
-        One fused-kernel launch (the T=1 case of `query_all`'s kernel)."""
+        Plain tenants: one fused-kernel launch (the T=1 case of
+        `query_all`'s kernel).  Windowed tenants: the fused window
+        reduction over the ring (`window_kw` forwards n_buckets / mode /
+        gamma / engine)."""
         self.flush()
-        t = self._row(name)
-        return ops.query(Sketch(table=self.tables[t], spec=self.spec),
-                         jnp.asarray(np.asarray(keys, np.uint32)))
+        plane, row = self._lookup(name)
+        probes = jnp.asarray(_as_keys(keys))
+        if isinstance(plane, WindowPlane):
+            return plane.query_row(row, probes, **window_kw)
+        if window_kw:
+            raise ValueError(f"tenant {name!r} is not windowed; "
+                             f"window args {sorted(window_kw)} do not apply")
+        return ops.query(Sketch(table=plane.tables[row], spec=plane.spec),
+                         probes)
 
     def query_all(self, keys) -> dict[str, jnp.ndarray]:
-        """Estimated counts for EVERY tenant in ONE fused kernel launch.
+        """Estimated counts for EVERY tenant: one fused launch per plane.
 
         keys: (N,) probes shared by all tenants, or (T, N) per-tenant
         probes (row order = registry order, `self.tenants`).  Returns
@@ -158,56 +510,144 @@ class CountService:
         `query` per tenant.  Flushes first: read-your-writes.
         """
         self.flush()
-        keys = jnp.asarray(np.asarray(keys, np.uint32))
-        if keys.ndim == 2 and keys.shape[0] != len(self._index):
-            raise ValueError(f"per-tenant probes need {len(self._index)} "
+        keys = np.asarray(keys)
+        per_tenant = keys.ndim == 2
+        if per_tenant and keys.shape[0] != len(self._order):
+            raise ValueError(f"per-tenant probes need {len(self._order)} "
                              f"rows, got {keys.shape[0]}")
-        est = ops.query_many(self.tables, self.spec, keys)
-        return {name: est[t] for name, t in self._index.items()}
+        keys = _as_keys(keys).reshape(keys.shape)
+        out: dict[str, jnp.ndarray] = {}
+        row_of = {name: i for i, name in enumerate(self._order)}
+        for plane in self._planes.values():
+            if per_tenant:
+                probes = jnp.asarray(
+                    np.stack([keys[row_of[n]] for n in plane.names]))
+            else:
+                probes = jnp.asarray(keys)
+            est = plane.query_rows(probes)
+            for i, n in enumerate(plane.names):
+                out[n] = est[i]
+        for plane in self._wplanes.values():
+            for i, n in enumerate(plane.names):
+                probe = keys[row_of[n]] if per_tenant else keys
+                out[n] = plane.query_row(i, jnp.asarray(probe))
+        return out
 
     # ---- persistence ----
 
     def _meta(self) -> dict:
-        c = self.spec.counter
-        return {
-            "tenants": self.tenants,
+        meta = {
+            "version": 2,
             "queue_capacity": self.queue_capacity,
-            "spec": {"width": self.spec.width, "depth": self.spec.depth,
-                     "seed": self.spec.seed,
-                     "counter": {"kind": c.kind, "base": c.base,
-                                 "bits": c.bits}},
+            "seed": self.seed,
+            "tenant_order": self.tenants,
+            "stats": dict(self.stats),
+            "planes": [{"spec": _spec_meta(p.spec), "tenants": list(p.names),
+                        "rng_draws": p.rng.draws}
+                       for p in self._planes.values()],
+            "windows": [{"sketch": _spec_meta(p.spec),
+                         "buckets": p.wspec.buckets,
+                         "interval": p.wspec.interval,
+                         "tenants": list(p.names),
+                         "rng_draws": p.rng.draws}
+                        for p in self._wplanes.values()],
         }
+        if self.default_spec is not None:
+            meta["spec"] = _spec_meta(self.default_spec)  # v1 reader compat
+            meta["tenants"] = self.tenants
+        return meta
+
+    def _tree(self) -> dict:
+        planes = [{"tables": p.tables,
+                   "queue": p.ring.queue,
+                   "fill": jnp.asarray(p.ring.fill)}
+                  for p in self._planes.values()]
+        windows = [{"tables": jnp.stack([x.tables for x in p.wins]),
+                    "cursor": jnp.stack([x.cursor for x in p.wins]),
+                    "epoch": jnp.asarray([
+                        -1 if x.epoch is None else int(x.epoch)
+                        for x in p.wins], jnp.int32),
+                    "queue": p.ring.queue,
+                    "fill": jnp.asarray(p.ring.fill)}
+                   for p in self._wplanes.values()]
+        return {"planes": planes, "windows": windows}
 
     def snapshot(self, root: str, step: int) -> str:
-        """Atomic checkpoint of the whole plane (pending events included)."""
-        tree = {"tables": self.tables,
-                "queue": jnp.asarray(self._queue),
-                "fill": jnp.asarray(self._fill),
-                "rng": self._rng}
-        return checkpoint.save(root, step, tree, metadata=self._meta())
+        """Atomic checkpoint of every plane (pending ring events included)."""
+        return checkpoint.save(root, step, self._tree(),
+                               metadata=self._meta())
 
     @classmethod
     def restore(cls, root: str, step: Optional[int] = None) -> "CountService":
-        """Rebuild a service (registry + tables + queues) from a snapshot."""
-        if step is None:
-            step = checkpoint.latest_step(root)
-            if step is None:
-                raise FileNotFoundError(f"no checkpoint under {root}")
-        with open(os.path.join(root, f"step_{step:08d}", "manifest.json")) as f:
-            meta = json.load(f)["metadata"]
-        spec = SketchSpec(width=meta["spec"]["width"],
-                          depth=meta["spec"]["depth"],
-                          seed=meta["spec"]["seed"],
-                          counter=CounterSpec(**meta["spec"]["counter"]))
+        """Rebuild a service (registry + planes + rings) from a snapshot.
+
+        Accepts both the v2 multi-plane manifest layout and the original
+        v1 single-plane layout (whose host queue is replayed into the
+        device ring)."""
+        meta, step = checkpoint.load_metadata(root, step)
+        if meta.get("version", 1) < 2:
+            return cls._restore_v1(root, step, meta)
+        default = (_spec_from_meta(meta["spec"]) if "spec" in meta else None)
+        svc = cls(default, queue_capacity=meta["queue_capacity"],
+                  seed=meta.get("seed", 0))
+        plane_of: dict[str, dict] = {}
+        for pm in meta["planes"]:
+            for name in pm["tenants"]:
+                plane_of[name] = {"spec": _spec_from_meta(pm["spec"])}
+        for wm in meta["windows"]:
+            wspec = w.WindowSpec(sketch=_spec_from_meta(wm["sketch"]),
+                                 buckets=wm["buckets"],
+                                 interval=wm["interval"])
+            for name in wm["tenants"]:
+                plane_of[name] = {"window": wspec}
+        for name in meta["tenant_order"]:
+            svc.add_tenant(name, **plane_of[name])
+        tree, _ = checkpoint.restore(root, svc._tree(), step=step)
+        for p, pm, leaves in zip(svc._planes.values(), meta["planes"],
+                                 tree["planes"]):
+            p.tables = leaves["tables"]
+            p.ring.queue = leaves["queue"]
+            p.ring.fill = np.asarray(leaves["fill"], np.int64)
+            p.rng.draws = int(pm.get("rng_draws", 0))
+        for p, wm, leaves in zip(svc._wplanes.values(), meta["windows"],
+                                 tree["windows"]):
+            for i in range(len(p.wins)):
+                epoch = int(leaves["epoch"][i])
+                p.wins[i] = w.WindowedSketch(
+                    tables=leaves["tables"][i], cursor=leaves["cursor"][i],
+                    spec=p.wspec,
+                    epoch=None if epoch < 0 else jnp.asarray(epoch,
+                                                             jnp.int32))
+                p.epochs[i] = None if epoch < 0 else epoch
+            p.ring.queue = leaves["queue"]
+            p.ring.fill = np.asarray(leaves["fill"], np.int64)
+            p.rng.draws = int(wm.get("rng_draws", 0))
+        svc.stats = dict(meta.get("stats", svc.stats))
+        return svc
+
+    @classmethod
+    def _restore_v1(cls, root: str, step: int, meta: dict) -> "CountService":
+        """Restore a pre-plane (single-spec, host-queue) checkpoint: load
+        the stacked tables directly and replay the persisted host queue
+        into the device ring."""
+        spec = _spec_from_meta(meta["spec"])
         svc = cls(spec, tenants=meta["tenants"],
                   queue_capacity=meta["queue_capacity"])
-        target = {"tables": svc.tables,
-                  "queue": jnp.asarray(svc._queue),
-                  "fill": jnp.asarray(svc._fill),
-                  "rng": svc._rng}
+        plane = next(iter(svc._planes.values()))
+        target = {"tables": plane.tables,
+                  "queue": jax.ShapeDtypeStruct(
+                      (len(meta["tenants"]), meta["queue_capacity"]),
+                      jnp.uint32),
+                  "fill": jax.ShapeDtypeStruct((len(meta["tenants"]),),
+                                               jnp.int64)}
         tree, _ = checkpoint.restore(root, target, step=step)
-        svc.tables = tree["tables"]
-        svc._queue = np.asarray(tree["queue"], np.uint32)
-        svc._fill = np.asarray(tree["fill"], np.int64)
-        svc._rng = jnp.asarray(tree["rng"], jnp.uint32)
+        plane.tables = tree["tables"]
+        queue = np.asarray(tree["queue"], np.uint32)
+        fill = np.asarray(tree["fill"], np.int64)
+        for t in range(queue.shape[0]):
+            if fill[t]:
+                plane.ring.append([t], [queue[t, :fill[t]]])
+        # the v1 split-chain rng leaf has no counter-lane equivalent; the
+        # restored plane restarts its lane (forward determinism only)
+        svc.stats = dict(meta.get("stats", svc.stats))
         return svc

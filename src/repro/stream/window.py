@@ -98,11 +98,16 @@ class WindowedSketch:
         return Sketch(table=self.tables[b], spec=self.spec.sketch)
 
 
-def window_init(spec: WindowSpec) -> WindowedSketch:
+def window_init(spec: WindowSpec, epoch: int | None = None) -> WindowedSketch:
+    """Fresh ring.  `epoch` pre-seeds the watermark (interval index of the
+    active bucket) — required for the traced advance paths (`routed_window_update`
+    with an event-time epoch), where a None epoch cannot be initialized
+    inside the trace."""
     s = spec.sketch
     tables = jnp.zeros((spec.buckets, s.depth, s.width), s.counter.dtype)
-    return WindowedSketch(tables=tables, cursor=jnp.zeros((), jnp.int32),
-                          spec=spec)
+    return WindowedSketch(
+        tables=tables, cursor=jnp.zeros((), jnp.int32), spec=spec,
+        epoch=None if epoch is None else jnp.asarray(epoch, jnp.int32))
 
 
 def window_update(win: WindowedSketch, keys: jnp.ndarray, rng: jax.Array,
@@ -117,6 +122,13 @@ def window_update(win: WindowedSketch, keys: jnp.ndarray, rng: jax.Array,
     return dataclasses.replace(win, tables=tables)
 
 
+def interval_epoch(spec: WindowSpec, ts) -> int:
+    """Interval index (watermark epoch) owning event timestamp `ts`."""
+    if spec.interval <= 0:
+        raise ValueError("event-time epochs need WindowSpec.interval > 0")
+    return int(math.floor(float(ts) / spec.interval))
+
+
 def window_rotate(win: WindowedSketch) -> WindowedSketch:
     """Advance the ring one interval: the oldest bucket becomes the new
     (zeroed) active bucket.  Call on a fixed wall-clock cadence (or let
@@ -125,6 +137,29 @@ def window_rotate(win: WindowedSketch) -> WindowedSketch:
     zero = jnp.zeros(win.tables.shape[1:], win.tables.dtype)
     tables = jax.lax.dynamic_update_index_in_dim(win.tables, zero, nxt, 0)
     return dataclasses.replace(win, tables=tables, cursor=nxt)
+
+
+def window_advance_steps(win: WindowedSketch, steps) -> WindowedSketch:
+    """Advance the ring `steps` >= 0 rotations, fully traced (jit/shard_map
+    safe: `steps` may be a device scalar).
+
+    Equivalent to `steps` successive `window_rotate`s but in one masked
+    zeroing: bucket b is cleared iff its cursor offset 1..steps is crossed
+    (steps >= B clears every bucket — the whole ring predates the new
+    window).  The stored epoch, when present, advances by `steps`, so this
+    is the data-plane half of watermark rotation; `window_advance_to` is
+    the host-side wrapper that derives `steps` from a timestamp and
+    enforces monotonicity.
+    """
+    b = win.spec.buckets
+    steps = jnp.asarray(steps, jnp.int32)
+    off = (jnp.arange(b, dtype=jnp.int32) - win.cursor - 1) % b  # 0 = next
+    cleared = (off < steps) | (steps >= b)
+    tables = jnp.where(cleared[:, None, None], jnp.zeros_like(win.tables),
+                       win.tables)
+    epoch = None if win.epoch is None else win.epoch + steps
+    return dataclasses.replace(win, tables=tables,
+                               cursor=(win.cursor + steps) % b, epoch=epoch)
 
 
 def window_advance_to(win: WindowedSketch, ts) -> WindowedSketch:
@@ -137,10 +172,7 @@ def window_advance_to(win: WindowedSketch, ts) -> WindowedSketch:
     stored epoch); timestamps may jitter within one interval, but a
     timestamp regressing past an interval boundary raises.
     """
-    interval = win.spec.interval
-    if interval <= 0:
-        raise ValueError("window_advance_to needs WindowSpec.interval > 0")
-    epoch = int(math.floor(float(ts) / interval))
+    epoch = interval_epoch(win.spec, ts)
     if win.epoch is None:
         return dataclasses.replace(win, epoch=jnp.asarray(epoch, jnp.int32))
     have = int(win.epoch)
@@ -151,15 +183,7 @@ def window_advance_to(win: WindowedSketch, ts) -> WindowedSketch:
     steps = epoch - have
     if steps == 0:
         return win
-    b = win.spec.buckets
-    if steps >= b:
-        # everything in the ring predates the new window: zero it in one go
-        win = dataclasses.replace(
-            win, tables=jnp.zeros_like(win.tables),
-            cursor=(win.cursor + steps) % b)
-    else:
-        for _ in range(steps):
-            win = window_rotate(win)
+    win = window_advance_steps(win, steps)
     return dataclasses.replace(win, epoch=jnp.asarray(epoch, jnp.int32))
 
 

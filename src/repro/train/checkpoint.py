@@ -76,6 +76,21 @@ def latest_step(root: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def load_metadata(root: str, step: Optional[int] = None):
+    """(metadata, step) of a checkpoint without loading any leaves.
+
+    Consumers that encode their registry layout in the manifest metadata
+    (e.g. the CountService multi-plane schema) read it first to build the
+    restore target tree, then call `restore` with that target.
+    """
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {root}")
+    with open(os.path.join(root, f"step_{step:08d}", "manifest.json")) as f:
+        return json.load(f)["metadata"], step
+
+
 def restore(root: str, target, step: Optional[int] = None):
     """Restore onto `target` (abstract or concrete tree). Elastic: leaves are
     device_put to the *target's* shardings, whatever mesh wrote the file."""

@@ -194,6 +194,78 @@ def test_key_routed_window_multidevice():
 
 
 @pytest.mark.slow
+def test_key_routed_window_epoch_driven_multidevice():
+    """Watermark plumbing through the routed update: the event stream's
+    epoch (replicated scalar) rotates every shard's ring inside
+    `routed_window_update` — no caller-cadence window_rotate — and the
+    rings stay bucket-aligned fleet-wide."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.core import SketchSpec, CMLS16, sharded
+        from repro.stream import WindowSpec, window_init
+        from repro.stream import window as W
+
+        mesh = jax.make_mesh((8,), ("data",))
+        spec = SketchSpec(width=2048, depth=3, counter=CMLS16)
+        wspec = WindowSpec(sketch=spec, buckets=4, interval=60.0)
+        win0 = window_init(wspec, epoch=0)
+        tables = jnp.stack([win0.tables] * 8)
+        cursor = jnp.zeros((8,), jnp.int32)
+        epoch_leaf = jnp.zeros((8,), jnp.int32)
+        rng = np.random.default_rng(0)
+
+        def upd(tb, cur, ep, k, r, epoch):
+            w = W.WindowedSketch(tables=tb[0], cursor=cur[0], spec=wspec,
+                                 epoch=ep[0])
+            w = sharded.routed_window_update(w, k[0], r[0], "data",
+                                             capacity=512, epoch=epoch)
+            return w.tables[None], w.cursor[None], w.epoch[None]
+
+        run = shard_map(upd, mesh=mesh,
+                        in_specs=(P("data"), P("data"), P("data"),
+                                  P("data"), P("data"), P()),
+                        out_specs=(P("data"), P("data"), P("data")))
+        key = jax.random.PRNGKey(0)
+        all_rot = []
+        # event-time epochs 0, 1, 2 (each batch lands in its own bucket)
+        for ep in range(3):
+            keys = jnp.asarray((rng.zipf(1.3, 8 * 1024) % 4096)
+                               .astype(np.uint32)).reshape(8, 1024)
+            all_rot.append(np.asarray(keys).ravel())
+            key, k = jax.random.split(key)
+            rngs = jax.random.split(k, 8)
+            tables, cursor, epoch_leaf = run(tables, cursor, epoch_leaf,
+                                             keys, rngs,
+                                             jnp.asarray(ep, jnp.int32))
+        assert (np.asarray(cursor) == 2).all()
+        assert (np.asarray(epoch_leaf) == 2).all()
+
+        def q(tb, cur, k):
+            w = W.WindowedSketch(tables=tb[0], cursor=cur[0], spec=wspec)
+            return sharded.routed_window_query(w, k[0], "data", capacity=512,
+                                               n_buckets=2,
+                                               engine="jnp")[None]
+
+        probe = jnp.tile(jnp.arange(512, dtype=jnp.uint32)[None], (8, 1))
+        est = np.asarray(shard_map(q, mesh=mesh,
+                                   in_specs=(P("data"), P("data"),
+                                             P("data")),
+                                   out_specs=P("data"))(tables, cursor,
+                                                        probe))
+        assert np.allclose(est, est[0:1], atol=1e-5), "shards disagree"
+        window_events = np.concatenate(all_rot[-2:])
+        uniq, true = np.unique(window_events, return_counts=True)
+        sel = uniq < 512
+        rel = np.abs(est[0][uniq[sel]] - true[sel]) / true[sel]
+        print("ARE", rel.mean())
+        assert rel.mean() < 0.4
+    """)
+    assert "ARE" in out
+
+
+@pytest.mark.slow
 def test_lazy_pmax_merge_multidevice():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
