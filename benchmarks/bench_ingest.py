@@ -59,7 +59,8 @@ METHODOLOGY = {
                    "capacity-filling microbatches (enqueue_many -> ONE "
                    "append launch per plane on the device path; NumPy "
                    "slice staging on the host path) then flushes, with "
-                   "ops.update_many stubbed to identity in BOTH paths so "
+                   "the fused update (ops.update_many AND the active-row "
+                   "ops.update_rows) stubbed to identity in BOTH paths so "
                    "only the queue mechanics differ: device = append "
                    "launch + fused on-device slice/weight-mask from the "
                    "(T,) fill vector; host = np staging + (T, cols) "
@@ -67,7 +68,11 @@ METHODOLOGY = {
                    "uniform = all T tenants active; hot1 = one hot tenant "
                    "of T (skew: the host flush still ships all T rows).  "
                    "timer = 4 warmup cycles, then 15 interleaved "
-                   "device/host pairs; speedup = median per-pair ratio.  "
+                   "device/host pairs; speedup = median per-pair ratio; "
+                   "each cycle blocks until its flush inputs (queue plane) "
+                   "or tables (e2e) materialize, so the jitted/async flush "
+                   "cannot leak one design's queued work into the other's "
+                   "measurement.  "
                    "The device path runs inside "
                    "jax.transfer_guard_device_to_host('disallow'): any "
                    "host read-back of the ring fails the benchmark.",
@@ -154,18 +159,31 @@ def _bench_point(spec, t, active, cap, stub_update: bool):
     def dev_cycle():
         dev.enqueue_many(events)
         dev.flush()
+        jax.block_until_ready(dev.planes[0].tables)
 
     def host_cycle():
         for i in range(active):
             host._queue[i, host._fill[i]:host._fill[i] + cap] = batches[i]
             host._fill[i] += cap
         host.flush()
+        jax.block_until_ready(host.tables)
 
     orig = ops.update_many
+    orig_rows = ops.update_rows
+
+    def stub(tables, spec, keys, rng, *a, weights=None, **kw):
+        # block until the flush inputs materialize: the flush machinery is
+        # jitted/async, so without a sync the interleaved timer would let
+        # one design's queued work leak into the other's measurement
+        jax.block_until_ready((keys, weights))
+        return tables
+
     try:
         if stub_update:
-            ops.update_many = \
-                lambda tables, spec, keys, rng, weights=None: tables
+            # stub BOTH flush update paths (dense and active-row) so only
+            # the queue mechanics differ between the timed designs
+            ops.update_many = stub
+            ops.update_rows = stub
         # the guard wraps every timed device cycle: any read-back of the
         # ring during enqueue->flush raises (host cycles only upload, so
         # the guard is inert for them)
@@ -173,6 +191,7 @@ def _bench_point(spec, t, active, cap, stub_update: bool):
             td, th, ratio = _paired_cycles(dev_cycle, host_cycle)
     finally:
         ops.update_many = orig
+        ops.update_rows = orig_rows
     if not stub_update:
         # identical seeds + identical flush inputs => identical tables
         assert (np.asarray(dev.planes[0].tables)

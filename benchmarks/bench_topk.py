@@ -1,0 +1,165 @@
+"""Heavy-hitter plane benchmarks: active-row flush + tracker refresh cost.
+
+Two questions about the flush pipeline refactor:
+
+  1. ACTIVE-ROW FLUSH — under hot-tenant skew (one tenant of T bursting,
+     the regime bench_ingest's queue-plane rows also probe), the dense
+     flush sweeps every tenant's VMEM-resident table through the fused
+     update grid (T, chunk) while the active-row flush grids over
+     (R, chunk) = (1, chunk) via the SMEM row map.  Both paths are timed
+     interleaved on identically-fed services and the final tables are
+     asserted bit-identical — the speedup is pure grid shrinkage, not a
+     semantics change.  The >= 2x acceptance bar at T >= 16 lives here.
+  2. TRACKER REFRESH — what does track_top=K add to a flush?  The tracker
+     path re-queries the just-flushed keys + standing candidates (one
+     fused query launch over the active rows) and re-selects the (T, K)
+     heaps on device; its cost is reported as the tracked/untracked cycle
+     ratio plus the absolute refresh_stacked launch time.
+
+    PYTHONPATH=src python -m benchmarks.bench_topk [--quick] [--compiled]
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from benchmarks.bench_ingest import _paired_cycles
+from repro.core import CMLS16, SketchSpec
+from repro.core import topk
+from repro.kernels import ops
+from repro.stream import CountService
+
+METHODOLOGY = {
+    "flush_hot1": "capacity 2 kernel-CHUNKs; each cycle enqueues ONE hot "
+                  "tenant of T a capacity-filling microbatch then flushes "
+                  "with the REAL fused update landing.  active = the "
+                  "service's active-row path (ops.update_rows, grid "
+                  "(1, chunk), SMEM row map); dense = plane.flush("
+                  "dense=True), the whole-plane (T, chunk) grid.  timer = "
+                  "2 warmup cycles then 7 interleaved active/dense pairs; "
+                  "speedup = median per-pair ratio; the two services' "
+                  "tables are asserted bit-identical afterwards (shared "
+                  "uniforms grid, skipped rows were weight-0 no-ops).",
+    "tracker": "same hot1 cycle with track_top=64 vs untracked: the "
+               "overhead ratio prices the per-flush heap refresh "
+               "(candidate re-query + top-K re-select on device).  "
+               "refresh_T* rows time one refresh_stacked launch directly "
+               "(K=64 standing candidates + one CHUNK batch per row, "
+               "scored through the fused multi-tenant query).",
+}
+
+
+def _hot_batch(cap, seed):
+    return (np.random.default_rng(seed).zipf(1.3, cap) % 50_000
+            ).astype(np.uint32)
+
+
+def _flush_point(spec, t, cap):
+    names = [f"tn{i}" for i in range(t)]
+    svc_a = CountService(spec, tenants=names, queue_capacity=cap, seed=0)
+    svc_d = CountService(spec, tenants=names, queue_capacity=cap, seed=0)
+    batch = _hot_batch(cap, seed=t)
+
+    def active_cycle():
+        svc_a.enqueue_many({names[0]: batch})
+        svc_a.planes[0].flush()
+        jax.block_until_ready(svc_a.planes[0].tables)
+
+    def dense_cycle():
+        svc_d.enqueue_many({names[0]: batch})
+        svc_d.planes[0].flush(dense=True)
+        jax.block_until_ready(svc_d.planes[0].tables)
+
+    ta, td, ratio = _paired_cycles(active_cycle, dense_cycle, warmup=2,
+                                   reps=7)
+    assert (np.asarray(svc_a.planes[0].tables)
+            == np.asarray(svc_d.planes[0].tables)).all(), \
+        "active-row and dense flushes landed different tables"
+    return ta, td, ratio
+
+
+def _tracker_point(spec, t, cap, k=64):
+    names = [f"tn{i}" for i in range(t)]
+    plain = CountService(spec, tenants=names, queue_capacity=cap, seed=0)
+    tracked = CountService(spec, tenants=names, queue_capacity=cap, seed=0,
+                           track_top=k)
+    batch = _hot_batch(cap, seed=t + 101)
+
+    def plain_cycle():
+        plain.enqueue_many({names[0]: batch})
+        plain.planes[0].flush()
+        jax.block_until_ready(plain.planes[0].tables)
+
+    def tracked_cycle():
+        tracked.enqueue_many({names[0]: batch})
+        tracked.planes[0].flush()
+        jax.block_until_ready((tracked.planes[0].tables,
+                               tracked.planes[0].tracker.keys))
+
+    tp, tt, _ = _paired_cycles(plain_cycle, tracked_cycle, warmup=2, reps=7)
+    # direct refresh launch: K standing candidates + one CHUNK batch per row
+    tracker = topk.init_stacked(t, k)
+    tables = plain.planes[0].tables
+    keys = jnp.asarray(np.stack([_hot_batch(ops.CHUNK, seed=i)
+                                 for i in range(t)]))
+
+    def refresh():
+        return topk.refresh_stacked(
+            tracker, keys, None,
+            lambda ck: ops.query_many(tables, spec, ck))
+
+    t_ref, _ = common.timer(refresh, warmup=1, iters=3)
+    return tp, tt, t_ref
+
+
+def _rows(quick: bool):
+    spec = SketchSpec(width=1024, depth=2, counter=CMLS16)
+    cap = 2 * ops.CHUNK
+    points = [8, 16] if quick else [8, 16, 32]
+    rows = []
+    for t in points:
+        ta, td, ratio = _flush_point(spec, t, cap)
+        rows += [
+            {"name": f"topk_flush_hot1/active_T{t}",
+             "us_per_call": round(ta * 1e6),
+             "derived": f"{round(cap / ta / 1e6, 1)} Mkeys/s"},
+            {"name": f"topk_flush_hot1/dense_T{t}",
+             "us_per_call": round(td * 1e6),
+             "derived": f"speedup_x{ratio:.2f}"},
+        ]
+    for t in points[:1] if quick else points[:2]:
+        tp, tt, t_ref = _tracker_point(spec, t, cap)
+        rows += [
+            {"name": f"topk_tracker/flush_tracked_T{t}",
+             "us_per_call": round(tt * 1e6),
+             "derived": f"overhead_x{tt / tp:.2f}"},
+            {"name": f"topk_tracker/refresh_T{t}",
+             "us_per_call": round(t_ref * 1e6),
+             "derived": f"K=64+{ops.CHUNK} cands"},
+        ]
+    return rows
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = _rows(quick)
+    os.makedirs("results", exist_ok=True)
+    methodology = dict(METHODOLOGY, **common.mode_methodology())
+    with open("results/bench_topk.json", "w") as f:
+        json.dump({"methodology": methodology, "rows": rows}, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    common.add_mode_flags(ap)
+    args = ap.parse_args()
+    common.set_kernel_mode(args.mode)
+    print("name,us_per_call,derived")
+    common.emit(run(quick=args.quick))

@@ -3,8 +3,8 @@
     PYTHONPATH=src python -m benchmarks.check_regression [--threshold 1.25]
     PYTHONPATH=src python -m benchmarks.check_regression --update
 
-Compares the timed rows (us_per_call) of the ingest/query suites against
-the baselines committed under benchmarks/baselines/, suite by suite, and
+Compares the timed rows (us_per_call) of the ingest/query/topk suites
+against the baselines committed under benchmarks/baselines/, suite by suite, and
 fails when the MEDIAN per-row slowdown exceeds the threshold (default
 +25%).  Two defenses against machine noise, since the baseline may have
 been recorded on different hardware than the CI runner:
@@ -33,7 +33,7 @@ import sys
 import time
 
 BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
-SUITES = ["bench_ingest.json", "bench_query.json"]
+SUITES = ["bench_ingest.json", "bench_query.json", "bench_topk.json"]
 
 
 def calibration_us(reps: int = 9) -> float:

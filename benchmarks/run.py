@@ -1,12 +1,17 @@
 """Benchmark harness — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--interpret|--compiled]
+    PYTHONPATH=src python -m benchmarks.run --suites bench_ingest,bench_topk
 
 Prints ``name,us_per_call,derived`` CSV (required format) and mirrors the
-rows into results/benchmarks.json.  --compiled lowers the Pallas kernels
-for the real backend (the flag that turns these scripts into TPU-hardware
-numbers); the default --interpret runs them in interpreter mode, and every
-suite records the mode in its JSON methodology block.
+rows into results/benchmarks.json.  --suites selects a comma-separated
+subset by module name (``bench_ingest``) or display name
+(``ingest_plane``) — what CI's bench-smoke job and local pre-commit runs
+use to target the regression-gated suites instead of paying for all of
+them.  --compiled lowers the Pallas kernels for the real backend (the
+flag that turns these scripts into TPU-hardware numbers); the default
+--interpret runs them in interpreter mode, and every suite records the
+mode in its JSON methodology block.
 """
 from __future__ import annotations
 
@@ -18,7 +23,8 @@ import time
 
 from benchmarks import (bench_are_counts, bench_batched_divergence,
                         bench_damped_update, bench_ingest, bench_pmi,
-                        bench_query, bench_throughput, bench_window)
+                        bench_query, bench_throughput, bench_topk,
+                        bench_window)
 from benchmarks.common import add_mode_flags, emit, set_kernel_mode
 
 SUITES = [
@@ -30,7 +36,29 @@ SUITES = [
     ("streaming_window", bench_window.run),
     ("query_plane", bench_query.run),
     ("ingest_plane", bench_ingest.run),
+    ("topk_plane", bench_topk.run),
 ]
+
+
+def _aliases(name: str, fn) -> set[str]:
+    """A suite answers to its display name and its module name."""
+    return {name, fn.__module__.split(".")[-1]}
+
+
+def _select(args) -> list:
+    wanted = set()
+    if args.suite:
+        wanted.add(args.suite)
+    if args.suites:
+        wanted.update(s.strip() for s in args.suites.split(",") if s.strip())
+    if not wanted:
+        return SUITES
+    known = set().union(*(_aliases(n, f) for n, f in SUITES))
+    unknown = wanted - known
+    if unknown:
+        raise SystemExit(f"unknown suite(s) {sorted(unknown)}; "
+                         f"known: {sorted(known)}")
+    return [(n, f) for n, f in SUITES if _aliases(n, f) & wanted]
 
 
 def main() -> None:
@@ -39,15 +67,16 @@ def main() -> None:
                     help="reduced corpus + budget grid (CI-speed)")
     ap.add_argument("--suite", default=None,
                     help="run one suite by name")
+    ap.add_argument("--suites", default=None,
+                    help="comma-separated subset, by module or display "
+                         "name (e.g. bench_ingest,bench_topk)")
     add_mode_flags(ap)
     args = ap.parse_args()
     set_kernel_mode(args.mode)
 
     print("name,us_per_call,derived")
     all_rows = []
-    for name, fn in SUITES:
-        if args.suite and args.suite != name:
-            continue
+    for name, fn in _select(args):
         t0 = time.time()
         rows = fn(quick=args.quick)
         emit(rows)

@@ -78,12 +78,16 @@ for name, s in scores.items():
 # --------------------------------------------------------------------------
 # the same workload through CountService: one registry hosts the all-time
 # tenant and a watermark-windowed trending tenant (device-ring ingest; the
-# window rotates from event timestamps instead of manual window_rotate)
+# window rotates from event timestamps instead of manual window_rotate).
+# track_top=16 turns on the heavy-hitter plane: every flush folds the
+# just-landed keys into a device-resident top-K tracker, so the trending
+# board below is served straight from `svc.topk` — no vocabulary sweep,
+# no argsort over the catalogue.
 # --------------------------------------------------------------------------
 from repro.stream import CountService, WindowSpec
 
 INTERVAL = 60.0
-svc = CountService(spec, queue_capacity=1 << 15)
+svc = CountService(spec, queue_capacity=1 << 15, track_top=16)
 svc.add_tenant("alltime")
 svc.add_tenant("trending", window=WindowSpec(sketch=spec, buckets=8,
                                              interval=INTERVAL))
@@ -98,13 +102,24 @@ for r in range(args.rotations):
     svc.enqueue("alltime", ev)
     svc.enqueue("trending", ev, ts=ts)
 
-svc_scores = {
-    "alltime": np.asarray(svc.query("alltime", probe)),
-    "trending(3)": np.asarray(svc.query("trending", probe, n_buckets=3)),
-}
 print(f"\nCountService replay (watermark epoch "
       f"{svc.epoch_of('trending')}, {svc.stats['flushes']} fused flushes):")
-for name, s in svc_scores.items():
-    top10 = set(np.argsort(-s)[:10].tolist())
-    hits = len(top10 & set(BURST_ITEMS.tolist()))
-    print(f"{name:>14}: {hits}/10 of top-10 are burst items")
+BOARD_KW = {"alltime": {}, "trending(3)": {"n_buckets": 3},
+            "trend(g=.7)": {"gamma": 0.7}}
+boards = {
+    "alltime": svc.topk("alltime", 10),
+    "trending(3)": svc.topk("trending", 10, n_buckets=3),  # last 3 intervals
+    "trend(g=.7)": svc.topk("trending", 10, gamma=0.7),    # lazy-decay rank
+}
+print(f"{'rank':>4}  " + "  ".join(f"{n:>12}" for n in boards))
+for i in range(10):
+    row = [int(keys[i]) if i < len(keys) else -1
+           for keys, _ in boards.values()]
+    print(f"{i + 1:>4}  " + "  ".join(f"{x:>12}" for x in row))
+for name, (keys, est) in boards.items():
+    hits = len(set(int(k) for k in keys[:10]) & set(BURST_ITEMS.tolist()))
+    print(f"{name:>12}: {hits}/10 of svc.topk(10) are burst items")
+    # tracker estimates are the sketch's own answers, exactly
+    tenant = "alltime" if name == "alltime" else "trending"
+    assert (est == np.asarray(svc.query(tenant, keys,
+                                        **BOARD_KW[name]))).all()

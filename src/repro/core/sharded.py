@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from repro import compat
 
 from repro.core import sketch as sk
+from repro.core import topk
 from repro.core.hashing import mix32
 
 SENTINEL = jnp.uint32(0xFFFF_FFFF)
@@ -204,6 +205,33 @@ def routed_window_update(win, keys: jnp.ndarray, rng: jax.Array,
     valid = flat != SENTINEL
     return w.window_update(win, flat, rng,
                            weights=valid.astype(jnp.float32))
+
+
+def routed_topk(tracker, axis_name: str, k: int | None = None):
+    """Global heavy hitters over key-routed shards: candidate-set merge.
+
+    Each shard refreshes a local `core.topk.TopK` against its own
+    partition's sketch (its estimates are authoritative — the routing hash
+    gives shards disjoint key sets), so the fleet-wide top-k is a pure
+    merge: all_gather every shard's (K,) candidates + estimates + masks
+    and re-select with one top_k.  The read-side analogue of `pmax_merge`
+    — candidates are merged instead of counters, in O(shards * K) instead
+    of O(d * w).  Call inside shard_map over `axis_name`; returns a
+    replicated TopK of width `k` (default: the local tracker width).
+
+    Replicated-lazy deployments (every worker counts the full stream)
+    should pmax-merge tables first and refresh one tracker on the merged
+    sketch instead: their candidate keys overlap, and this merge does not
+    dedup across shards.
+    """
+    k = tracker.keys.shape[0] if k is None else k
+    keys = jax.lax.all_gather(tracker.keys, axis_name).reshape(-1)
+    filled = jax.lax.all_gather(tracker.filled, axis_name).reshape(-1)
+    est = jax.lax.all_gather(tracker.estimates, axis_name).reshape(-1)
+    est = jnp.where(filled, est, -jnp.inf)
+    top_est, idx = jax.lax.top_k(est, k)
+    return topk.TopK(keys=keys[idx], estimates=top_est,
+                     filled=top_est > -jnp.inf)
 
 
 def routed_window_query(win, keys: jnp.ndarray, axis_name: str,

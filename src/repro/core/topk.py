@@ -5,10 +5,25 @@ each batch: candidate estimates are re-queried (they only ever tighten
 upward under conservative update), batch keys are scored, and the union is
 re-selected with lax.top_k.  Constant memory, jit-friendly, and exact w.r.t.
 the sketch's own estimates for any item that ever enters the buffer.
+
+Slot occupancy is an explicit `filled` mask, NOT a sentinel key: every
+uint32 value — including 0xFFFF_FFFF — is a legal trackable key (the
+service's key validation admits the full 32-bit range, so a sentinel would
+silently blackhole one real key).  Unfilled slots carry estimate -inf and
+never claim a key's identity during dedup (valid entries sort first among
+equal keys), so a fresh buffer full of key-0 placeholders cannot shadow a
+genuine key 0 either.
+
+`refresh` serves one sketch; `refresh_stacked` is the multi-tenant form the
+counting service's flush pipeline uses: (T, K) heaps refreshed in one shot,
+with the scoring function injected so plain planes score through the fused
+multi-tenant query kernel and windowed planes score through `window_query`
+(bucket expiry / lazy decay reorder the heap, not just new mass).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -19,36 +34,88 @@ from repro.core import sketch as sk
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class TopK:
-    keys: jnp.ndarray       # (k,) uint32, 0xFFFFFFFF = empty slot
-    estimates: jnp.ndarray  # (k,) float32
+    keys: jnp.ndarray       # (k,) or (t, k) uint32 candidate keys
+    estimates: jnp.ndarray  # same shape, float32 (-inf in unfilled slots)
+    filled: jnp.ndarray     # same shape, bool occupancy mask
 
     def tree_flatten(self):
-        return (self.keys, self.estimates), None
+        return (self.keys, self.estimates, self.filled), None
 
     @classmethod
     def tree_unflatten(cls, _, leaves):
         return cls(*leaves)
 
 
-EMPTY = jnp.uint32(0xFFFF_FFFF)
-
-
 def init(k: int) -> TopK:
-    return TopK(keys=jnp.full((k,), EMPTY, jnp.uint32),
-                estimates=jnp.full((k,), -jnp.inf, jnp.float32))
+    return TopK(keys=jnp.zeros((k,), jnp.uint32),
+                estimates=jnp.full((k,), -jnp.inf, jnp.float32),
+                filled=jnp.zeros((k,), bool))
 
 
-def refresh(tracker: TopK, sketch: sk.Sketch, batch_keys: jnp.ndarray) -> TopK:
-    k = tracker.keys.shape[0]
-    cand_keys = jnp.concatenate([tracker.keys, batch_keys.astype(jnp.uint32)])
-    est = sk.query(sketch, cand_keys)
-    est = jnp.where(cand_keys == EMPTY, -jnp.inf, est)
-    # dedup: keep only the first occurrence of each key (stable by sort)
-    order = jnp.argsort(cand_keys)
+def init_stacked(t: int, k: int) -> TopK:
+    """Cold (t, k) heap stack — one top-k buffer per tenant row."""
+    return TopK(keys=jnp.zeros((t, k), jnp.uint32),
+                estimates=jnp.full((t, k), -jnp.inf, jnp.float32),
+                filled=jnp.zeros((t, k), bool))
+
+
+def _select(cand_keys: jnp.ndarray, valid: jnp.ndarray, est: jnp.ndarray,
+            k: int):
+    """Top-k over a candidate union: mask invalid, dedup, select.
+
+    Dedup keeps one occurrence per key, and valid entries outrank invalid
+    placeholders among equal keys (lexsort secondary key), so an unfilled
+    slot can never swallow a real candidate's estimate.
+    """
+    est = jnp.where(valid, est, -jnp.inf)
+    order = jnp.lexsort((jnp.logical_not(valid), cand_keys))
     sorted_keys = cand_keys[order]
     first = jnp.concatenate([jnp.ones((1,), bool),
                              sorted_keys[1:] != sorted_keys[:-1]])
     keep = jnp.zeros_like(first).at[order].set(first)
     est = jnp.where(keep, est, -jnp.inf)
     top_est, idx = jax.lax.top_k(est, k)
-    return TopK(keys=cand_keys[idx], estimates=top_est)
+    filled = top_est > -jnp.inf  # estimates are decoded counts, always >= 0
+    return cand_keys[idx], top_est, filled
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _select_stacked(cand, valid, est, *, k):
+    # jitted so a per-flush refresh does not pay eager vmap dispatch
+    return jax.vmap(functools.partial(_select, k=k))(cand, valid, est)
+
+
+def refresh_stacked(tracker: TopK, batch_keys: jnp.ndarray,
+                    batch_valid: jnp.ndarray | None, score_fn) -> TopK:
+    """Refresh a (T, K) heap stack against per-tenant batches.
+
+    batch_keys (T, N) joins each row's standing candidates; batch_valid
+    masks padding/stale slots out of candidacy (None = all valid).
+    score_fn maps (T, K+N) uint32 candidate keys -> (T, K+N) float32
+    estimates — e.g. `ops.query_many` bound to the plane's updated tables
+    (ONE fused launch for all T rows), or a stacked `window_query` for
+    ring-backed tenants.  Every candidate is re-scored, so the surviving
+    estimates always equal the current query answers.
+    """
+    k = tracker.keys.shape[1]
+    cand = jnp.concatenate([tracker.keys, batch_keys.astype(jnp.uint32)],
+                           axis=1)
+    if batch_valid is None:
+        batch_valid = jnp.ones(batch_keys.shape, bool)
+    valid = jnp.concatenate([tracker.filled, batch_valid], axis=1)
+    est = score_fn(cand)
+    keys, est, filled = _select_stacked(cand, valid, est, k=k)
+    return TopK(keys=keys, estimates=est, filled=filled)
+
+
+def refresh(tracker: TopK, sketch: sk.Sketch, batch_keys: jnp.ndarray,
+            batch_valid: jnp.ndarray | None = None) -> TopK:
+    """Single-sketch refresh: the T=1 case of `refresh_stacked`."""
+    out = refresh_stacked(
+        TopK(keys=tracker.keys[None], estimates=tracker.estimates[None],
+             filled=tracker.filled[None]),
+        batch_keys[None],
+        None if batch_valid is None else batch_valid[None],
+        lambda ck: sk.query(sketch, ck.reshape(-1)).reshape(ck.shape))
+    return TopK(keys=out.keys[0], estimates=out.estimates[0],
+                filled=out.filled[0])

@@ -6,7 +6,9 @@ for the kernel path with one import.  On non-TPU backends the kernels run
 in interpret mode (bit-identical semantics, used for validation).
 
 Both halves of the hot path are fused across the leading axis: ingest via
-`update_many` (T tenants, one launch) and the read path via `query_many`
+`update_many` (T tenants, one launch) — or `update_rows` when only R of T
+rows have pending work (the active-row flush: SMEM row map, grid (R,
+chunk), bit-identical tables) — and the read path via `query_many`
 (T tenants) / `window_query_tables` (B window buckets with the weighted
 sum/max reduction — and lazy gamma^age decay — inside the kernel).  The
 ingest queue itself is device-resident: `queue_append` lands microbatches
@@ -26,7 +28,8 @@ from repro.core import sketch as sk
 from repro.core.hashing import host_row_seeds
 from repro.kernels.sketch import (CHUNK, LANES, _shift_to_fill,
                                   fused_query_pallas, fused_update_pallas,
-                                  query_pallas, queue_append_dense_pallas,
+                                  fused_update_rows_pallas, query_pallas,
+                                  queue_append_dense_pallas,
                                   queue_append_pallas, update_pallas,
                                   window_query_pallas)
 
@@ -141,30 +144,121 @@ def update(sketch: sk.Sketch, keys: jnp.ndarray, rng: jax.Array) -> sk.Sketch:
     return sk.Sketch(table=table, spec=sketch.spec)
 
 
+def _parity_uniforms(rng, n_cols: int, total: int, rows):
+    """Uniforms for an R-row sub-stack update, bit-identical to the dense
+    draw they replace: draw the full (total, n_cols) grid, gather `rows`.
+
+    `total` is the dense row count the update is standing in for, `rows`
+    the (R,) active-row subset.  The full-grid draw costs one fused
+    computation; it is what makes the active-row flush land exactly the
+    counters a dense flush would have.
+    """
+    return jax.random.uniform(rng, (total, n_cols))[rows]
+
+
+# The flush hot path — weighted dedup, uniform draw, fused kernel — runs
+# as ONE jitted computation per variant: dispatching the vmapped dedup
+# eagerly costs more than the whole (R, chunk) kernel sweep it feeds.
+
+@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def _update_many_jit(tables, keys, weights, rng, *, spec, interpret):
+    sorted_keys, mult = jax.vmap(sk.dedup_weighted)(keys, weights)
+    uniforms = jax.random.uniform(rng, sorted_keys.shape)
+    return fused_update_pallas(tables, sorted_keys, mult, uniforms,
+                               seeds=_seeds_tuple(spec), width=spec.width,
+                               counter=spec.counter, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "total", "interpret"))
+def _update_gathered_jit(tables, keys, weights, rng, rows, *, spec, total,
+                         interpret):
+    """Dense kernel over an already-gathered R-row stack (the window
+    plane's active buckets), with the parity uniforms grid."""
+    sorted_keys, mult = jax.vmap(sk.dedup_weighted)(keys, weights)
+    uniforms = _parity_uniforms(rng, keys.shape[1], total, rows)
+    return fused_update_pallas(tables, sorted_keys, mult, uniforms,
+                               seeds=_seeds_tuple(spec), width=spec.width,
+                               counter=spec.counter, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def _update_rows_jit(tables, keys, weights, rng, rows, *, spec, interpret):
+    sorted_keys, mult = jax.vmap(sk.dedup_weighted)(keys, weights)
+    uniforms = _parity_uniforms(rng, keys.shape[1], tables.shape[0], rows)
+    return fused_update_rows_pallas(tables, sorted_keys, mult, uniforms,
+                                    rows, seeds=_seeds_tuple(spec),
+                                    width=spec.width, counter=spec.counter,
+                                    interpret=interpret)
+
+
 def update_many(tables: jnp.ndarray, spec: sk.SketchSpec, keys: jnp.ndarray,
-                rng: jax.Array, weights: jnp.ndarray | None = None
-                ) -> jnp.ndarray:
+                rng: jax.Array, weights: jnp.ndarray | None = None,
+                uniform_rows=None) -> jnp.ndarray:
     """Fused multi-tenant update: tables (T, d, w), keys/weights (T, N).
 
     Dedups each tenant's stream (vmapped), then lands all T updates in ONE
-    kernel launch (the per-tenant table is the VMEM-resident grid block).
+    kernel launch (the per-tenant table is the VMEM-resident grid block);
+    dedup + uniform draw + kernel run as a single jitted computation.
     Entries with weight 0 are no-ops — ragged tenant queues pad with them.
     Falls back to a vmapped jnp update for tables past the VMEM budget.
+
+    uniform_rows: optional (total, rows) pair — draw the uniforms over a
+    (total, N) grid and gather `rows`, so updating an R-row sub-stack
+    (e.g. the gathered active window buckets of an active-row flush) is
+    bit-identical to the dense total-row update it replaces.
     """
     if weights is None:
         weights = jnp.ones(keys.shape, jnp.float32)
     if not fits_vmem(spec):
-        rngs = jax.random.split(rng, tables.shape[0])
+        if uniform_rows is None:
+            rngs = jax.random.split(rng, tables.shape[0])
+        else:
+            total, rows = uniform_rows
+            rngs = jax.random.split(rng, total)[np.asarray(rows)]
 
         def one(table, k, w, r):
             s = sk.Sketch(table=table, spec=spec)
             return sk.update_batched(s, k, r, weights=w).table
         return jax.vmap(one)(tables, keys, weights, rngs)
-    sorted_keys, mult = jax.vmap(sk.dedup_weighted)(keys, weights)
-    uniforms = jax.random.uniform(rng, sorted_keys.shape)
-    return fused_update_pallas(tables, sorted_keys, mult, uniforms,
-                               seeds=_seeds_tuple(spec), width=spec.width,
-                               counter=spec.counter, interpret=_interpret())
+    if uniform_rows is None:
+        return _update_many_jit(tables, keys, weights, rng, spec=spec,
+                                interpret=_interpret())
+    total, rows = uniform_rows
+    return _update_gathered_jit(tables, keys, weights, rng,
+                                np.asarray(rows, np.int32), spec=spec,
+                                total=int(total), interpret=_interpret())
+
+
+def update_rows(tables: jnp.ndarray, spec: sk.SketchSpec, keys: jnp.ndarray,
+                rng: jax.Array, rows, weights: jnp.ndarray | None = None
+                ) -> jnp.ndarray:
+    """Active-row fused update: land R rows' batches without touching the
+    other T - R tables.
+
+    tables (T, d, w); keys/weights (R, N); rows (R,) int32 selecting each
+    batch's target row (unique within a call).  The kernel grids over
+    (R, chunk) with the row map in SMEM and the whole (T, d, w) stack
+    aliased in place (`fused_update_rows_pallas`), so a skewed flush pays
+    for the rows that actually have work.  Uniforms are drawn over the
+    FULL (T, N) grid and gathered, making the result bit-identical to
+    `update_many` fed the whole plane with the inactive rows' weights
+    zeroed — the active-row flush can replace the dense flush without
+    changing a single landed counter.  Falls back to a vmapped jnp update
+    + row scatter past the VMEM budget.
+    """
+    rows = np.asarray(rows, np.int32)
+    if weights is None:
+        weights = jnp.ones(keys.shape, jnp.float32)
+    if not fits_vmem(spec):
+        rngs = jax.random.split(rng, tables.shape[0])[rows]
+
+        def one(table, k, w, r):
+            s = sk.Sketch(table=table, spec=spec)
+            return sk.update_batched(s, k, r, weights=w).table
+        new = jax.vmap(one)(tables[rows], keys, weights, rngs)
+        return tables.at[rows].set(new)
+    return _update_rows_jit(tables, keys, weights, rng, rows, spec=spec,
+                            interpret=_interpret())
 
 
 # --------------------------------------------------------------------------
@@ -260,3 +354,16 @@ def flush_inputs(queue: jnp.ndarray, fill: jnp.ndarray, cols: int):
     weights = (jnp.arange(cols, dtype=jnp.int32)[None, :]
                < fill[:, None].astype(jnp.int32)).astype(jnp.float32)
     return queue[:, :cols], weights
+
+
+@functools.partial(jax.jit, static_argnames=("cols",))
+def flush_rows_inputs(queue: jnp.ndarray, fill: jnp.ndarray,
+                      rows: jnp.ndarray, cols: int):
+    """Active-row flush inputs: (queue[rows, :cols], (R, cols) mask), ONE
+    dispatch.  The row gather, column trim, and live-slot weight mask fuse
+    into a single computation — only the small (R,) fill and row vectors
+    cross to the device, never the ring itself.
+    """
+    weights = (jnp.arange(cols, dtype=jnp.int32)[None, :]
+               < fill[:, None].astype(jnp.int32)).astype(jnp.float32)
+    return queue[rows, :cols], weights

@@ -13,7 +13,12 @@ with the grid:
   * update: sequential grid over key chunks; the table is input/output
     aliased, so each chunk's conservative scatter-max is visible to the
     next chunk (TPU grids execute sequentially on a core — the legal place
-    for read-modify-write).
+    for read-modify-write).  The active-row variant
+    (`fused_update_rows_pallas`) grids over (R, chunk) instead of
+    (T, chunk): an SMEM row map (scalar prefetch, as in the queue append)
+    steers each batch to its tenant's table block while the whole
+    (T, d, w) stack stays aliased in place — a skewed flush pays for the
+    rows that have work, bit-identically to the dense sweep.
   * queue append (`queue_append_pallas`): the ingest queue itself lives on
     device as a (T, capw) ring; appends grid over the batched tenant rows,
     with the per-row fill counters in SMEM (scalar prefetch drives the
@@ -247,6 +252,67 @@ def fused_query_pallas(tables, keys, *, seeds: tuple, width: int,
         interpret=interpret,
     )(tables, tiles)
     return out.reshape(t, -1)[:, :n]
+
+
+def _fused_update_rows_kernel(meta_ref, tables_ref, keys_ref, mult_ref,
+                              unif_ref, out_ref, *, seeds, width, counter):
+    """One (active-row, key-chunk) grid step of the active-row ingest.
+
+    Identical body to `_fused_update_kernel`: the (R,) row map rides in
+    SMEM (scalar prefetch) and is consumed by the block index maps — the
+    kernel body itself never needs it, it just sees "its" tenant's (1, d,
+    w) table block wherever the map pointed.
+    """
+    del meta_ref
+    _fused_update_kernel(tables_ref, keys_ref, mult_ref, unif_ref, out_ref,
+                         seeds=seeds, width=width, counter=counter)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "counter", "seeds",
+                                             "interpret"))
+def fused_update_rows_pallas(tables, keys, mult, uniforms, rows, *,
+                             seeds: tuple, width: int, counter: CounterSpec,
+                             interpret: bool = True):
+    """Active-row multi-tenant update: grid (R, chunk) instead of (T, chunk).
+
+    tables (T, d, w): the WHOLE plane's stacked tables; keys/mult/uniforms
+    (R, N): only the R rows with pending work — batch i lands in tenant
+    rows[i]'s table, selected by the SMEM row map (rows (R,) int32, scalar
+    prefetch driving the block index map — the same pattern as
+    `queue_append_pallas`).  The tables buffer is input/output aliased, so
+    the T - R unlisted rows persist in place and a skewed flush costs R
+    table-resident sweeps instead of T.  Within one row the chunk axis is
+    innermost, so conservative writes stay sequential exactly as in the
+    dense kernel.  Caller contract: rows unique within a call.  Returns
+    the updated (T, d, w) tables — bit-identical to `fused_update_pallas`
+    over the full grid with the unlisted rows' mult zeroed.
+    """
+    r = keys.shape[0]
+    _, d, _ = tables.shape
+    key_t, padded = _pad_tiles_2d(keys.astype(jnp.uint32), 0)
+    mult_t, _ = _pad_tiles_2d(mult.astype(jnp.float32), 0.0)
+    unif_t, _ = _pad_tiles_2d(uniforms.astype(jnp.float32), 1.0)
+    chunks = padded // CHUNK
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r, chunks),
+        in_specs=[
+            pl.BlockSpec((1, d, width), lambda ri, ci, meta: (meta[ri], 0, 0)),
+            pl.BlockSpec((1, SUBLANES, LANES), lambda ri, ci, meta: (ri, ci, 0)),
+            pl.BlockSpec((1, SUBLANES, LANES), lambda ri, ci, meta: (ri, ci, 0)),
+            pl.BlockSpec((1, SUBLANES, LANES), lambda ri, ci, meta: (ri, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d, width),
+                               lambda ri, ci, meta: (meta[ri], 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_update_rows_kernel, seeds=seeds, width=width,
+                          counter=counter),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(tables.shape, tables.dtype),
+        input_output_aliases={1: 0},  # tables aliased past the meta scalars
+        interpret=interpret,
+    )(rows, tables, key_t, mult_t, unif_t)
 
 
 def _queue_append_kernel(meta_ref, queue_ref, buf_ref, out_ref):

@@ -29,11 +29,25 @@ appended) and `flush` feeds `fused_update_pallas` straight from device
 memory.  Keys are validated at the API boundary (integers in [0, 2^32) —
 no silent truncation).
 
+The flush itself is an **active-row pipeline**: the host fill mirror knows
+which R of T rows have pending work, so the fused update grids over
+(R, chunk) via the SMEM row map (`ops.update_rows`) instead of sweeping
+every tenant's table — bit-identical to the dense flush (the skipped rows
+were weight-0 no-ops and the uniforms grid is shared), but under tenant
+skew the launch shrinks by T/R.  With `track_top=K` the same pipeline
+feeds a **heavy-hitter plane**: while the active tables are fresh, the
+just-flushed keys plus each row's standing candidates are re-scored with
+one fused query launch and re-selected into a stacked (T, K) device
+`TopK` tracker (`core/topk.refresh_stacked`); windowed planes score
+candidates through `window_query`, so bucket expiry and lazy decay
+reorder the heap.  `CountService.topk(name, k)` serves it.
+
 Queries are read-your-writes: they flush pending events first.  The whole
-service (tables + rings + fill mirrors + RNG lane + stats) snapshots and
-restores via `train/checkpoint`; the manifest metadata records the plane
-layout (schema v2) and restore still accepts the v1 single-plane layout of
-earlier checkpoints.
+service (tables + rings + fill mirrors + RNG lane + stats + trackers)
+snapshots and restores via `train/checkpoint`; the manifest metadata
+records the plane layout (schema v3 — v2 adds multi-plane, v3 adds the
+tracker state) and restore still accepts the v2 layout (cold trackers)
+and the v1 single-plane layout of earlier checkpoints.
 """
 from __future__ import annotations
 
@@ -45,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sketch as sk
+from repro.core import topk
 from repro.core.counters import CounterSpec
 from repro.core.sketch import Sketch, SketchSpec
 from repro.kernels import ops
@@ -150,32 +165,72 @@ class _DeviceRing:
         for r, b in zip(rows, batches):
             self.fill[r] += b.size
 
-    def live_slice(self):
+    def live_slice(self, rows=None):
         """(queue[:, :cols], weights (T, cols)) for a flush, device-side.
 
         cols is the fullest row's fill rounded up to the kernel CHUNK (so
         launch shapes stay quantized); stale slots ride along with weight
         0.  Only the (T,) fill vector crosses to the device (ONE fused
         dispatch, `ops.flush_inputs`).
+
+        rows: optional (R,) active-row subset — gathers just those rows'
+        queue slices and weights (`ops.flush_rows_inputs`, still one
+        dispatch), the input side of the active-row flush.
         """
+        fill = self.fill if rows is None else self.fill[rows]
         cols = min(self.queue.shape[1],
-                   ops.CHUNK * -(-int(self.fill.max()) // ops.CHUNK))
-        return ops.flush_inputs(self.queue, self.fill.astype(np.int32), cols)
+                   ops.CHUNK * -(-int(fill.max()) // ops.CHUNK))
+        if rows is None:
+            return ops.flush_inputs(self.queue, fill.astype(np.int32), cols)
+        return ops.flush_rows_inputs(self.queue, fill.astype(np.int32),
+                                     jnp.asarray(rows), cols)
 
     def reset(self) -> None:
         self.fill[:] = 0
 
 
-class TenantPlane:
+class _TrackerMixin:
+    """Stacked (T, K) heavy-hitter tracker shared by both plane kinds."""
+
+    track_top: Optional[int]
+    tracker: Optional[topk.TopK]
+
+    def _init_tracker(self, track_top: Optional[int]) -> None:
+        self.track_top = track_top
+        self.tracker = (None if track_top is None
+                        else topk.init_stacked(0, track_top))
+
+    def _grow_tracker(self) -> None:
+        if self.tracker is not None:
+            self.tracker = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b]), self.tracker,
+                topk.init_stacked(1, self.track_top))
+
+    def _scatter_tracker(self, rows, new: topk.TopK) -> None:
+        tk = self.tracker
+        self.tracker = topk.TopK(
+            keys=tk.keys.at[rows].set(new.keys),
+            estimates=tk.estimates.at[rows].set(new.estimates),
+            filled=tk.filled.at[rows].set(new.filled))
+
+    def _tracker_rows(self, rows) -> topk.TopK:
+        tk = self.tracker
+        return topk.TopK(keys=tk.keys[rows], estimates=tk.estimates[rows],
+                         filled=tk.filled[rows])
+
+
+class TenantPlane(_TrackerMixin):
     """Tenants sharing one SketchSpec: stacked (T, d, w) tables + ring."""
 
-    def __init__(self, spec: SketchSpec, queue_capacity: int, seed: int = 0):
+    def __init__(self, spec: SketchSpec, queue_capacity: int, seed: int = 0,
+                 track_top: Optional[int] = None):
         self.spec = spec
         self.tables = jnp.zeros((0, spec.depth, spec.width),
                                 spec.counter.dtype)
         self.ring = _DeviceRing(queue_capacity)
         self.rng = _RngLane(seed)
         self.names: list[str] = []
+        self._init_tracker(track_top)
 
     @property
     def queue_capacity(self) -> int:
@@ -186,28 +241,77 @@ class TenantPlane:
                          self.spec.counter.dtype)
         self.tables = jnp.concatenate([self.tables, zero], axis=0)
         self.names.append(name)
+        self._grow_tracker()
         return self.ring.add_row()
 
     def pending(self) -> int:
         return int(self.ring.fill.sum())
 
-    def flush(self) -> int:
-        """Land every tenant's pending events in one fused launch."""
+    def flush(self, dense: bool = False) -> int:
+        """Land every tenant's pending events, gathering the active rows.
+
+        The host fill mirror names the R rows with pending fill, so the
+        fused update grids over (R, chunk) via the SMEM row map
+        (`ops.update_rows`) instead of (T, chunk) — bit-identical tables
+        (shared uniforms grid; the skipped rows were weight-0 no-ops), but
+        a hot-tenant flush pays for 1 table sweep, not T.  `dense=True`
+        forces the whole-plane launch (the benchmark baseline).  A tracker
+        refresh then re-queries the just-flushed keys + standing
+        candidates from the still-fresh tables.
+        """
         pending = self.pending()
         if pending == 0:
             return 0
-        keys, weights = self.ring.live_slice()
-        self.tables = ops.update_many(self.tables, self.spec, keys,
-                                      self.rng.next(), weights=weights)
+        rng = self.rng.next()
+        active = np.flatnonzero(self.ring.fill).astype(np.int32)
+        if dense or active.size == len(self.names):
+            keys, weights = self.ring.live_slice()
+            self.tables = ops.update_many(self.tables, self.spec, keys, rng,
+                                          weights=weights)
+            if self.tracker is not None:
+                sel = jnp.asarray(active)
+                keys, weights = keys[sel], weights[sel]
+        else:
+            keys, weights = self.ring.live_slice(active)
+            self.tables = ops.update_rows(self.tables, self.spec, keys, rng,
+                                          active, weights=weights)
+        if self.tracker is not None:
+            self._refresh_topk(active, keys, weights)
         self.ring.reset()
         return pending
+
+    def _refresh_topk(self, rows, keys, weights) -> None:
+        """Merge the just-flushed keys into the stacked top-K tracker.
+
+        Only the active rows' heaps move (the other tables did not change,
+        so their stored estimates are still the sketch's current answers).
+        The candidate union — standing heap + flushed queue slice — is
+        scored with ONE fused query launch over the gathered active
+        tables; stale queue slots (weight 0) are masked out of candidacy.
+        """
+        rows_d = jnp.asarray(rows)
+        tables = self.tables[rows_d]
+        new = topk.refresh_stacked(
+            self._tracker_rows(rows_d), keys, weights > 0,
+            lambda ck: ops.query_many(tables, self.spec, ck))
+        self._scatter_tracker(rows_d, new)
+
+    def topk_row(self, row: int):
+        """(keys, estimates, filled) of one tenant's heap, estimate-sorted.
+
+        Plain tables only change on flush, and every flush refreshes the
+        rows it touched, so the stored estimates ARE the current query
+        answers — no rescore needed on the read path."""
+        tk = self.tracker
+        return (np.asarray(tk.keys[row]), np.asarray(tk.estimates[row]),
+                np.asarray(tk.filled[row]))
 
     def query_rows(self, keys: jnp.ndarray) -> jnp.ndarray:
         """(T, N) estimates, ONE fused launch (keys (N,) broadcast or (T, N))."""
         return ops.query_many(self.tables, self.spec, keys)
 
 
-class WindowPlane:
+class WindowPlane(_TrackerMixin):
     """Watermark-windowed tenants sharing one WindowSpec.
 
     Each tenant owns a ring-backed `WindowedSketch`; ingest buffers in the
@@ -220,7 +324,7 @@ class WindowPlane:
     """
 
     def __init__(self, wspec: w.WindowSpec, queue_capacity: int,
-                 seed: int = 0):
+                 seed: int = 0, track_top: Optional[int] = None):
         self.wspec = wspec
         self.wins: list[w.WindowedSketch] = []
         self.ring = _DeviceRing(queue_capacity)
@@ -230,6 +334,7 @@ class WindowPlane:
         # leaf is kept in lockstep): enqueue-time watermark checks must not
         # read a device scalar back on the ingest hot path
         self.epochs: list[Optional[int]] = []
+        self._init_tracker(track_top)
 
     @property
     def spec(self) -> SketchSpec:
@@ -243,6 +348,7 @@ class WindowPlane:
         self.wins.append(w.window_init(self.wspec))
         self.names.append(name)
         self.epochs.append(None)
+        self._grow_tracker()
         return self.ring.add_row()
 
     def pending(self) -> int:
@@ -276,26 +382,74 @@ class WindowPlane:
                                                 target - have)
         self.epochs[row] = target
 
-    def flush(self) -> int:
-        """Land every tenant's pending events in its ACTIVE bucket: one
-        fused launch over the gathered (T, d, w) active-bucket stack."""
+    def flush(self, dense: bool = False) -> int:
+        """Land every pending tenant's events in its ACTIVE bucket.
+
+        Only the R rows with pending fill are gathered: their active
+        buckets stack into an (R, d, w) array for one fused launch, and
+        the uniforms grid spans the full plane (`uniform_rows`), so the
+        result is bit-identical to the dense whole-plane flush
+        (`dense=True`) that stacked every tenant's bucket.  The tracker
+        refresh scores candidates through `window_query`, so rotation,
+        expiry, and decay reorder the heap alongside the new mass.
+        """
         pending = self.pending()
         if pending == 0:
             return 0
-        keys, weights = self.ring.live_slice()
-        active = jnp.stack([
-            jax.lax.dynamic_index_in_dim(win.tables, win.cursor, 0,
+        rng = self.rng.next()
+        t = len(self.wins)
+        rows = (np.arange(t, dtype=np.int32) if dense
+                else np.flatnonzero(self.ring.fill).astype(np.int32))
+        keys, weights = self.ring.live_slice(None if dense else rows)
+        stack = jnp.stack([
+            jax.lax.dynamic_index_in_dim(self.wins[r].tables,
+                                         self.wins[r].cursor, 0,
                                          keepdims=False)
-            for win in self.wins])
-        active = ops.update_many(active, self.spec, keys, self.rng.next(),
-                                 weights=weights)
-        for i, win in enumerate(self.wins):
+            for r in rows])
+        stack = ops.update_many(stack, self.spec, keys, rng, weights=weights,
+                                uniform_rows=(t, rows))
+        for i, r in enumerate(rows):
+            win = self.wins[r]
             tables = jax.lax.dynamic_update_index_in_dim(
-                win.tables, active[i], win.cursor, 0)
-            self.wins[i] = w.WindowedSketch(tables=tables, cursor=win.cursor,
+                win.tables, stack[i], win.cursor, 0)
+            self.wins[r] = w.WindowedSketch(tables=tables, cursor=win.cursor,
                                             spec=win.spec, epoch=win.epoch)
+        if self.tracker is not None:
+            self._refresh_topk(rows, keys, weights)
         self.ring.reset()
         return pending
+
+    def _refresh_topk(self, rows, keys, weights) -> None:
+        """Stacked heap refresh for the flushed window tenants: candidates
+        are scored through `window_query` against each tenant's CURRENT
+        ring, so expired buckets pull candidates down and fresh mass
+        pushes them up in the same re-selection.  (One window-fused launch
+        per flushed tenant; a multi-ring window kernel is an open item.)
+        """
+        rows_d = jnp.asarray(rows)
+        new = topk.refresh_stacked(
+            self._tracker_rows(rows_d), keys, weights > 0,
+            lambda ck: jnp.stack([w.window_query(self.wins[r], ck[i])
+                                  for i, r in enumerate(rows)]))
+        self._scatter_tracker(rows_d, new)
+
+    def topk_row(self, row: int, **window_kw):
+        """(keys, estimates, filled) of one tenant's heap.
+
+        Window estimates move without any flush (watermark rotation,
+        expiry, query-time decay), so the read path re-scores the standing
+        candidates against the current ring — forwarding n_buckets / mode
+        / gamma — and persists the re-ordered heap before answering.
+        """
+        rows = jnp.asarray([row])
+        new = topk.refresh_stacked(
+            self._tracker_rows(rows), jnp.zeros((1, 0), jnp.uint32), None,
+            lambda ck: w.window_query(self.wins[row], ck[0],
+                                      **window_kw)[None])
+        self._scatter_tracker(rows, new)
+        tk = self.tracker
+        return (np.asarray(tk.keys[row]), np.asarray(tk.estimates[row]),
+                np.asarray(tk.filled[row]))
 
     def query_row(self, row: int, keys: jnp.ndarray, **kw) -> jnp.ndarray:
         """Window estimate for one tenant (fused in-kernel bucket reduce)."""
@@ -307,12 +461,15 @@ class CountService:
 
     def __init__(self, spec: Optional[SketchSpec] = None,
                  tenants: Sequence[str] = (), queue_capacity: int = 4096,
-                 seed: int = 0):
+                 seed: int = 0, track_top: Optional[int] = None):
         if queue_capacity < 1:
             raise ValueError("queue_capacity must be positive")
+        if track_top is not None and track_top < 1:
+            raise ValueError("track_top must be positive")
         self.default_spec = spec
         self.queue_capacity = int(queue_capacity)
         self.seed = int(seed)
+        self.track_top = None if track_top is None else int(track_top)
         self._planes: dict[SketchSpec, TenantPlane] = {}
         self._wplanes: dict[w.WindowSpec, WindowPlane] = {}
         self._where: dict[str, tuple[object, int]] = {}
@@ -360,7 +517,8 @@ class CountService:
             if plane is None:
                 plane = self._wplanes.setdefault(
                     window, WindowPlane(window, self.queue_capacity,
-                                        self.seed))
+                                        self.seed,
+                                        track_top=self.track_top))
         else:
             spec = spec or self.default_spec
             if spec is None:
@@ -369,7 +527,8 @@ class CountService:
             plane = self._planes.get(spec)
             if plane is None:
                 plane = self._planes.setdefault(
-                    spec, TenantPlane(spec, self.queue_capacity, self.seed))
+                    spec, TenantPlane(spec, self.queue_capacity, self.seed,
+                                      track_top=self.track_top))
         row = plane.add(name)
         self._where[name] = (plane, row)
         self._order.append(name)
@@ -533,13 +692,42 @@ class CountService:
                 out[n] = plane.query_row(i, jnp.asarray(probe))
         return out
 
+    def topk(self, name: str, k: Optional[int] = None, **window_kw):
+        """Current top-k heavy hitters of one tenant: (keys, estimates).
+
+        Served from the tenant's device-resident tracker (refreshed by
+        every flush with the just-flushed keys; flushes first here, so the
+        answer is read-your-writes).  Returns up to `k` (default: the
+        tracker width `track_top`) keys sorted by descending estimate —
+        fewer if the tenant has seen fewer distinct keys — and the
+        estimates agree exactly with `query`/`query_all` on those keys.
+        Windowed tenants re-score their candidates against the current
+        ring first (rotation/expiry/decay reorder the heap) and forward
+        `window_kw` (n_buckets / mode / gamma) to that scoring query.
+        """
+        plane, row = self._lookup(name)
+        if plane.tracker is None:
+            raise ValueError("heavy-hitter tracking is off: construct the "
+                             "service with track_top=K")
+        k = self.track_top if k is None else int(k)
+        if not 1 <= k <= self.track_top:
+            raise ValueError(f"k must be in [1, {self.track_top}], got {k}")
+        if window_kw and not isinstance(plane, WindowPlane):
+            raise ValueError(f"tenant {name!r} is not windowed; "
+                             f"window args {sorted(window_kw)} do not apply")
+        self.flush()
+        keys, est, filled = plane.topk_row(row, **window_kw)
+        sel = filled[:k]
+        return keys[:k][sel], est[:k][sel]
+
     # ---- persistence ----
 
     def _meta(self) -> dict:
         meta = {
-            "version": 2,
+            "version": 3,
             "queue_capacity": self.queue_capacity,
             "seed": self.seed,
+            "track_top": self.track_top,
             "tenant_order": self.tenants,
             "stats": dict(self.stats),
             "planes": [{"spec": _spec_meta(p.spec), "tenants": list(p.names),
@@ -557,19 +745,39 @@ class CountService:
             meta["tenants"] = self.tenants
         return meta
 
-    def _tree(self) -> dict:
-        planes = [{"tables": p.tables,
-                   "queue": p.ring.queue,
-                   "fill": jnp.asarray(p.ring.fill)}
-                  for p in self._planes.values()]
-        windows = [{"tables": jnp.stack([x.tables for x in p.wins]),
+    @staticmethod
+    def _tracker_leaves(plane) -> dict:
+        return {"keys": plane.tracker.keys,
+                "estimates": plane.tracker.estimates,
+                "filled": plane.tracker.filled}
+
+    def _tree(self, with_topk: Optional[bool] = None) -> dict:
+        """Checkpoint leaf tree.  with_topk: include the (T, K) tracker
+        leaves (defaults to whether tracking is on; restore passes the
+        manifest's answer so v2 checkpoints map onto a tracker-less
+        target)."""
+        if with_topk is None:
+            with_topk = self.track_top is not None
+        planes = []
+        for p in self._planes.values():
+            leaf = {"tables": p.tables,
+                    "queue": p.ring.queue,
+                    "fill": jnp.asarray(p.ring.fill)}
+            if with_topk:
+                leaf["topk"] = self._tracker_leaves(p)
+            planes.append(leaf)
+        windows = []
+        for p in self._wplanes.values():
+            leaf = {"tables": jnp.stack([x.tables for x in p.wins]),
                     "cursor": jnp.stack([x.cursor for x in p.wins]),
                     "epoch": jnp.asarray([
                         -1 if x.epoch is None else int(x.epoch)
                         for x in p.wins], jnp.int32),
                     "queue": p.ring.queue,
                     "fill": jnp.asarray(p.ring.fill)}
-                   for p in self._wplanes.values()]
+            if with_topk:
+                leaf["topk"] = self._tracker_leaves(p)
+            windows.append(leaf)
         return {"planes": planes, "windows": windows}
 
     def snapshot(self, root: str, step: int) -> str:
@@ -578,18 +786,27 @@ class CountService:
                                metadata=self._meta())
 
     @classmethod
-    def restore(cls, root: str, step: Optional[int] = None) -> "CountService":
+    def restore(cls, root: str, step: Optional[int] = None,
+                track_top: Optional[int] = None) -> "CountService":
         """Rebuild a service (registry + planes + rings) from a snapshot.
 
-        Accepts both the v2 multi-plane manifest layout and the original
-        v1 single-plane layout (whose host queue is replayed into the
-        device ring)."""
+        Accepts the v3 manifest (multi-plane + tracker state), the v2
+        multi-plane layout, and the original v1 single-plane layout (whose
+        host queue is replayed into the device ring).  v3 checkpoints
+        written with tracking on restore their trackers; `track_top`
+        re-arms tracking when restoring a pre-v3 (or tracker-less)
+        checkpoint — those come back with COLD trackers (the candidate
+        heaps re-fill from post-restore traffic; the tables themselves
+        carry no candidate list to rebuild from).
+        """
         meta, step = checkpoint.load_metadata(root, step)
         if meta.get("version", 1) < 2:
-            return cls._restore_v1(root, step, meta)
+            return cls._restore_v1(root, step, meta, track_top)
         default = (_spec_from_meta(meta["spec"]) if "spec" in meta else None)
+        saved_k = meta.get("track_top")
         svc = cls(default, queue_capacity=meta["queue_capacity"],
-                  seed=meta.get("seed", 0))
+                  seed=meta.get("seed", 0),
+                  track_top=saved_k if saved_k is not None else track_top)
         plane_of: dict[str, dict] = {}
         for pm in meta["planes"]:
             for name in pm["tenants"]:
@@ -602,13 +819,17 @@ class CountService:
                 plane_of[name] = {"window": wspec}
         for name in meta["tenant_order"]:
             svc.add_tenant(name, **plane_of[name])
-        tree, _ = checkpoint.restore(root, svc._tree(), step=step)
+        has_topk = saved_k is not None
+        tree, _ = checkpoint.restore(root, svc._tree(with_topk=has_topk),
+                                     step=step)
         for p, pm, leaves in zip(svc._planes.values(), meta["planes"],
                                  tree["planes"]):
             p.tables = leaves["tables"]
             p.ring.queue = leaves["queue"]
             p.ring.fill = np.asarray(leaves["fill"], np.int64)
             p.rng.draws = int(pm.get("rng_draws", 0))
+            if has_topk:
+                p.tracker = topk.TopK(**leaves["topk"])
         for p, wm, leaves in zip(svc._wplanes.values(), meta["windows"],
                                  tree["windows"]):
             for i in range(len(p.wins)):
@@ -622,17 +843,21 @@ class CountService:
             p.ring.queue = leaves["queue"]
             p.ring.fill = np.asarray(leaves["fill"], np.int64)
             p.rng.draws = int(wm.get("rng_draws", 0))
+            if has_topk:
+                p.tracker = topk.TopK(**leaves["topk"])
         svc.stats = dict(meta.get("stats", svc.stats))
         return svc
 
     @classmethod
-    def _restore_v1(cls, root: str, step: int, meta: dict) -> "CountService":
+    def _restore_v1(cls, root: str, step: int, meta: dict,
+                    track_top: Optional[int] = None) -> "CountService":
         """Restore a pre-plane (single-spec, host-queue) checkpoint: load
         the stacked tables directly and replay the persisted host queue
-        into the device ring."""
+        into the device ring.  Trackers (if re-armed) start cold."""
         spec = _spec_from_meta(meta["spec"])
         svc = cls(spec, tenants=meta["tenants"],
-                  queue_capacity=meta["queue_capacity"])
+                  queue_capacity=meta["queue_capacity"],
+                  track_top=track_top)
         plane = next(iter(svc._planes.values()))
         target = {"tables": plane.tables,
                   "queue": jax.ShapeDtypeStruct(

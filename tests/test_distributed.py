@@ -103,6 +103,55 @@ def test_key_routed_sketch_multidevice():
 
 
 @pytest.mark.slow
+def test_routed_topk_multidevice():
+    """Key-routed heavy hitters: each shard tracks its own partition's
+    top-k, and `routed_topk` candidate-set-merges them into one global,
+    replicated heap holding the true heavy hitters with their owning
+    shard's estimates."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.core import SketchSpec, CMS32, init
+        from repro.core import sketch as sk, sharded, topk
+
+        mesh = jax.make_mesh((8,), ("data",))
+        spec = SketchSpec(width=8192, depth=4, counter=CMS32)
+        # 16 heavy keys with distinct known counts, spread over the shards
+        heavy = np.arange(100, 116, dtype=np.uint32)
+        counts = 40 + 10 * np.arange(16)
+        stream = np.repeat(heavy, counts).astype(np.uint32)
+        np.random.default_rng(0).shuffle(stream)
+        stream = stream[: (len(stream) // 8) * 8].reshape(8, -1)
+        tables = jnp.stack([init(spec).table] * 8)
+        rngs = jax.random.split(jax.random.PRNGKey(0), 8)
+        probes = jnp.tile(jnp.asarray(heavy)[None], (8, 1))
+
+        def run(table, k, r, probe):
+            s = sk.Sketch(table=table[0], spec=spec)
+            s = sharded.routed_update(s, k[0], r[0], "data", capacity=2048)
+            tr = topk.refresh(topk.init(6), s, probe[0])
+            top = sharded.routed_topk(tr, "data", k=8)
+            return top.keys[None], top.estimates[None], top.filled[None]
+
+        keys, est, filled = shard_map(
+            run, mesh=mesh,
+            in_specs=(P("data"), P("data"), P("data"), P("data")),
+            out_specs=(P("data"), P("data"), P("data")))(
+                tables, jnp.asarray(stream), rngs, probes)
+        keys, est = np.asarray(keys), np.asarray(est)
+        assert (keys == keys[0:1]).all(), "shards disagree on the merge"
+        assert np.asarray(filled).all()
+        true_top = heavy[np.argsort(-counts)][:8]
+        assert set(keys[0].tolist()) == set(true_top.tolist())
+        want = np.sort(counts)[::-1][:8].astype(np.float32)
+        np.testing.assert_array_equal(est[0], want)
+        print("MERGED", keys[0].tolist())
+    """)
+    assert "MERGED" in out
+
+
+@pytest.mark.slow
 def test_key_routed_window_multidevice():
     """Key-routed bucket ring: routed update into the active bucket, fused
     routed window query (lazy decay weights included) aligned with keys."""

@@ -179,25 +179,33 @@ def test_service_query_all_one_launch_matches_per_tenant():
 
 def test_service_flush_trims_upload_to_fill():
     """A nearly-empty queue uploads only ceil(max_fill/CHUNK) chunks, and
-    trimming never changes the counts that land."""
+    trimming never changes the counts that land.  The first flush has one
+    of two tenants pending, so it takes the active-row path
+    (`ops.update_rows`, R=1); the second has both, so it goes dense."""
     svc = _service(cap=64 * ops.CHUNK)
     seen = []
-    orig = ops.update_many
+    orig_many, orig_rows = ops.update_many, ops.update_rows
 
-    def spy(tables, spec, keys, rng, weights=None):
-        seen.append(keys.shape[1])
-        return orig(tables, spec, keys, rng, weights=weights)
+    def spy_many(tables, spec, keys, rng, weights=None, uniform_rows=None):
+        seen.append(("dense", keys.shape[:2]))
+        return orig_many(tables, spec, keys, rng, weights=weights,
+                         uniform_rows=uniform_rows)
+
+    def spy_rows(tables, spec, keys, rng, rows, weights=None):
+        seen.append(("rows", keys.shape[:2]))
+        return orig_rows(tables, spec, keys, rng, rows, weights=weights)
 
     try:
-        ops_update_many, ops.update_many = ops.update_many, spy
+        ops.update_many, ops.update_rows = spy_many, spy_rows
         svc.enqueue("ads", np.full(10, 3, np.uint32))
         svc.flush()
         svc.enqueue("search", _zipf(ops.CHUNK + 5, 100, seed=1))
         svc.enqueue("ads", np.full(4, 3, np.uint32))
         svc.flush()
     finally:
-        ops.update_many = ops_update_many
-    assert seen == [ops.CHUNK, 2 * ops.CHUNK]  # not 64 * CHUNK
+        ops.update_many, ops.update_rows = orig_many, orig_rows
+    assert seen == [("rows", (1, ops.CHUNK)),       # not (2, 64 * CHUNK)
+                    ("dense", (2, 2 * ops.CHUNK))]
     assert float(svc.query("ads", [3])[0]) >= 7  # all 14 events landed
 
 

@@ -60,3 +60,29 @@ def test_topk_dedup_within_batch():
                       s, jnp.asarray([5, 5, 5, 6], jnp.uint32))
     keys = np.asarray(tr.keys).tolist()
     assert keys.count(5) == 1 and keys.count(6) == 1
+
+
+def test_topk_tracks_max_uint32_key():
+    """Regression: 0xFFFF_FFFF is a valid key (the service admits the full
+    32-bit range), not an empty-slot sentinel — it must be trackable with
+    its real estimate instead of being masked to -inf."""
+    big = 0xFFFF_FFFF
+    s = _sketch_with_counts({big: 90, 1: 100, 2: 50})
+    tr = topk.refresh(topk.init(2), s,
+                      jnp.asarray([1, big, 2], jnp.uint32))
+    assert np.asarray(tr.keys).tolist() == [1, big]
+    np.testing.assert_allclose(np.asarray(tr.estimates), [100.0, 90.0])
+    assert np.asarray(tr.filled).all()
+
+
+def test_topk_empty_slots_do_not_shadow_key_zero():
+    """Unfilled slots hold placeholder key 0 but carry filled=False: a
+    genuine key 0 arriving in a batch must not be deduped away against
+    them, and unfilled slots must never report as results."""
+    s = _sketch_with_counts({0: 5})
+    tr = topk.refresh(topk.init(3), s, jnp.asarray([0], jnp.uint32))
+    filled = np.asarray(tr.filled)
+    np.testing.assert_array_equal(filled, [True, False, False])
+    assert int(np.asarray(tr.keys)[0]) == 0
+    assert float(np.asarray(tr.estimates)[0]) == 5.0
+    assert np.isneginf(np.asarray(tr.estimates)[1:]).all()
