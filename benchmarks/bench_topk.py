@@ -1,6 +1,6 @@
-"""Heavy-hitter plane benchmarks: active-row flush + tracker refresh cost.
+"""Heavy-hitter plane benchmarks: active-row flush + single-launch epoch.
 
-Two questions about the flush pipeline refactor:
+Three questions about the flush pipeline refactor:
 
   1. ACTIVE-ROW FLUSH — under hot-tenant skew (one tenant of T bursting,
      the regime bench_ingest's queue-plane rows also probe), the dense
@@ -11,10 +11,18 @@ Two questions about the flush pipeline refactor:
      asserted bit-identical — the speedup is pure grid shrinkage, not a
      semantics change.  The >= 2x acceptance bar at T >= 16 lives here.
   2. TRACKER REFRESH — what does track_top=K add to a flush?  The tracker
-     path re-queries the just-flushed keys + standing candidates (one
-     fused query launch over the active rows) and re-selects the (T, K)
-     heaps on device; its cost is reported as the tracked/untracked cycle
-     ratio plus the absolute refresh_stacked launch time.
+     path re-queries the just-flushed keys + standing candidates and
+     re-selects the (T, K) heaps on device; its cost is reported as the
+     tracked/untracked cycle ratio plus the absolute refresh_stacked
+     launch time.
+  3. SINGLE-LAUNCH EPOCH — the fused update+score flush
+     (ops.update_score_rows, ONE dispatch) vs the PR 4 two-launch
+     pipeline (active-row update launch, then a fused query refresh
+     launch).  Tables AND heaps are asserted bit-identical; the results
+     JSON additionally records `launch_audit` — per-op dispatch counts
+     captured from `ops.launch_counts()` during one flush epoch — so the
+     single-launch claim is machine-checked by check_regression.py, not
+     prose.
 
     PYTHONPATH=src python -m benchmarks.bench_topk [--quick] [--compiled]
 """
@@ -32,7 +40,7 @@ from benchmarks.bench_ingest import _paired_cycles
 from repro.core import CMLS16, SketchSpec
 from repro.core import topk
 from repro.kernels import ops
-from repro.stream import CountService
+from repro.stream import CountService, WindowSpec
 
 METHODOLOGY = {
     "flush_hot1": "capacity 2 kernel-CHUNKs; each cycle enqueues ONE hot "
@@ -51,6 +59,21 @@ METHODOLOGY = {
                "refresh_T* rows time one refresh_stacked launch directly "
                "(K=64 standing candidates + one CHUNK batch per row, "
                "scored through the fused multi-tenant query).",
+    "epoch": "same hot1 cycle on TRACKED services (track_top=64): fused = "
+             "the default flush (ops.update_score_rows lands the update "
+             "and re-scores the candidate union in ONE dispatch), pair = "
+             "the PR 4 pipeline (ops.update_rows launch, then the "
+             "two-launch _refresh_topk query).  Interleaved pairs, median "
+             "ratio; tables AND tracker heaps asserted bit-identical "
+             "afterwards.",
+    "launch_audit": "per-op dispatch counts (ops.launch_counts) captured "
+                    "over ONE flush epoch per scenario: the tracked "
+                    "tenant-plane flush must be exactly one "
+                    "update_score_rows dispatch, and the windowed plane's "
+                    "tracker refresh exactly one window_query_stacked "
+                    "dispatch regardless of flushed-tenant count.  "
+                    "check_regression.py fails the suite if the audit "
+                    "regresses.",
 }
 
 
@@ -117,6 +140,84 @@ def _tracker_point(spec, t, cap, k=64):
     return tp, tt, t_ref
 
 
+def _pair_flush(plane):
+    """The PR 4 two-launch pipeline, reconstructed: active-row update
+    launch, then the separate fused-query tracker refresh (the path the
+    single-launch epoch replaced; `_refresh_topk` is retained for the
+    dense baseline, which is exactly the second launch)."""
+    pending = plane.pending()
+    if pending == 0:
+        return 0
+    rng = plane.rng.next()
+    active = np.flatnonzero(plane.ring.fill).astype(np.int32)
+    keys, weights = plane.ring.live_slice(active)
+    plane.tables = ops.update_rows(plane.tables, plane.spec, keys, rng,
+                                   active, weights=weights)
+    plane._refresh_topk(active, keys, weights)
+    plane.ring.reset()
+    return pending
+
+
+def _epoch_point(spec, t, cap, k=64):
+    """Fused single-launch epoch vs the two-launch pipeline, hot1 regime."""
+    names = [f"tn{i}" for i in range(t)]
+    svc_f = CountService(spec, tenants=names, queue_capacity=cap, seed=0,
+                         track_top=k)
+    svc_p = CountService(spec, tenants=names, queue_capacity=cap, seed=0,
+                         track_top=k)
+    batch = _hot_batch(cap, seed=t + 77)
+
+    def fused_cycle():
+        svc_f.enqueue_many({names[0]: batch})
+        svc_f.planes[0].flush()
+        jax.block_until_ready((svc_f.planes[0].tables,
+                               svc_f.planes[0].tracker.keys))
+
+    def pair_cycle():
+        svc_p.enqueue_many({names[0]: batch})
+        _pair_flush(svc_p.planes[0])
+        jax.block_until_ready((svc_p.planes[0].tables,
+                               svc_p.planes[0].tracker.keys))
+
+    tf, tp, ratio = _paired_cycles(fused_cycle, pair_cycle, warmup=2, reps=7)
+    pf, pp = svc_f.planes[0], svc_p.planes[0]
+    assert (np.asarray(pf.tables) == np.asarray(pp.tables)).all(), \
+        "fused epoch and two-launch pipeline landed different tables"
+    assert (np.asarray(pf.tracker.keys) == np.asarray(pp.tracker.keys)).all() \
+        and (np.asarray(pf.tracker.estimates)
+             == np.asarray(pp.tracker.estimates)).all(), \
+        "fused epoch and two-launch pipeline landed different heaps"
+    return tf, tp, ratio
+
+
+def _launch_audit(spec, cap, k=8):
+    """Per-op dispatch counts over one flush epoch per scenario."""
+    audit = {}
+    names = ["a", "b", "c"]
+    svc = CountService(spec, tenants=names, queue_capacity=cap, track_top=k)
+    svc.enqueue_many({"a": _hot_batch(256, 1), "b": _hot_batch(256, 2)})
+    ops.reset_launch_counts()
+    svc.flush()
+    audit["tracked_flush_epoch"] = ops.launch_counts()
+    svc.enqueue_many({"a": _hot_batch(256, 3)})
+    ops.reset_launch_counts()
+    for plane in svc.planes:
+        plane.flush(dense=True)
+    audit["dense_two_launch"] = ops.launch_counts()
+    wspec = WindowSpec(sketch=spec, buckets=4, interval=60.0)
+    wsvc = CountService(queue_capacity=cap, track_top=k)
+    for n in names:
+        wsvc.add_tenant(n, window=wspec)
+    for flushed in (1, 3):
+        for i, n in enumerate(names[:flushed]):
+            wsvc.enqueue(n, _hot_batch(256, 10 + i), ts=10.0)
+        ops.reset_launch_counts()
+        wsvc.flush()
+        audit[f"window_flush_T{flushed}"] = ops.launch_counts()
+    ops.reset_launch_counts()
+    return audit
+
+
 def _rows(quick: bool):
     spec = SketchSpec(width=1024, depth=2, counter=CMLS16)
     cap = 2 * ops.CHUNK
@@ -130,6 +231,16 @@ def _rows(quick: bool):
              "derived": f"{round(cap / ta / 1e6, 1)} Mkeys/s"},
             {"name": f"topk_flush_hot1/dense_T{t}",
              "us_per_call": round(td * 1e6),
+             "derived": f"speedup_x{ratio:.2f}"},
+        ]
+    for t in points:
+        tf, tp, ratio = _epoch_point(spec, t, cap)
+        rows += [
+            {"name": f"topk_epoch/fused_T{t}",
+             "us_per_call": round(tf * 1e6),
+             "derived": "1 launch: update+re-score"},
+            {"name": f"topk_epoch/two_launch_T{t}",
+             "us_per_call": round(tp * 1e6),
              "derived": f"speedup_x{ratio:.2f}"},
         ]
     for t in points[:1] if quick else points[:2]:
@@ -147,10 +258,13 @@ def _rows(quick: bool):
 
 def run(quick: bool = False) -> list[dict]:
     rows = _rows(quick)
+    audit = _launch_audit(SketchSpec(width=1024, depth=2, counter=CMLS16),
+                          2 * ops.CHUNK)
     os.makedirs("results", exist_ok=True)
     methodology = dict(METHODOLOGY, **common.mode_methodology())
     with open("results/bench_topk.json", "w") as f:
-        json.dump({"methodology": methodology, "rows": rows}, f, indent=1)
+        json.dump({"methodology": methodology, "rows": rows,
+                   "launch_audit": audit}, f, indent=1)
     return rows
 
 

@@ -22,6 +22,14 @@ commands CI runs (see .github/workflows/ci.yml, bench-smoke job).
 Accuracy rows (no us_per_call) are ignored.  --update rewrites the
 baselines from the current results/ directory (run the quick benches
 first, then commit the refreshed files).
+
+Beyond timings, bench_topk records a `launch_audit` section — per-op
+dispatch counts captured from `kernels.ops.launch_counts()` over one
+flush epoch per scenario — and this checker FAILS the suite if the
+single-launch claims regress: a tracked tenant-plane flush must be
+exactly one `update_score_rows` dispatch, and a windowed plane's tracker
+refresh exactly one `window_query_stacked` dispatch regardless of how
+many tenants flushed.
 """
 from __future__ import annotations
 
@@ -67,6 +75,24 @@ def _timed_rows(doc: dict) -> dict[str, float]:
             if r.get("us_per_call")}
 
 
+def audit_launches(doc: dict) -> list[str]:
+    """Machine-check the flush-epoch launch-count claims in bench_topk."""
+    audit = doc.get("launch_audit")
+    if audit is None:
+        return ["no launch_audit section (bench_topk should record one)"]
+    problems = []
+    epoch = audit.get("tracked_flush_epoch", {})
+    if epoch != {"update_score_rows": 1}:
+        problems.append("tracked flush epoch is not a single fused "
+                        f"update+score dispatch: {epoch}")
+    for key in ("window_flush_T1", "window_flush_T3"):
+        got = audit.get(key, {})
+        if got.get("window_query_stacked") != 1:
+            problems.append(f"{key}: tracker refresh is not ONE stacked "
+                            f"window-query dispatch: {got}")
+    return problems
+
+
 def check(threshold: float) -> int:
     failures = []
     cal_here = calibration_us()
@@ -80,8 +106,18 @@ def check(threshold: float) -> int:
                 break
         else:
             base_doc = _load(base_path)
+            new_doc = _load(new_path)
+            if suite == "bench_topk.json":
+                problems = audit_launches(new_doc)
+                for p in problems:
+                    print(f"FAIL {suite} launch audit: {p}")
+                if problems:
+                    failures.append(suite)
+                else:
+                    print(f"ok {suite}: launch audit (flush epoch = 1 fused "
+                          "dispatch; window refresh = 1 stacked query)")
             base = _timed_rows(base_doc)
-            new = _timed_rows(_load(new_path))
+            new = _timed_rows(new_doc)
             shared = sorted(set(base) & set(new))
             if not shared:
                 print(f"FAIL {suite}: no shared timed rows")

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro import compat
 
+from repro.core import admission
 from repro.core import sketch as sk
 from repro.core import topk
 from repro.core.hashing import mix32
@@ -225,13 +226,41 @@ def routed_topk(tracker, axis_name: str, k: int | None = None):
     dedup across shards.
     """
     k = tracker.keys.shape[0] if k is None else k
-    keys = jax.lax.all_gather(tracker.keys, axis_name).reshape(-1)
-    filled = jax.lax.all_gather(tracker.filled, axis_name).reshape(-1)
-    est = jax.lax.all_gather(tracker.estimates, axis_name).reshape(-1)
+    keys, est, filled = _gathered_candidates(tracker, axis_name)
     est = jnp.where(filled, est, -jnp.inf)
     top_est, idx = jax.lax.top_k(est, k)
     return topk.TopK(keys=keys[idx], estimates=top_est,
                      filled=top_est > -jnp.inf)
+
+
+def _gathered_candidates(tracker, axis_name: str):
+    """All-gather every shard's (K,) tracker row into flat fleet-wide
+    candidate arrays — the merge step shared by `routed_topk` (re-select)
+    and `routed_admit` (admission masks)."""
+    keys = jax.lax.all_gather(tracker.keys, axis_name).reshape(-1)
+    filled = jax.lax.all_gather(tracker.filled, axis_name).reshape(-1)
+    est = jax.lax.all_gather(tracker.estimates, axis_name).reshape(-1)
+    return keys, est, filled
+
+
+def routed_admit(tracker, ids: jnp.ndarray, spec, axis_name: str):
+    """Tracker-fed admission over key-routed shards: the all-gather
+    candidate merge of `routed_topk` extended to admission masks.
+
+    Each shard refreshes a local tracker against its own key partition
+    (its estimates are authoritative — the routing hash gives shards
+    disjoint key sets), so the fleet-wide hot set is the plain union of
+    shard candidates: all_gather the (K,) rows, then admit each id iff it
+    matches a gathered candidate whose estimate clears `spec.threshold`
+    (`admission.admit_tracked` — same row-mapping policy as the
+    single-chip plane, so shards and single-host serving agree on
+    embedding layout).  `ids` is this shard's lookup batch; decisions are
+    replicated because the gathered candidate set is.  Call inside
+    shard_map over `axis_name`; returns (rows, admitted) aligned with
+    ids.  spec: `admission.AdmissionSpec`.
+    """
+    keys, est, filled = _gathered_candidates(tracker, axis_name)
+    return admission.admit_tracked(keys, est, filled, ids, spec)
 
 
 def routed_window_query(win, keys: jnp.ndarray, axis_name: str,

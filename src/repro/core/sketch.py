@@ -21,9 +21,35 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.counters import CounterSpec
 from repro.core.hashing import make_row_seeds, row_hashes
+
+_KEY_MAX = 0xFFFF_FFFF
+
+
+def as_uint32_keys(keys) -> np.ndarray:
+    """Validate and normalize event/probe keys to a flat uint32 array.
+
+    The shared API-boundary helper (`CountService.enqueue`/`query`,
+    `admission.observe_and_admit`): floats, negatives, and values past 32
+    bits are rejected instead of being silently truncated by a blind
+    uint32 cast.  Host-side (NumPy) — callers inside a trace skip it.
+    """
+    arr = np.asarray(keys)
+    if arr.dtype == np.uint32:
+        return arr.ravel()
+    if not np.issubdtype(arr.dtype, np.integer):
+        raise TypeError(f"keys must be integers, got dtype {arr.dtype}")
+    flat = arr.ravel()
+    if flat.size:
+        lo, hi = flat.min(), flat.max()
+        if lo < 0:
+            raise ValueError(f"keys must be non-negative, got {lo}")
+        if hi > _KEY_MAX:
+            raise ValueError(f"keys must fit in 32 bits, got {hi}")
+    return flat.astype(np.uint32)
 
 
 @dataclasses.dataclass(frozen=True)

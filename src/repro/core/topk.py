@@ -14,11 +14,14 @@ never claim a key's identity during dedup (valid entries sort first among
 equal keys), so a fresh buffer full of key-0 placeholders cannot shadow a
 genuine key 0 either.
 
-`refresh` serves one sketch; `refresh_stacked` is the multi-tenant form the
-counting service's flush pipeline uses: (T, K) heaps refreshed in one shot,
-with the scoring function injected so plain planes score through the fused
-multi-tenant query kernel and windowed planes score through `window_query`
-(bucket expiry / lazy decay reorder the heap, not just new mass).
+`refresh` serves one sketch; `refresh_stacked` is the multi-tenant form:
+(T, K) heaps refreshed in one shot with an injected scoring function.  The
+service's flush epoch splits it into `candidates` (heap + batch union) and
+`reselect` (top-k over scored candidates) so the scores can come back from
+the SAME fused kernel launch that landed the update — and windowed planes
+score through the stacked multi-ring window query (bucket expiry / lazy
+decay reorder the heap, not just new mass).  `resize_stacked` re-arms a
+heap stack at a different width (restore with a changed track_top).
 """
 from __future__ import annotations
 
@@ -85,6 +88,31 @@ def _select_stacked(cand, valid, est, *, k):
     return jax.vmap(functools.partial(_select, k=k))(cand, valid, est)
 
 
+def candidates(tracker: TopK, batch_keys: jnp.ndarray,
+               batch_valid: jnp.ndarray | None
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(cand (T, K+N) keys, valid (T, K+N) mask): each row's standing heap
+    joined with its batch.  The scoring half of a refresh is decoupled so
+    the flush epoch can feed `cand` through the fused update+score kernel
+    (the scores come back from the SAME launch that landed the update) and
+    finish with `reselect`."""
+    cand = jnp.concatenate([tracker.keys, batch_keys.astype(jnp.uint32)],
+                           axis=1)
+    if batch_valid is None:
+        batch_valid = jnp.ones(batch_keys.shape, bool)
+    valid = jnp.concatenate([tracker.filled, batch_valid], axis=1)
+    return cand, valid
+
+
+def reselect(cand: jnp.ndarray, valid: jnp.ndarray, est: jnp.ndarray,
+             k: int) -> TopK:
+    """Select the new (T, k) heaps from scored candidates (see
+    `candidates`); `est` (T, K+N) must hold every candidate's CURRENT
+    estimate, so the surviving estimates equal the query answers."""
+    keys, est, filled = _select_stacked(cand, valid, est, k=k)
+    return TopK(keys=keys, estimates=est, filled=filled)
+
+
 def refresh_stacked(tracker: TopK, batch_keys: jnp.ndarray,
                     batch_valid: jnp.ndarray | None, score_fn) -> TopK:
     """Refresh a (T, K) heap stack against per-tenant batches.
@@ -95,17 +123,37 @@ def refresh_stacked(tracker: TopK, batch_keys: jnp.ndarray,
     estimates — e.g. `ops.query_many` bound to the plane's updated tables
     (ONE fused launch for all T rows), or a stacked `window_query` for
     ring-backed tenants.  Every candidate is re-scored, so the surviving
-    estimates always equal the current query answers.
+    estimates always equal the current query answers.  (The flush epoch
+    inlines this as `candidates` -> fused update+score -> `reselect`.)
     """
-    k = tracker.keys.shape[1]
-    cand = jnp.concatenate([tracker.keys, batch_keys.astype(jnp.uint32)],
-                           axis=1)
-    if batch_valid is None:
-        batch_valid = jnp.ones(batch_keys.shape, bool)
-    valid = jnp.concatenate([tracker.filled, batch_valid], axis=1)
-    est = score_fn(cand)
-    keys, est, filled = _select_stacked(cand, valid, est, k=k)
-    return TopK(keys=keys, estimates=est, filled=filled)
+    cand, valid = candidates(tracker, batch_keys, batch_valid)
+    return reselect(cand, valid, score_fn(cand), tracker.keys.shape[1])
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def resize_stacked(tracker: TopK, k: int) -> TopK:
+    """Re-arm a (T, K) heap stack at a different width k.
+
+    Shrinking keeps each row's best k candidates (re-selected by stored
+    estimate — heap contents are preserved, not truncated blind); growing
+    keeps every standing candidate and cold-masks the new slots (they
+    fill from post-resize traffic).  Used by `CountService.restore(...,
+    track_top=k)` when the snapshot was taken at a different track_top.
+    """
+    t, old = tracker.keys.shape
+    if k == old:
+        return tracker
+    if k > old:
+        pad = init_stacked(t, k - old)
+        return TopK(
+            keys=jnp.concatenate([tracker.keys, pad.keys], axis=1),
+            estimates=jnp.concatenate([tracker.estimates, pad.estimates],
+                                      axis=1),
+            filled=jnp.concatenate([tracker.filled, pad.filled], axis=1))
+    est = jnp.where(tracker.filled, tracker.estimates, -jnp.inf)
+    top_est, idx = jax.lax.top_k(est, k)
+    return TopK(keys=jnp.take_along_axis(tracker.keys, idx, axis=1),
+                estimates=top_est, filled=top_est > -jnp.inf)
 
 
 def refresh(tracker: TopK, sketch: sk.Sketch, batch_keys: jnp.ndarray,

@@ -15,9 +15,19 @@ ingest queue itself is device-resident: `queue_append` lands microbatches
 in the (T, capw) ring with one scatter-append launch (ring donated, fill
 mirrored on the host), and `queue_weights` turns the host fill mirror into
 the flush mask without ever shipping the ring back.
+
+The flush itself is a SINGLE-LAUNCH EPOCH: `update_score_rows` fuses the
+active-row conservative update with the heavy-hitter candidate re-query
+(the table block is scored while still VMEM-resident), and
+`window_query_stacked` refreshes every flushed window tenant's tracker
+with one multi-ring launch.  Both follow the queue-append engine pattern
+("auto" = Pallas kernel on TPU, bit-identical jitted XLA reference from
+`kernels/ref.py` elsewhere), and every wrapper here tallies its dispatches
+in `launch_counts()` so launch-count claims are auditable.
 """
 from __future__ import annotations
 
+import collections
 import functools
 
 import jax
@@ -26,12 +36,15 @@ import numpy as np
 
 from repro.core import sketch as sk
 from repro.core.hashing import host_row_seeds
+from repro.kernels import ref
 from repro.kernels.sketch import (CHUNK, LANES, _shift_to_fill,
                                   fused_query_pallas, fused_update_pallas,
-                                  fused_update_rows_pallas, query_pallas,
+                                  fused_update_rows_pallas,
+                                  fused_update_score_pallas, query_pallas,
                                   queue_append_dense_pallas,
                                   queue_append_pallas, update_pallas,
-                                  window_query_pallas)
+                                  window_query_pallas,
+                                  window_query_stacked_pallas)
 
 # VMEM budget the resident-table strategy is valid for (per TPU core).
 VMEM_TABLE_LIMIT = 12 * 1024 * 1024
@@ -39,6 +52,27 @@ VMEM_TABLE_LIMIT = 12 * 1024 * 1024
 # None = auto (interpret off-TPU); benchmarks/run.py's --interpret/--compiled
 # flag pins it so the same scripts produce real-TPU numbers on hardware.
 _INTERPRET_OVERRIDE: bool | None = None
+
+# Per-op dispatch tally: every public wrapper below bumps its name once
+# per successful call — AFTER argument validation, whichever engine
+# (kernel, XLA reference, or past-VMEM jnp fallback) ends up serving the
+# dispatch — so callers (the service, the benchmarks) can AUDIT dispatch
+# counts: "the flush epoch is one launch" is a measured number in
+# results/bench_topk.json, not prose.
+_LAUNCHES: collections.Counter = collections.Counter()
+
+
+def _launch(name: str) -> None:
+    _LAUNCHES[name] += 1
+
+
+def launch_counts() -> dict[str, int]:
+    """Snapshot of {op name: dispatches issued} since the last reset."""
+    return dict(_LAUNCHES)
+
+
+def reset_launch_counts() -> None:
+    _LAUNCHES.clear()
 
 
 def set_interpret_override(value: bool | None) -> None:
@@ -67,6 +101,7 @@ def _interpret() -> bool:
 
 def query(sketch: sk.Sketch, keys: jnp.ndarray) -> jnp.ndarray:
     """Kernel-path sketch query; falls back to the jnp path past VMEM."""
+    _launch("query")
     if not fits_vmem(sketch.spec):
         return sk.query(sketch, keys)
     return query_pallas(sketch.table, keys, seeds=_seeds_tuple(sketch.spec),
@@ -91,6 +126,7 @@ def query_many(tables: jnp.ndarray, spec: sk.SketchSpec, keys: jnp.ndarray
         # output tiles unwritten — fail loudly instead
         raise ValueError(f"per-tenant keys need {tables.shape[0]} rows, "
                          f"got {keys.shape[0]}")
+    _launch("query_many")
     if not fits_vmem(spec):
         return sk.query_stacked(tables, spec, keys)
     return fused_query_pallas(tables, keys, seeds=_seeds_tuple(spec),
@@ -106,24 +142,28 @@ def window_query_tables(tables: jnp.ndarray, spec: sk.SketchSpec,
 
     tables (B, d, w) bucket ring, keys (N,), weights (B,) per-bucket
     estimate weights (0 = expired, gamma^age = lazy decay).  mode "sum"
-    or "max".  engine: "kernel" forces the Pallas path, "jnp" the vmapped
+    or "max".  engine: "kernel" forces the Pallas path, "jnp" the pure-jnp
     reference (used inside collectives), "auto" picks the kernel when the
-    bucket table fits VMEM.  Returns float32 (N,).
+    bucket table fits VMEM.  The jnp engine is the stacked reference at
+    R=1 (`ref.window_query_stacked_ref`), so the per-ring fallback and
+    the stacked tracker-refresh fallback share ONE accumulation order —
+    in-order over buckets, matching the kernel grid.  Returns float32
+    (N,).
     """
     if mode not in ("sum", "max"):
         raise ValueError(f"unknown window query mode {mode!r}")
+    if engine not in ("auto", "kernel", "jnp"):
+        raise ValueError(f"unknown query engine {engine!r}")
     if weights.shape != (tables.shape[0],):
         raise ValueError(f"need one weight per bucket: weights "
                          f"{weights.shape} vs {tables.shape[0]} buckets")
+    _launch("window_query")
     if engine == "auto":
         engine = "kernel" if fits_vmem(spec) else "jnp"
     if engine == "jnp":
-        keys_b = jnp.broadcast_to(keys[None, :],
-                                  (tables.shape[0], keys.shape[0]))
-        per = sk.query_stacked(tables, spec, keys_b) * weights[:, None]
-        return per.sum(axis=0) if mode == "sum" else per.max(axis=0)
-    if engine != "kernel":
-        raise ValueError(f"unknown query engine {engine!r}")
+        return ref.window_query_stacked_ref(
+            tables[None], keys[None], weights[None], _row_seeds_array(spec),
+            spec.counter, mode=mode)[0]
     return window_query_pallas(tables, keys, weights,
                                seeds=_seeds_tuple(spec), width=spec.width,
                                counter=spec.counter, mode=mode,
@@ -132,6 +172,7 @@ def window_query_tables(tables: jnp.ndarray, spec: sk.SketchSpec,
 
 def update(sketch: sk.Sketch, keys: jnp.ndarray, rng: jax.Array) -> sk.Sketch:
     """Kernel-path batched conservative update (dedup + n-fold + scatter-max)."""
+    _launch("update")
     if not fits_vmem(sketch.spec):
         return sk.update_batched(sketch, keys, rng)
     sorted_keys, mult = sk._dedup(keys)
@@ -141,6 +182,28 @@ def update(sketch: sk.Sketch, keys: jnp.ndarray, rng: jax.Array) -> sk.Sketch:
                           width=sketch.spec.width,
                           counter=sketch.spec.counter,
                           interpret=_interpret())
+    return sk.Sketch(table=table, spec=sketch.spec)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _update_xla_jit(table, keys, rng, *, spec):
+    sorted_keys, mult = sk._dedup(keys)
+    uniforms = jax.random.uniform(rng, sorted_keys.shape)
+    return ref.update_chunked_ref(table, sorted_keys, mult, uniforms,
+                                  _row_seeds_array(spec), spec.counter,
+                                  CHUNK)
+
+
+def update_xla(sketch: sk.Sketch, keys: jnp.ndarray, rng: jax.Array
+               ) -> sk.Sketch:
+    """Bit-identical XLA engine of `update` (the queue-append pattern's
+    off-TPU half): same dedup and uniform draw, applied through the
+    CHUNK-sequential reference so a key in chunk 2 sees chunk 1's writes
+    exactly as the kernel grid does — `sk.update_batched`'s one-shot
+    min-read would diverge on cross-chunk cell collisions.
+    """
+    _launch("update")
+    table = _update_xla_jit(sketch.table, keys, rng, spec=sketch.spec)
     return sk.Sketch(table=table, spec=sketch.spec)
 
 
@@ -209,6 +272,7 @@ def update_many(tables: jnp.ndarray, spec: sk.SketchSpec, keys: jnp.ndarray,
     """
     if weights is None:
         weights = jnp.ones(keys.shape, jnp.float32)
+    _launch("update_many")
     if not fits_vmem(spec):
         if uniform_rows is None:
             rngs = jax.random.split(rng, tables.shape[0])
@@ -249,6 +313,7 @@ def update_rows(tables: jnp.ndarray, spec: sk.SketchSpec, keys: jnp.ndarray,
     rows = np.asarray(rows, np.int32)
     if weights is None:
         weights = jnp.ones(keys.shape, jnp.float32)
+    _launch("update_rows")
     if not fits_vmem(spec):
         rngs = jax.random.split(rng, tables.shape[0])[rows]
 
@@ -259,6 +324,132 @@ def update_rows(tables: jnp.ndarray, spec: sk.SketchSpec, keys: jnp.ndarray,
         return tables.at[rows].set(new)
     return _update_rows_jit(tables, keys, weights, rng, rows, spec=spec,
                             interpret=_interpret())
+
+
+# --------------------------------------------------------------------------
+# single-launch flush epoch: fused update + candidate re-score
+# --------------------------------------------------------------------------
+
+def _row_seeds_array(spec: sk.SketchSpec) -> jnp.ndarray:
+    return jnp.asarray(_seeds_tuple(spec), jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def _update_score_rows_kernel_jit(tables, keys, weights, rng, rows, cand, *,
+                                  spec, interpret):
+    sorted_keys, mult = jax.vmap(sk.dedup_weighted)(keys, weights)
+    uniforms = _parity_uniforms(rng, keys.shape[1], tables.shape[0], rows)
+    return fused_update_score_pallas(tables, sorted_keys, mult, uniforms,
+                                     cand, rows, seeds=_seeds_tuple(spec),
+                                     width=spec.width, counter=spec.counter,
+                                     interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _update_score_rows_xla_jit(tables, keys, weights, rng, rows, cand, *,
+                               spec):
+    sorted_keys, mult = jax.vmap(sk.dedup_weighted)(keys, weights)
+    uniforms = _parity_uniforms(rng, keys.shape[1], tables.shape[0], rows)
+    return ref.update_score_rows_ref(tables, sorted_keys, mult, uniforms,
+                                     rows, cand, _row_seeds_array(spec),
+                                     spec.counter, CHUNK)
+
+
+def update_score_rows(tables: jnp.ndarray, spec: sk.SketchSpec,
+                      keys: jnp.ndarray, rng: jax.Array, rows,
+                      cand: jnp.ndarray,
+                      weights: jnp.ndarray | None = None,
+                      engine: str = "auto"):
+    """Single-launch flush epoch: active-row conservative update PLUS the
+    heavy-hitter candidate re-query, one fused computation.
+
+    tables (T, d, w); keys/weights (R, N) active-row microbatches; rows
+    (R,) int32 target rows (unique within a call); cand (R, M) each row's
+    candidate keys (standing heap + flushed batch).  Tables update exactly
+    as `update_rows` (full-grid parity uniforms — bit-identical to the
+    dense flush), and the returned float32 (R, M) estimates equal a
+    `query_many` over the updated gathered rows — but the table block is
+    only fetched once: the kernel re-scores while it is still
+    VMEM-resident (`fused_update_score_pallas`).
+
+    engine: "kernel" forces the Pallas path, "xla" the jitted reference
+    (`ref.update_score_rows_ref` — chunk-sequential, bit-identical), and
+    "auto" picks the kernel on TPU and the XLA reference elsewhere (the
+    queue-append pattern: interpreter-mode Pallas would tax the flush hot
+    path with per-block emulation cost).  Tables past the VMEM budget
+    always take the XLA engine.  Returns (new_tables, estimates).
+    """
+    if engine not in ("auto", "kernel", "xla"):
+        raise ValueError(f"unknown update_score engine {engine!r}")
+    rows = np.asarray(rows, np.int32)
+    if weights is None:
+        weights = jnp.ones(keys.shape, jnp.float32)
+    interpret = _interpret()
+    if engine == "auto":
+        engine = "xla" if (interpret or not fits_vmem(spec)) else "kernel"
+    if engine == "kernel" and not fits_vmem(spec):
+        raise ValueError("table exceeds the VMEM budget; use engine='xla'")
+    _launch("update_score_rows")
+    if engine == "xla":
+        return _update_score_rows_xla_jit(tables, keys, weights, rng, rows,
+                                          cand, spec=spec)
+    return _update_score_rows_kernel_jit(tables, keys, weights, rng, rows,
+                                         cand, spec=spec, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "mode"))
+def _window_query_stacked_xla_jit(tables, keys, weights, *, spec, mode):
+    return ref.window_query_stacked_ref(tables, keys, weights,
+                                        _row_seeds_array(spec), spec.counter,
+                                        mode=mode)
+
+
+def window_query_stacked(tables: jnp.ndarray, spec: sk.SketchSpec,
+                         keys: jnp.ndarray, weights: jnp.ndarray,
+                         mode: str = "sum", engine: str = "auto"
+                         ) -> jnp.ndarray:
+    """Stacked multi-ring window reduction: R rings, ONE fused launch.
+
+    tables (R, B, d, w) bucket rings; keys (R, N) per-ring probes; weights
+    (R, B) per-ring per-bucket estimate weights (0 = expired, gamma^age =
+    lazy decay).  The WindowPlane tracker refresh calls this once per
+    flush epoch no matter how many tenants flushed — previously one
+    `window_query` launch per flushed tenant.
+
+    engine: "auto" follows the per-ring `window_query_tables` policy —
+    the kernel whenever the bucket table fits VMEM, the reference
+    (`ref.window_query_stacked_ref`, which the per-ring jnp fallback also
+    runs at R=1) past it — NOT the queue-append off-TPU-XLA choice: the
+    in-order weighted float accumulation is only bitwise reproducible
+    within one engine family (mode="max" and the bucket estimates
+    themselves ARE cross-engine bit-identical; the "sum" rounding is
+    fusion-dependent at one ulp), and the tracker's stored estimates must
+    equal the read path's `window_query` answers exactly.  Returns
+    float32 (R, N), bit-identical to R per-ring `window_query` calls.
+    """
+    if mode not in ("sum", "max"):
+        raise ValueError(f"unknown window query mode {mode!r}")
+    if engine not in ("auto", "kernel", "xla"):
+        raise ValueError(f"unknown window_query_stacked engine {engine!r}")
+    if keys.shape[0] != tables.shape[0]:
+        raise ValueError(f"per-ring keys need {tables.shape[0]} rows, "
+                         f"got {keys.shape[0]}")
+    if weights.shape != tables.shape[:2]:
+        raise ValueError(f"need (R, B) weights: {weights.shape} vs "
+                         f"{tables.shape[:2]}")
+    interpret = _interpret()
+    if engine == "auto":
+        engine = "kernel" if fits_vmem(spec) else "xla"
+    if engine == "kernel" and not fits_vmem(spec):
+        raise ValueError("table exceeds the VMEM budget; use engine='xla'")
+    _launch("window_query_stacked")
+    if engine == "xla":
+        return _window_query_stacked_xla_jit(tables, keys, weights,
+                                             spec=spec, mode=mode)
+    return window_query_stacked_pallas(tables, keys, weights,
+                                       seeds=_seeds_tuple(spec),
+                                       width=spec.width, counter=spec.counter,
+                                       mode=mode, interpret=interpret)
 
 
 # --------------------------------------------------------------------------
@@ -321,6 +512,7 @@ def queue_append(queue: jnp.ndarray, keys: jnp.ndarray, rows, fill, count,
     """
     if engine not in ("auto", "kernel", "xla"):
         raise ValueError(f"unknown queue_append engine {engine!r}")
+    _launch("queue_append")
     rows = np.asarray(rows, np.int32)
     fill = np.asarray(fill, np.int32)
     count = np.asarray(count, np.int32)

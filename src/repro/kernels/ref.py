@@ -3,9 +3,21 @@
 Standalone (no pallas import) so kernel tests compare two independent code
 paths.  Semantics are identical to `repro.core.sketch`'s query/batched-update
 given the same (pre-deduplicated) inputs.
+
+The `*_rows_ref` / `*_stacked_ref` functions double as the jitted XLA
+*engines* behind `kernels.ops`'s `engine="auto"` selection: they mirror
+the kernels' grid semantics exactly, including the sequential chunk sweep
+of the update (a key in chunk 2 sees chunk 1's writes) and the in-order
+bucket accumulation of the window reduction.  Counter states (integers)
+and raw query estimates are bit-identical to the kernels; the window
+"sum" reduction's float rounding is fusion-dependent across engines (one
+ulp), which is why `ops.window_query_stacked`'s auto stays on the kernel
+family while `ops.update_score_rows`'s auto takes this path off-TPU (the
+queue-append pattern).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.counters import CounterSpec
@@ -37,3 +49,77 @@ def update_ref(table: jnp.ndarray, keys: jnp.ndarray, mult: jnp.ndarray,
     new_state = counter.nfold(cmin, mult, uniforms)
     write = jnp.where(mult > 0, new_state, jnp.zeros_like(new_state))
     return table.at[rows, cols].max(jnp.broadcast_to(write[None], (d, keys.shape[0])))
+
+
+def update_chunked_ref(table: jnp.ndarray, keys: jnp.ndarray,
+                       mult: jnp.ndarray, uniforms: jnp.ndarray,
+                       row_seeds: jnp.ndarray, counter: CounterSpec,
+                       chunk: int) -> jnp.ndarray:
+    """`update_ref` applied in `chunk`-sized slices, sequentially.
+
+    Mirrors the kernels' grid contract: each chunk's conservative
+    scatter-max is visible to the next chunk (two distinct keys colliding
+    on a cell across a chunk boundary read different minima than a
+    one-shot update would), so this — not a single `update_ref` over the
+    whole batch — is the bit-identical oracle for multi-chunk launches.
+    """
+    n = keys.shape[0]
+    pad = -n % chunk
+    keys = jnp.pad(keys, (0, pad))
+    mult = jnp.pad(mult, (0, pad))
+    uniforms = jnp.pad(uniforms, (0, pad), constant_values=1.0)
+    for i in range((n + pad) // chunk):
+        sl = slice(i * chunk, (i + 1) * chunk)
+        table = update_ref(table, keys[sl], mult[sl], uniforms[sl],
+                           row_seeds, counter)
+    return table
+
+
+def update_score_rows_ref(tables: jnp.ndarray, keys: jnp.ndarray,
+                          mult: jnp.ndarray, uniforms: jnp.ndarray,
+                          rows: jnp.ndarray, cand: jnp.ndarray,
+                          row_seeds: jnp.ndarray, counter: CounterSpec,
+                          chunk: int):
+    """XLA engine of `fused_update_score_pallas`: active-row update, then
+    candidate re-query against the just-updated rows.
+
+    tables (T, d, w); keys/mult/uniforms (R, N); rows (R,) target rows;
+    cand (R, M) candidate keys.  Returns (new_tables (T, d, w), float32
+    estimates (R, M)) — bit-identical to the single-launch kernel epoch
+    (the update runs chunk-sequentially per row; the scores read the new
+    state, exactly as the kernel's score phase reads the aliased block).
+    """
+    def one(table, k, m, u):
+        return update_chunked_ref(table, k, m, u, row_seeds, counter, chunk)
+
+    new_rows = jax.vmap(one)(tables[rows], keys, mult, uniforms)
+    est = jax.vmap(lambda t, c: query_ref(t, c, row_seeds, counter))(
+        new_rows, cand)
+    return tables.at[rows].set(new_rows), est
+
+
+def window_query_stacked_ref(tables: jnp.ndarray, keys: jnp.ndarray,
+                             weights: jnp.ndarray, row_seeds: jnp.ndarray,
+                             counter: CounterSpec, mode: str = "sum"
+                             ) -> jnp.ndarray:
+    """XLA engine of `window_query_stacked_pallas`: R bucket rings reduced
+    bucket-by-bucket IN ORDER (b ascending), matching the kernel's
+    innermost-bucket accumulation bit for bit.
+
+    tables (R, B, d, w); keys (R, N); weights (R, B).  Returns (R, N).
+    """
+    b = tables.shape[1]
+
+    def one(ring, k, w):
+        out = None
+        for i in range(b):  # in-order accumulation == kernel grid order
+            est = query_ref(ring[i], k, row_seeds, counter) * w[i]
+            if out is None:
+                out = est
+            elif mode == "sum":
+                out = out + est
+            else:
+                out = jnp.maximum(out, est)
+        return out
+
+    return jax.vmap(one)(tables, keys, weights)

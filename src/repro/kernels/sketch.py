@@ -24,6 +24,13 @@ with the grid:
     with the per-row fill counters in SMEM (scalar prefetch drives the
     block index map) and the ring input/output aliased, so `enqueue` is a
     device call that never ships the queue back to the host.
+  * flush epoch (`fused_update_score_pallas`): the active-row update and
+    the heavy-hitter candidate re-query fused into ONE launch — each
+    row's chunk axis runs its update sweep first, then scores the
+    candidate set against the same still-resident aliased table block.
+    `window_query_stacked_pallas` is the windowed read-side analogue: R
+    flushed tenants' bucket rings, grid (ring, chunk, bucket), one launch
+    for the whole tracker refresh.
 
 Keys are laid out as (8k, 128) tiles to match the 8x128 vector lanes; the
 per-row hash/gather/scatter loop is unrolled in Python over the small depth
@@ -63,13 +70,17 @@ def _mix32(x):
     return x
 
 
-def _table_min(table_ref, keys, *, seeds, width, t=None):
+def _table_min(table_ref, keys, *, seeds, width, t=None, pre=None):
     """min over rows of the hashed cells: the shared read of every query
-    kernel.  table_ref block is (d, w) or, with leading index t, (1, d, w)."""
+    kernel.  table_ref block is (d, w), (1, d, w) with leading index t, or
+    any deeper nesting via the explicit `pre` index prefix (e.g. (0, 0) for
+    a (1, 1, d, w) ring block)."""
+    if pre is None:
+        pre = () if t is None else (t,)
     cmin = None
     for k, seed in enumerate(seeds):
         cols = (_mix32(keys ^ jnp.uint32(seed)) % jnp.uint32(width)).astype(jnp.int32)
-        row = table_ref[k, :] if t is None else table_ref[t, k, :]
+        row = table_ref[(*pre, k, slice(None))]
         vals = row[cols.reshape(-1)].reshape(cols.shape)  # rank-1 VMEM gather
         cmin = vals if cmin is None else jnp.minimum(cmin, vals)
     return cmin
@@ -315,6 +326,97 @@ def fused_update_rows_pallas(tables, keys, mult, uniforms, rows, *,
     )(rows, tables, key_t, mult_t, unif_t)
 
 
+def _fused_update_score_kernel(meta_ref, tables_ref, keys_ref, mult_ref,
+                               unif_ref, cand_ref, out_ref, est_ref, *,
+                               seeds, width, counter, upd_chunks):
+    """One (active-row, chunk) grid step of the single-launch flush epoch.
+
+    The chunk axis is split in two phases: steps 0..upd_chunks-1 run the
+    conservative update (identical body to `_fused_update_rows_kernel`),
+    the remaining steps re-query the row's tracker candidate set against
+    the SAME aliased table block — which is still VMEM-resident, because
+    the block index map keeps pointing at meta[ri] for the whole row.  The
+    grid executes sequentially with the chunk axis innermost, so every
+    candidate score observes every update chunk of its row: one launch
+    lands the flush AND refreshes the heavy-hitter estimates.
+    """
+    del meta_ref
+    ci = pl.program_id(1)
+
+    @pl.when(ci < upd_chunks)
+    def _update():
+        _fused_update_kernel(tables_ref, keys_ref, mult_ref, unif_ref,
+                             out_ref, seeds=seeds, width=width,
+                             counter=counter)
+
+    @pl.when(ci >= upd_chunks)
+    def _score():
+        keys = cand_ref[0].astype(jnp.uint32)            # (8, 128)
+        cmin = _table_min(out_ref, keys, seeds=seeds, width=width, t=0)
+        est_ref[0] = counter.decode(cmin)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "counter", "seeds",
+                                             "interpret"))
+def fused_update_score_pallas(tables, keys, mult, uniforms, cand, rows, *,
+                              seeds: tuple, width: int, counter: CounterSpec,
+                              interpret: bool = True):
+    """Single-launch flush epoch: conservative update THEN candidate
+    re-score, while each active row's (d, w) table block is VMEM-resident.
+
+    tables (T, d, w): the whole plane's stacked tables (input/output
+    aliased — unlisted rows persist in place); keys/mult/uniforms (R, N):
+    the active rows' pre-deduplicated microbatches; cand (R, M): each
+    row's heavy-hitter candidate set (standing heap + just-flushed keys);
+    rows (R,) int32 SMEM row map (scalar prefetch), unique within a call.
+    Grid (R, upd_chunks + cand_chunks): the first upd_chunks steps of each
+    row are exactly `fused_update_rows_pallas`'s update sweep, the rest
+    read the freshly-written aliased block and emit float32 estimates —
+    bit-identical to that update launch followed by a `fused_query_pallas`
+    launch over the gathered updated rows, minus the second launch and the
+    second table fetch.  Returns (new_tables (T, d, w), est (R, M)).
+    """
+    r = keys.shape[0]
+    _, d, _ = tables.shape
+    m = cand.shape[1]
+    key_t, padded = _pad_tiles_2d(keys.astype(jnp.uint32), 0)
+    mult_t, _ = _pad_tiles_2d(mult.astype(jnp.float32), 0.0)
+    unif_t, _ = _pad_tiles_2d(uniforms.astype(jnp.float32), 1.0)
+    cand_t, cand_padded = _pad_tiles_2d(cand.astype(jnp.uint32), 0)
+    uc = padded // CHUNK            # update chunks
+    qc = cand_padded // CHUNK       # candidate-score chunks
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r, uc + qc),
+        in_specs=[
+            pl.BlockSpec((1, d, width), lambda ri, ci, meta: (meta[ri], 0, 0)),
+            pl.BlockSpec((1, SUBLANES, LANES),
+                         lambda ri, ci, meta: (ri, jnp.minimum(ci, uc - 1), 0)),
+            pl.BlockSpec((1, SUBLANES, LANES),
+                         lambda ri, ci, meta: (ri, jnp.minimum(ci, uc - 1), 0)),
+            pl.BlockSpec((1, SUBLANES, LANES),
+                         lambda ri, ci, meta: (ri, jnp.minimum(ci, uc - 1), 0)),
+            pl.BlockSpec((1, SUBLANES, LANES),
+                         lambda ri, ci, meta: (ri, jnp.maximum(ci - uc, 0), 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d, width), lambda ri, ci, meta: (meta[ri], 0, 0)),
+            pl.BlockSpec((1, SUBLANES, LANES),
+                         lambda ri, ci, meta: (ri, jnp.maximum(ci - uc, 0), 0)),
+        ],
+    )
+    new_tables, est = pl.pallas_call(
+        functools.partial(_fused_update_score_kernel, seeds=seeds,
+                          width=width, counter=counter, upd_chunks=uc),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct(tables.shape, tables.dtype),
+                   jax.ShapeDtypeStruct(cand_t.shape, jnp.float32)),
+        input_output_aliases={1: 0},  # tables aliased past the meta scalars
+        interpret=interpret,
+    )(rows, tables, key_t, mult_t, unif_t, cand_t)
+    return new_tables, est.reshape(r, -1)[:, :m]
+
+
 def _queue_append_kernel(meta_ref, queue_ref, buf_ref, out_ref):
     """One row of the device-ring scatter append.
 
@@ -485,3 +587,71 @@ def window_query_pallas(tables, keys, weights, *, seeds: tuple, width: int,
         interpret=interpret,
     )(tables, tiles, w_tiles)
     return out.reshape(-1)[:n]
+
+
+def _window_query_stacked_kernel(tables_ref, keys_ref, w_ref, out_ref, *,
+                                 seeds, width, counter, mode):
+    """One (ring, key-chunk, bucket) grid step of the multi-ring query.
+
+    Same reduction as `_window_query_kernel` with a leading ring axis: the
+    bucket axis is innermost, so for a fixed (ring, chunk) the output
+    block stays resident while ring r's B bucket tables stream through
+    VMEM — R rings cost ONE launch instead of R, the read-side analogue
+    of the fused multi-tenant query.  w_ref holds ring r's weight for
+    bucket b (0 expired / gamma^age decay), applied to the estimate.
+    """
+    b = pl.program_id(2)
+    keys = keys_ref[0].astype(jnp.uint32)                # (8, 128)
+    cmin = _table_min(tables_ref, keys, seeds=seeds, width=width,
+                      pre=(0, 0))
+    est = counter.decode(cmin) * w_ref[0, 0, 0]
+
+    @pl.when(b == 0)
+    def _init():
+        out_ref[0] = est
+
+    @pl.when(b != 0)
+    def _reduce():
+        if mode == "sum":
+            out_ref[0] = out_ref[0] + est
+        else:
+            out_ref[0] = jnp.maximum(out_ref[0], est)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("width", "counter", "seeds", "mode",
+                                    "interpret"))
+def window_query_stacked_pallas(tables, keys, weights, *, seeds: tuple,
+                                width: int, counter: CounterSpec,
+                                mode: str = "sum", interpret: bool = True):
+    """Stacked multi-ring windowed query: R bucket rings, ONE launch.
+
+    tables (R, B, d, w): one bucket ring per flushed window tenant; keys
+    (R, N): each ring's probe keys; weights (R, B): per-ring per-bucket
+    estimate weights.  Grids over (ring, key-chunk, bucket) with the
+    bucket axis innermost; the in-kernel weighted sum/max reduction is
+    bit-identical to R separate `window_query_pallas` launches.  Returns
+    float32 (R, N).
+    """
+    if mode not in ("sum", "max"):
+        raise ValueError(f"unknown window query mode {mode!r}")
+    r, b, d, _ = tables.shape
+    n = keys.shape[1]
+    tiles, padded = _pad_tiles_2d(keys.astype(jnp.uint32), 0)
+    w_tiles = jnp.broadcast_to(weights.astype(jnp.float32)[:, :, None],
+                               (r, b, LANES))
+    out = pl.pallas_call(
+        functools.partial(_window_query_stacked_kernel, seeds=seeds,
+                          width=width, counter=counter, mode=mode),
+        grid=(r, padded // CHUNK, b),
+        in_specs=[
+            pl.BlockSpec((1, 1, d, width), lambda ri, ci, bi: (ri, bi, 0, 0)),
+            pl.BlockSpec((1, SUBLANES, LANES), lambda ri, ci, bi: (ri, ci, 0)),
+            pl.BlockSpec((1, 1, LANES), lambda ri, ci, bi: (ri, bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, SUBLANES, LANES),
+                               lambda ri, ci, bi: (ri, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct(tiles.shape, jnp.float32),
+        interpret=interpret,
+    )(tables, tiles, w_tiles)
+    return out.reshape(r, -1)[:, :n]

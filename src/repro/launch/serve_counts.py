@@ -7,10 +7,13 @@ Stands up a `CountService` whose tenants span TWO sketch specs (a wide
 CMLS16 plane and a narrow CMS32 metrics plane) plus a watermark-windowed
 tenant, pushes a Zipfian event stream through the device-resident ingest
 rings (`enqueue_many`: one scatter-append launch per plane per microbatch;
-every flush is one fused update launch per plane), serves ALL tenants'
-hot-key queries with one fused query launch per plane, and round-trips the
-whole multi-plane registry through a checkpoint.  The ingest loop runs
-under `jax.transfer_guard_device_to_host("disallow")` — the queue buffers
+every flush is ONE fused update+re-score epoch per plane — track_top is
+on, so the heavy-hitter heaps refresh inside the update launch), serves
+ALL tenants' hot-key queries with one fused query launch per plane, reads
+the trending board off the tracker, maps ids through the tracker-fed
+admission plane, and round-trips the whole multi-plane registry through a
+checkpoint.  The ingest loop runs under
+`jax.transfer_guard_device_to_host("disallow")` — the queue buffers
 provably never cross back to the host.
 """
 from __future__ import annotations
@@ -24,6 +27,7 @@ import numpy as np
 import jax
 
 from repro.core import CMLS16, CMS32, SketchSpec
+from repro.core.admission import AdmissionSpec
 from repro.stream import CountService, WindowPlane, WindowSpec
 
 
@@ -42,13 +46,16 @@ def main(argv=None) -> None:
     metrics_spec = SketchSpec(width=1024, depth=2, counter=CMS32)
     names = [f"tenant_{t:02d}" for t in range(args.tenants)]
     svc = CountService(spec, tenants=names, queue_capacity=args.queue_cap,
-                       seed=args.seed)
+                       seed=args.seed, track_top=16)
     # heterogeneous plane: two CMS32 metrics tenants ride the same service
     svc.add_tenant("metrics_qps", spec=metrics_spec)
     svc.add_tenant("metrics_err", spec=metrics_spec)
     # watermark-windowed tenant: 60s buckets, rotation driven by event time
     wspec = WindowSpec(sketch=spec, buckets=8, interval=60.0)
     svc.add_tenant("trending", window=wspec)
+    # tracker-fed admission tenant: hot ids earn private embedding rows
+    aspec = AdmissionSpec(threshold=64.0, n_fallback=1024, table_rows=1 << 16)
+    svc.add_tenant("emb_ids", admission=aspec)
     rng = np.random.default_rng(args.seed)
 
     t0 = time.time()
@@ -61,6 +68,8 @@ def main(argv=None) -> None:
                 keys = (rng.zipf(1.3, args.batch) % 10_000) + t * 1_000_000
                 events[name] = keys.astype(np.uint32)
             events["metrics_qps"] = (rng.zipf(1.3, 256) % 500).astype(
+                np.uint32)
+            events["emb_ids"] = (rng.zipf(1.3, args.batch) % 10_000).astype(
                 np.uint32)
             svc.enqueue_many(events)
             ts += float(rng.exponential(25.0))
@@ -80,7 +89,7 @@ def main(argv=None) -> None:
     probes = np.stack(
         [np.arange(8, dtype=np.uint32) + t * 1_000_000
          for t in range(args.tenants)]
-        + [np.arange(8, dtype=np.uint32)] * 3)  # metrics x2 + trending
+        + [np.arange(8, dtype=np.uint32)] * 4)  # metrics x2 + trending + emb
     t0 = time.time()
     counts = svc.query_all(probes)
     dt_q = time.time() - t0
@@ -94,6 +103,21 @@ def main(argv=None) -> None:
     print(f"[serve_counts] served {len(svc.tenants)} tenants x "
           f"{probes.shape[1]} probes in {launches} fused launches "
           f"({dt_q*1e3:.1f} ms)")
+
+    # heavy hitters straight off the tracker: refreshed by the same fused
+    # launch that landed each flush, estimates exactly the query answers
+    hot, est = svc.topk(names[0], 5)
+    print(f"[serve_counts] {names[0]} top-5 heavy hitters (tracker-fed): "
+          f"{[(int(k), round(float(v))) for k, v in zip(hot, est)]}")
+
+    # tracker-fed admission: hot ids map to private rows, cold ids share
+    # the fallback space; decisions refreshed by every flush epoch
+    ids = np.arange(32, dtype=np.uint32)
+    rows, admitted = svc.admit("emb_ids", ids)
+    n_adm = int(np.asarray(admitted).sum())
+    print(f"[serve_counts] admission plane: {n_adm}/{len(ids)} probe ids "
+          f"admitted to private rows (threshold {aspec.threshold}, "
+          f"{aspec.table_rows} private + {aspec.n_fallback} shared rows)")
 
     # the time-aware tenant: watermark epoch + lazy decay at query time
     est_w = np.asarray(svc.query("trending", np.arange(8), n_buckets=5))

@@ -29,25 +29,32 @@ appended) and `flush` feeds `fused_update_pallas` straight from device
 memory.  Keys are validated at the API boundary (integers in [0, 2^32) —
 no silent truncation).
 
-The flush itself is an **active-row pipeline**: the host fill mirror knows
-which R of T rows have pending work, so the fused update grids over
-(R, chunk) via the SMEM row map (`ops.update_rows`) instead of sweeping
-every tenant's table — bit-identical to the dense flush (the skipped rows
-were weight-0 no-ops and the uniforms grid is shared), but under tenant
-skew the launch shrinks by T/R.  With `track_top=K` the same pipeline
-feeds a **heavy-hitter plane**: while the active tables are fresh, the
-just-flushed keys plus each row's standing candidates are re-scored with
-one fused query launch and re-selected into a stacked (T, K) device
-`TopK` tracker (`core/topk.refresh_stacked`); windowed planes score
-candidates through `window_query`, so bucket expiry and lazy decay
-reorder the heap.  `CountService.topk(name, k)` serves it.
+The flush is a **single-launch epoch**: the host fill mirror knows which
+R of T rows have pending work, and with `track_top=K` the fused kernel
+(`ops.update_score_rows`) grids over (R, chunk) via the SMEM row map,
+lands the conservative update, AND re-scores each row's heavy-hitter
+candidate union (standing heap + just-flushed keys) while the table block
+is still VMEM-resident — one launch where the PR 4 pipeline paid an
+update launch plus a fused-query launch, bit-identical to that pair (and
+to the dense whole-plane flush: shared uniforms grid, skipped rows were
+weight-0 no-ops).  The re-scored candidates re-select into a stacked
+(T, K) device `TopK` tracker; windowed planes refresh through the stacked
+multi-ring window query (`window_query_many` — ONE launch regardless of
+flushed-tenant count, expiry/decay weights per ring).
+`CountService.topk(name, k)` serves the heaps, and the tracker also feeds
+the **admission plane**: `add_tenant(admission=AdmissionSpec(...))` +
+`svc.admit(name, ids)` map raw ids to embedding rows, admitting exactly
+the tracked candidates whose estimates clear the threshold — decisions
+refresh with every flush epoch for free (`core/admission.admit_tracked`).
 
 Queries are read-your-writes: they flush pending events first.  The whole
-service (tables + rings + fill mirrors + RNG lane + stats + trackers)
-snapshots and restores via `train/checkpoint`; the manifest metadata
-records the plane layout (schema v3 — v2 adds multi-plane, v3 adds the
-tracker state) and restore still accepts the v2 layout (cold trackers)
-and the v1 single-plane layout of earlier checkpoints.
+service (tables + rings + fill mirrors + RNG lane + stats + trackers +
+admission registry) snapshots and restores via `train/checkpoint`; the
+manifest metadata records the plane layout (schema v4 — v2 adds
+multi-plane, v3 the tracker state, v4 the admission policies) and restore
+still accepts v3, v2 (cold trackers), and the v1 single-plane layout of
+earlier checkpoints; `restore(track_top=K')` re-arms the heaps at a
+different width (shrink keeps the best K', grow cold-masks new slots).
 """
 from __future__ import annotations
 
@@ -58,6 +65,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import admission as adm
 from repro.core import sketch as sk
 from repro.core import topk
 from repro.core.counters import CounterSpec
@@ -66,28 +74,9 @@ from repro.kernels import ops
 from repro.stream import window as w
 from repro.train import checkpoint
 
-_KEY_MAX = 0xFFFF_FFFF
-
-
-def _as_keys(keys) -> np.ndarray:
-    """Validate and normalize event/probe keys to a flat uint32 array.
-
-    Floats, negatives, and values past 32 bits are rejected instead of
-    being silently truncated by a blind uint32 cast.
-    """
-    arr = np.asarray(keys)
-    if arr.dtype == np.uint32:
-        return arr.ravel()
-    if not np.issubdtype(arr.dtype, np.integer):
-        raise TypeError(f"keys must be integers, got dtype {arr.dtype}")
-    flat = arr.ravel()
-    if flat.size:
-        lo, hi = flat.min(), flat.max()
-        if lo < 0:
-            raise ValueError(f"keys must be non-negative, got {lo}")
-        if hi > _KEY_MAX:
-            raise ValueError(f"keys must fit in 32 bits, got {hi}")
-    return flat.astype(np.uint32)
+# key validation is shared with core.admission (the same contract at every
+# API boundary): floats/negatives/>32-bit raise instead of truncating
+_as_keys = sk.as_uint32_keys
 
 
 def _spec_meta(spec: SketchSpec) -> dict:
@@ -248,47 +237,65 @@ class TenantPlane(_TrackerMixin):
         return int(self.ring.fill.sum())
 
     def flush(self, dense: bool = False) -> int:
-        """Land every tenant's pending events, gathering the active rows.
+        """Land every tenant's pending events: ONE launch, update + refresh.
 
-        The host fill mirror names the R rows with pending fill, so the
-        fused update grids over (R, chunk) via the SMEM row map
-        (`ops.update_rows`) instead of (T, chunk) — bit-identical tables
-        (shared uniforms grid; the skipped rows were weight-0 no-ops), but
-        a hot-tenant flush pays for 1 table sweep, not T.  `dense=True`
-        forces the whole-plane launch (the benchmark baseline).  A tracker
-        refresh then re-queries the just-flushed keys + standing
-        candidates from the still-fresh tables.
+        The host fill mirror names the R rows with pending fill, and with
+        tracking on the whole flush is a SINGLE-LAUNCH EPOCH
+        (`ops.update_score_rows`): the fused kernel grids over (R, chunk)
+        via the SMEM row map, runs the conservative update, then re-scores
+        each row's candidate union — standing heap + flushed queue slice —
+        against its still-VMEM-resident table block.  Tables land
+        bit-identically to the dense whole-plane flush (shared uniforms
+        grid; skipped rows were weight-0 no-ops) and the estimates equal
+        a separate fused query over the updated tables, so the epoch is
+        bit-identical to the old update-launch-then-query-launch pair
+        minus a launch and a second table fetch.  Without tracking the
+        update-only active-row path (`ops.update_rows`) remains.
+        `dense=True` forces the legacy two-launch whole-plane pipeline
+        (the benchmark baseline and the parity-test oracle).
         """
         pending = self.pending()
         if pending == 0:
             return 0
         rng = self.rng.next()
         active = np.flatnonzero(self.ring.fill).astype(np.int32)
-        if dense or active.size == len(self.names):
+        if dense:
+            # two-launch baseline: whole-plane update, then (if tracking)
+            # a fused query refresh over the gathered active rows
             keys, weights = self.ring.live_slice()
             self.tables = ops.update_many(self.tables, self.spec, keys, rng,
                                           weights=weights)
             if self.tracker is not None:
                 sel = jnp.asarray(active)
-                keys, weights = keys[sel], weights[sel]
+                self._refresh_topk(active, keys[sel], weights[sel])
+        elif self.tracker is not None:
+            keys, weights = self.ring.live_slice(active)
+            rows_d = jnp.asarray(active)
+            cand, valid = topk.candidates(self._tracker_rows(rows_d), keys,
+                                          weights > 0)
+            self.tables, est = ops.update_score_rows(
+                self.tables, self.spec, keys, rng, active, cand,
+                weights=weights)
+            self._scatter_tracker(rows_d,
+                                  topk.reselect(cand, valid, est,
+                                                self.track_top))
+        elif active.size == len(self.names):
+            keys, weights = self.ring.live_slice()
+            self.tables = ops.update_many(self.tables, self.spec, keys, rng,
+                                          weights=weights)
         else:
             keys, weights = self.ring.live_slice(active)
             self.tables = ops.update_rows(self.tables, self.spec, keys, rng,
                                           active, weights=weights)
-        if self.tracker is not None:
-            self._refresh_topk(active, keys, weights)
         self.ring.reset()
         return pending
 
     def _refresh_topk(self, rows, keys, weights) -> None:
-        """Merge the just-flushed keys into the stacked top-K tracker.
-
-        Only the active rows' heaps move (the other tables did not change,
-        so their stored estimates are still the sketch's current answers).
-        The candidate union — standing heap + flushed queue slice — is
-        scored with ONE fused query launch over the gathered active
-        tables; stale queue slots (weight 0) are masked out of candidacy.
-        """
+        """Two-launch tracker refresh (the dense-baseline path): candidate
+        union scored with a separate fused query launch over the gathered
+        active tables; stale queue slots (weight 0) masked out of
+        candidacy.  The default flush path instead gets these estimates
+        from the update kernel itself."""
         rows_d = jnp.asarray(rows)
         tables = self.tables[rows_d]
         new = topk.refresh_stacked(
@@ -421,16 +428,16 @@ class WindowPlane(_TrackerMixin):
 
     def _refresh_topk(self, rows, keys, weights) -> None:
         """Stacked heap refresh for the flushed window tenants: candidates
-        are scored through `window_query` against each tenant's CURRENT
-        ring, so expired buckets pull candidates down and fresh mass
-        pushes them up in the same re-selection.  (One window-fused launch
-        per flushed tenant; a multi-ring window kernel is an open item.)
+        are scored through the stacked multi-ring window query against
+        each tenant's CURRENT ring, so expired buckets pull candidates
+        down and fresh mass pushes them up in the same re-selection — ONE
+        query launch (`window_query_many`) regardless of how many tenants
+        flushed, each ring carrying its own expiry/decay weight row.
         """
         rows_d = jnp.asarray(rows)
         new = topk.refresh_stacked(
             self._tracker_rows(rows_d), keys, weights > 0,
-            lambda ck: jnp.stack([w.window_query(self.wins[r], ck[i])
-                                  for i, r in enumerate(rows)]))
+            lambda ck: w.window_query_many([self.wins[r] for r in rows], ck))
         self._scatter_tracker(rows_d, new)
 
     def topk_row(self, row: int, **window_kw):
@@ -439,13 +446,14 @@ class WindowPlane(_TrackerMixin):
         Window estimates move without any flush (watermark rotation,
         expiry, query-time decay), so the read path re-scores the standing
         candidates against the current ring — forwarding n_buckets / mode
-        / gamma — and persists the re-ordered heap before answering.
+        / gamma through the stacked query's weight row — and persists the
+        re-ordered heap before answering.
         """
         rows = jnp.asarray([row])
         new = topk.refresh_stacked(
             self._tracker_rows(rows), jnp.zeros((1, 0), jnp.uint32), None,
-            lambda ck: w.window_query(self.wins[row], ck[0],
-                                      **window_kw)[None])
+            lambda ck: w.window_query_many([self.wins[row]], ck,
+                                           **window_kw))
         self._scatter_tracker(rows, new)
         tk = self.tracker
         return (np.asarray(tk.keys[row]), np.asarray(tk.estimates[row]),
@@ -474,6 +482,7 @@ class CountService:
         self._wplanes: dict[w.WindowSpec, WindowPlane] = {}
         self._where: dict[str, tuple[object, int]] = {}
         self._order: list[str] = []
+        self._admission: dict[str, adm.AdmissionSpec] = {}
         self.stats = {"events": 0, "flushes": 0}
         for name in tenants:
             self.add_tenant(name)
@@ -497,18 +506,27 @@ class CountService:
         return list(self._planes.values()) + list(self._wplanes.values())
 
     def add_tenant(self, name: str, spec: Optional[SketchSpec] = None,
-                   window: Optional[w.WindowSpec] = None) -> int:
+                   window: Optional[w.WindowSpec] = None,
+                   admission: Optional[adm.AdmissionSpec] = None) -> int:
         """Register a tenant; returns its row in its plane's stacked table.
 
         spec: sketch geometry (defaults to the service-level spec).
         window: register a watermark-windowed tenant instead (ring-backed
-        `WindowedSketch`; `enqueue(..., ts=...)` drives rotation).  Growing
-        a plane reshapes its stacked arrays, so that plane's next flush
-        recompiles the fused kernel (amortized: tenant churn is rare next
-        to ingest).
+        `WindowedSketch`; `enqueue(..., ts=...)` drives rotation).
+        admission: arm the tracker-fed admission plane for this tenant —
+        `svc.admit(name, ids)` maps raw ids to embedding rows, admitting
+        exactly the tracked candidates whose estimates clear
+        `admission.threshold`.  The tracker feeds the decisions, so they
+        refresh with every flush epoch for free; requires the service to
+        be constructed with `track_top=K`.  Growing a plane reshapes its
+        stacked arrays, so that plane's next flush recompiles the fused
+        kernel (amortized: tenant churn is rare next to ingest).
         """
         if name in self._where:
             raise ValueError(f"tenant {name!r} already registered")
+        if admission is not None and self.track_top is None:
+            raise ValueError("tracker-fed admission needs the heavy-hitter "
+                             "plane: construct the service with track_top=K")
         if window is not None:
             if spec is not None and spec != window.sketch:
                 raise ValueError("pass the sketch spec inside WindowSpec "
@@ -532,7 +550,14 @@ class CountService:
         row = plane.add(name)
         self._where[name] = (plane, row)
         self._order.append(name)
+        if admission is not None:
+            self._admission[name] = admission
         return row
+
+    def admission_of(self, name: str) -> Optional[adm.AdmissionSpec]:
+        """The tenant's admission policy (None when admission is off)."""
+        self._lookup(name)
+        return self._admission.get(name)
 
     def _lookup(self, name: str) -> tuple[object, int]:
         if name not in self._where:
@@ -720,16 +745,56 @@ class CountService:
         sel = filled[:k]
         return keys[:k][sel], est[:k][sel]
 
+    def admit(self, name: str, ids, **window_kw):
+        """Map raw ids -> embedding rows under the tenant's tracker-fed
+        admission policy: (rows, admitted_mask), aligned with ids.
+
+        Flushes first, so the decisions reflect the current flush epoch's
+        tracker refresh — hot keys acquire private rows automatically the
+        moment the heavy-hitter plane sees them clear the threshold.  For
+        plain tenants the decision needs no sketch launch
+        (`admission.admit_tracked` is O(K) candidate compares per id
+        against the standing heap).  Windowed tenants first re-score
+        their candidates against the current ring (one stacked
+        window-query launch, as in `topk`) and forward `window_kw`
+        (n_buckets / mode / gamma), so admission can be time-scoped: an
+        id whose traffic expired out of the window loses its private row
+        on the next decision.
+        """
+        plane, row = self._lookup(name)
+        aspec = self._admission.get(name)
+        if aspec is None:
+            raise ValueError(f"tenant {name!r} has no admission policy: "
+                             "register with add_tenant(admission="
+                             "AdmissionSpec(...))")
+        if window_kw and not isinstance(plane, WindowPlane):
+            raise ValueError(f"tenant {name!r} is not windowed; "
+                             f"window args {sorted(window_kw)} do not apply")
+        self.flush()
+        if isinstance(plane, WindowPlane):
+            # re-score the heap against the current ring (rotation/expiry/
+            # decay) and persist it — then decide from the fresh tracker
+            plane.topk_row(row, **window_kw)
+        # tracker leaves sliced on device (no host round trip); ids
+        # validate host-side (np) and upload ONCE inside admit_tracked
+        tk = plane.tracker
+        return adm.admit_tracked(tk.keys[row], tk.estimates[row],
+                                 tk.filled[row], _as_keys(ids), aspec)
+
     # ---- persistence ----
 
     def _meta(self) -> dict:
         meta = {
-            "version": 3,
+            "version": 4,
             "queue_capacity": self.queue_capacity,
             "seed": self.seed,
             "track_top": self.track_top,
             "tenant_order": self.tenants,
             "stats": dict(self.stats),
+            # v4: per-tenant tracker-fed admission policies (decisions
+            # themselves live in the tracker leaves, refreshed per epoch)
+            "admission": {name: dataclasses.asdict(spec)
+                          for name, spec in self._admission.items()},
             "planes": [{"spec": _spec_meta(p.spec), "tenants": list(p.names),
                         "rng_draws": p.rng.draws}
                        for p in self._planes.values()],
@@ -790,14 +855,19 @@ class CountService:
                 track_top: Optional[int] = None) -> "CountService":
         """Rebuild a service (registry + planes + rings) from a snapshot.
 
-        Accepts the v3 manifest (multi-plane + tracker state), the v2
-        multi-plane layout, and the original v1 single-plane layout (whose
-        host queue is replayed into the device ring).  v3 checkpoints
-        written with tracking on restore their trackers; `track_top`
-        re-arms tracking when restoring a pre-v3 (or tracker-less)
-        checkpoint — those come back with COLD trackers (the candidate
-        heaps re-fill from post-restore traffic; the tables themselves
-        carry no candidate list to rebuild from).
+        Accepts the v4 manifest (admission plane), v3 (multi-plane +
+        tracker state), the v2 multi-plane layout, and the original v1
+        single-plane layout (whose host queue is replayed into the device
+        ring).  Checkpoints written with tracking on restore their
+        trackers; `track_top` re-arms tracking:
+
+          * pre-v3 / tracker-less snapshot — COLD (T, track_top) heaps
+            that refill from post-restore traffic (the tables carry no
+            candidate list to rebuild from);
+          * snapshot taken at a DIFFERENT track_top — the heaps are
+            resized in place (`topk.resize_stacked`): shrinking keeps
+            each row's best `track_top` candidates, growing preserves
+            the standing candidates and cold-masks the new slots.
         """
         meta, step = checkpoint.load_metadata(root, step)
         if meta.get("version", 1) < 2:
@@ -807,6 +877,8 @@ class CountService:
         svc = cls(default, queue_capacity=meta["queue_capacity"],
                   seed=meta.get("seed", 0),
                   track_top=saved_k if saved_k is not None else track_top)
+        admission_of = {name: adm.AdmissionSpec(**spec)
+                        for name, spec in meta.get("admission", {}).items()}
         plane_of: dict[str, dict] = {}
         for pm in meta["planes"]:
             for name in pm["tenants"]:
@@ -818,7 +890,8 @@ class CountService:
             for name in wm["tenants"]:
                 plane_of[name] = {"window": wspec}
         for name in meta["tenant_order"]:
-            svc.add_tenant(name, **plane_of[name])
+            svc.add_tenant(name, admission=admission_of.get(name),
+                           **plane_of[name])
         has_topk = saved_k is not None
         tree, _ = checkpoint.restore(root, svc._tree(with_topk=has_topk),
                                      step=step)
@@ -846,7 +919,20 @@ class CountService:
             if has_topk:
                 p.tracker = topk.TopK(**leaves["topk"])
         svc.stats = dict(meta.get("stats", svc.stats))
+        if (track_top is not None and saved_k is not None
+                and track_top != saved_k):
+            svc._resize_trackers(track_top)
         return svc
+
+    def _resize_trackers(self, k: int) -> None:
+        """Re-arm every plane's heap stack at width k (restore with a
+        different track_top than was snapshotted)."""
+        self.track_top = int(k)
+        for plane in self.planes:
+            plane.track_top = self.track_top
+            if plane.tracker is not None:
+                plane.tracker = topk.resize_stacked(plane.tracker,
+                                                    self.track_top)
 
     @classmethod
     def _restore_v1(cls, root: str, step: int, meta: dict,

@@ -205,6 +205,19 @@ def _window_weights(win: WindowedSketch, k: int, gamma: float | None
     return live * jnp.float32(gamma) ** ages.astype(jnp.float32)
 
 
+def window_weights(win: WindowedSketch, n_buckets: int | None = None,
+                   gamma: float | None = None) -> jnp.ndarray:
+    """Public form of the per-bucket estimate weights `window_query`
+    applies: (B,) float32, 0 past the last `n_buckets` intervals, gamma^age
+    lazy decay otherwise.  What the stacked multi-ring query takes per
+    ring."""
+    b = win.spec.buckets
+    k = b if n_buckets is None else n_buckets
+    if not 1 <= k <= b:
+        raise ValueError(f"window of {k} buckets outside ring of {b}")
+    return _window_weights(win, k, gamma)
+
+
 def window_query(win: WindowedSketch, keys: jnp.ndarray,
                  n_buckets: int | None = None, mode: str = "sum",
                  gamma: float | None = None, engine: str = "auto"
@@ -218,13 +231,37 @@ def window_query(win: WindowedSketch, keys: jnp.ndarray,
     fused kernel launch (see `kernels.ops.window_query_tables`; `engine`
     selects the kernel vs the vmapped jnp reference).  Returns float32 (N,).
     """
-    b = win.spec.buckets
-    k = b if n_buckets is None else n_buckets
-    if not 1 <= k <= b:
-        raise ValueError(f"window of {k} buckets outside ring of {b}")
     return ops.window_query_tables(win.tables, win.spec.sketch, keys,
-                                   _window_weights(win, k, gamma), mode=mode,
-                                   engine=engine)
+                                   window_weights(win, n_buckets, gamma),
+                                   mode=mode, engine=engine)
+
+
+def window_query_many(wins: list, keys: jnp.ndarray,
+                      n_buckets: int | None = None, mode: str = "sum",
+                      gamma: float | None = None, engine: str = "auto"
+                      ) -> jnp.ndarray:
+    """Stacked multi-ring window query: R rings (shared WindowSpec), ONE
+    launch.
+
+    wins: R `WindowedSketch`es sharing one spec (cursors/epochs may
+    differ — each ring carries its own weight row); keys (R, N) per-ring
+    probes.  Estimates are bit-identical to R per-ring `window_query`
+    calls (`kernels.ops.window_query_stacked` grids over (ring, chunk,
+    bucket)); this is what makes a WindowPlane tracker refresh cost one
+    query launch regardless of how many tenants flushed.  Returns float32
+    (R, N).
+    """
+    if not wins:
+        raise ValueError("need at least one ring")
+    if any(x.spec != wins[0].spec for x in wins[1:]):
+        # jnp.stack would happily mix geometries/seeds and hash every ring
+        # with wins[0]'s spec — silently wrong estimates, so fail loudly
+        raise ValueError("window_query_many needs rings sharing one "
+                         f"WindowSpec; got {sorted({str(x.spec) for x in wins})}")
+    rings = jnp.stack([x.tables for x in wins])
+    weights = jnp.stack([window_weights(x, n_buckets, gamma) for x in wins])
+    return ops.window_query_stacked(rings, wins[0].spec.sketch, keys,
+                                    weights, mode=mode, engine=engine)
 
 
 # --------------------------------------------------------------------------

@@ -113,6 +113,18 @@ def restore(root: str, target, step: Optional[int] = None):
         if key not in data:
             raise KeyError(f"checkpoint missing leaf {key}")
         arr = data[key]
+        want = getattr(like, "shape", None)
+        if want is not None and tuple(np.shape(arr)) != tuple(want):
+            # fail with the leaf named instead of a cryptic device_put
+            # error deep in the stack — the common cause is a target tree
+            # built with different geometry than the writer's (e.g. a
+            # CountService restored at a different track_top builds its
+            # target at the SAVED width and resizes after the load)
+            raise ValueError(
+                f"checkpoint leaf {key} has shape {tuple(np.shape(arr))} "
+                f"but the restore target expects {tuple(want)} — build "
+                f"the target with the writer's geometry and reshape after "
+                f"restoring")
         sharding = getattr(like, "sharding", None)
         if sharding is not None:
             leaves.append(jax.device_put(arr, sharding))

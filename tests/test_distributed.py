@@ -152,6 +152,60 @@ def test_routed_topk_multidevice():
 
 
 @pytest.mark.slow
+def test_routed_admit_multidevice():
+    """Tracker-fed admission over key-routed shards: the all-gather
+    candidate merge extended to admission masks — every shard reaches the
+    same (replicated) decisions, admitting exactly the fleet-wide hot
+    keys."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.core import SketchSpec, CMS32, init
+        from repro.core import admission as adm
+        from repro.core import sketch as sk, sharded, topk
+
+        mesh = jax.make_mesh((8,), ("data",))
+        spec = SketchSpec(width=8192, depth=4, counter=CMS32)
+        heavy = np.arange(100, 116, dtype=np.uint32)
+        counts = 40 + 10 * np.arange(16)     # 40..190 events per heavy key
+        stream = np.repeat(heavy, counts).astype(np.uint32)
+        np.random.default_rng(0).shuffle(stream)
+        stream = stream[: (len(stream) // 8) * 8].reshape(8, -1)
+        tables = jnp.stack([init(spec).table] * 8)
+        rngs = jax.random.split(jax.random.PRNGKey(0), 8)
+        probes = jnp.tile(jnp.asarray(heavy)[None], (8, 1))
+        aspec = adm.AdmissionSpec(threshold=100.0, n_fallback=64,
+                                  table_rows=4096)
+        ids = np.concatenate([heavy, [7]]).astype(np.uint32)  # +1 cold id
+        ids_r = jnp.tile(jnp.asarray(ids)[None], (8, 1))
+
+        def run(table, k, r, probe, query):
+            s = sk.Sketch(table=table[0], spec=spec)
+            s = sharded.routed_update(s, k[0], r[0], "data", capacity=2048)
+            tr = topk.refresh(topk.init(6), s, probe[0])
+            rows, ok = sharded.routed_admit(tr, query[0], aspec, "data")
+            return rows[None], ok[None]
+
+        rows, ok = shard_map(
+            run, mesh=mesh,
+            in_specs=(P("data"),) * 5,
+            out_specs=(P("data"), P("data")),
+            check_vma=False)(tables, jnp.asarray(stream), rngs, probes,
+                             ids_r)
+        rows, ok = np.asarray(rows), np.asarray(ok)
+        assert (ok == ok[0:1]).all(), "shards disagree on admission"
+        assert (rows == rows[0:1]).all()
+        want = counts >= 100.0               # exact counts (no collisions)
+        np.testing.assert_array_equal(ok[0], np.concatenate([want, [False]]))
+        assert (rows[0][ok[0]] >= aspec.n_fallback).all()
+        assert (rows[0][~ok[0]] < aspec.n_fallback).all()
+        print("ADMITTED", int(ok[0].sum()))
+    """)
+    assert "ADMITTED" in out
+
+
+@pytest.mark.slow
 def test_key_routed_window_multidevice():
     """Key-routed bucket ring: routed update into the active bucket, fused
     routed window query (lazy decay weights included) aligned with keys."""

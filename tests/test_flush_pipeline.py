@@ -1,8 +1,12 @@
-"""Active-row flush pipeline + heavy-hitter plane.
+"""Active-row flush pipeline + heavy-hitter plane + single-launch epoch.
 
 Bit-parity of the active-row flush against the dense whole-plane flush
 (uniform / hot-tenant / empty-row regimes, windowed plane mid-rotation),
-and the `CountService.topk` tracker against exact host counts.
+the single-launch fused update+score epoch against the two-launch
+update-then-query pipeline (tables AND tracker heaps), launch-count
+audits (one launch per tracked flush epoch; one window-query launch per
+WindowPlane refresh regardless of flushed-tenant count), and the
+`CountService.topk` tracker against exact host counts.
 """
 import numpy as np
 import pytest
@@ -116,6 +120,122 @@ def test_windowed_plane_active_row_flush_matches_dense_mid_rotation():
     for n in ("u", "v", "x"):
         np.testing.assert_array_equal(np.asarray(svc_a.query(n, probe)),
                                       np.asarray(svc_d.query(n, probe)))
+
+
+# --------------------------------------------------------------------------
+# single-launch flush epoch == two-launch pipeline (tables + heaps)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("regime", ["uniform", "hot1", "subset"])
+def test_single_launch_epoch_matches_two_launch_pipeline(regime):
+    """Two identically-fed TRACKED services: the fused update+score epoch
+    (default flush) must land bit-identical tables AND heaps to the dense
+    two-launch pipeline (whole-plane update, then a separate fused query
+    refresh) in every skew regime."""
+    names = tuple(f"t{i}" for i in range(5))
+    svc_f = CountService(SPEC, tenants=names, queue_capacity=4096, seed=3,
+                         track_top=8)
+    svc_2 = CountService(SPEC, tenants=names, queue_capacity=4096, seed=3,
+                         track_top=8)
+    pending = {"uniform": names, "hot1": names[2:3],
+               "subset": (names[0], names[3], names[4])}[regime]
+    for cycle in range(3):
+        for i, n in enumerate(pending):
+            keys = _zipf(600 + 100 * i, 500, seed=cycle * 10 + i)
+            svc_f.enqueue(n, keys)
+            svc_2.enqueue(n, keys)
+        svc_f.flush()
+        for plane in svc_2.planes:
+            plane.flush(dense=True)
+    pf, p2 = svc_f.planes[0], svc_2.planes[0]
+    np.testing.assert_array_equal(np.asarray(pf.tables), np.asarray(p2.tables))
+    np.testing.assert_array_equal(np.asarray(pf.tracker.keys),
+                                  np.asarray(p2.tracker.keys))
+    np.testing.assert_array_equal(np.asarray(pf.tracker.estimates),
+                                  np.asarray(p2.tracker.estimates))
+    np.testing.assert_array_equal(np.asarray(pf.tracker.filled),
+                                  np.asarray(p2.tracker.filled))
+    for n in pending:
+        kf, ef = svc_f.topk(n, 5)
+        k2, e2 = svc_2.topk(n, 5)
+        np.testing.assert_array_equal(kf, k2)
+        np.testing.assert_array_equal(ef, e2)
+
+
+def test_tracked_flush_epoch_is_one_launch():
+    """A tracked TenantPlane flush must issue exactly ONE fused dispatch
+    (`update_score_rows`) — no separate query launch — while the dense
+    baseline pays the update + query pair."""
+    names = tuple(f"t{i}" for i in range(4))
+    svc = CountService(SPEC, tenants=names, queue_capacity=4096, track_top=8)
+    for i, n in enumerate(names[:2]):
+        svc.enqueue(n, _zipf(500, 300, seed=i))
+    ops.reset_launch_counts()
+    svc.flush()
+    got = ops.launch_counts()
+    assert got == {"update_score_rows": 1}, got
+    # dense two-launch baseline for contrast
+    for i, n in enumerate(names[:2]):
+        svc.enqueue(n, _zipf(500, 300, seed=10 + i))
+    ops.reset_launch_counts()
+    for plane in svc.planes:
+        plane.flush(dense=True)
+    got = ops.launch_counts()
+    assert got == {"update_many": 1, "query_many": 1}, got
+
+
+@pytest.mark.parametrize("flushed", [1, 3])
+def test_window_tracker_refresh_is_one_query_launch(flushed):
+    """A WindowPlane tracker refresh costs ONE stacked window-query launch
+    regardless of how many tenants flushed (previously one per tenant)."""
+    wspec = WindowSpec(sketch=SPEC, buckets=4, interval=60.0)
+    svc = CountService(queue_capacity=8192, track_top=8)
+    for n in ("a", "b", "c"):
+        svc.add_tenant(n, window=wspec)
+    for i, n in enumerate(("a", "b", "c")[:flushed]):
+        svc.enqueue(n, _zipf(300, 200, seed=i), ts=10.0)
+    ops.reset_launch_counts()
+    svc.flush()
+    got = ops.launch_counts()
+    assert got == {"update_many": 1, "window_query_stacked": 1}, got
+
+
+def test_windowed_tracked_plane_epoch_matches_dense_mid_rotation():
+    """Tracked windowed-plane parity mid-rotation: heaps refreshed through
+    the stacked multi-ring query must equal the dense pipeline's, with
+    tenants at different cursors/epochs and a pending subset."""
+    wspec = WindowSpec(sketch=SPEC, buckets=4, interval=60.0)
+
+    def build():
+        svc = CountService(queue_capacity=8192, seed=1, track_top=6)
+        for n in ("u", "v", "x"):
+            svc.add_tenant(n, window=wspec)
+        svc.enqueue("u", _zipf(300, 200, seed=1), ts=10.0)
+        svc.enqueue("v", _zipf(200, 200, seed=2), ts=70.0)
+        svc.enqueue("x", _zipf(250, 200, seed=3), ts=20.0)
+        svc.flush()
+        svc.enqueue("u", _zipf(150, 200, seed=4), ts=130.0)  # rotates u
+        svc.enqueue("x", _zipf(180, 200, seed=5), ts=30.0)
+        return svc
+
+    svc_a, svc_d = build(), build()
+    svc_a.flush()
+    svc_d.planes[0].flush(dense=True)
+    pa, pd = svc_a.planes[0], svc_d.planes[0]
+    for wa, wd in zip(pa.wins, pd.wins):
+        np.testing.assert_array_equal(np.asarray(wa.tables),
+                                      np.asarray(wd.tables))
+    np.testing.assert_array_equal(np.asarray(pa.tracker.keys),
+                                  np.asarray(pd.tracker.keys))
+    np.testing.assert_array_equal(np.asarray(pa.tracker.estimates),
+                                  np.asarray(pd.tracker.estimates))
+    for n in ("u", "v", "x"):
+        ka, ea = svc_a.topk(n, 4)
+        kd, ed = svc_d.topk(n, 4)
+        np.testing.assert_array_equal(ka, kd)
+        np.testing.assert_array_equal(ea, ed)
+        # the heap estimates ARE the read path's answers
+        np.testing.assert_array_equal(ea, np.asarray(svc_a.query(n, ka)))
 
 
 # --------------------------------------------------------------------------

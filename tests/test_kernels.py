@@ -14,8 +14,11 @@ from repro.core import CMLS8, CMLS16, CMS32, SketchSpec, init
 from repro.core import sketch as sk
 from repro.core.hashing import make_row_seeds
 from repro.kernels import ops, ref
-from repro.kernels.sketch import (CHUNK, fused_query_pallas, query_pallas,
-                                  update_pallas, window_query_pallas)
+from repro.kernels.sketch import (CHUNK, fused_query_pallas,
+                                  fused_update_rows_pallas,
+                                  fused_update_score_pallas, query_pallas,
+                                  update_pallas, window_query_pallas,
+                                  window_query_stacked_pallas)
 
 COUNTERS = {"cms32": CMS32, "cmls16": CMLS16, "cmls8": CMLS8}
 
@@ -215,6 +218,171 @@ def test_ops_fall_back_past_vmem():
     s = ops.update(init(spec), _keys(100, 50), jax.random.PRNGKey(0))
     est = ops.query(s, jnp.arange(10, dtype=jnp.uint32))
     assert est.shape == (10,)
+
+
+# --------------------------------------------------------------------------
+# single-launch flush epoch: fused update + candidate re-score
+# --------------------------------------------------------------------------
+
+def _stacked_tables(spec, t, seed0=0):
+    return jnp.stack([
+        sk.update_batched(init(spec), _keys(2000, spec.width, seed=seed0 + i),
+                          jax.random.PRNGKey(i)).table for i in range(t)])
+
+
+@pytest.mark.parametrize("counter_name", list(COUNTERS))
+@pytest.mark.parametrize("t,r,width,depth,n,m", [
+    (4, 2, 512, 3, CHUNK, 70),            # single-chunk update, small cands
+    (5, 3, 1024, 2, 2 * CHUNK + 100, CHUNK + 5),  # multi-chunk both phases
+    (3, 3, 128, 4, 300, 16),              # all rows active
+])
+def test_fused_update_score_matches_two_launch_pair(counter_name, t, r,
+                                                    width, depth, n, m):
+    """The single-launch epoch == update launch + fused query launch, bit
+    for bit: tables via `fused_update_rows_pallas`, estimates via
+    `fused_query_pallas` over the updated gathered rows."""
+    counter = COUNTERS[counter_name]
+    spec = SketchSpec(width=width, depth=depth, counter=counter)
+    seeds = tuple(int(x) for x in make_row_seeds(spec.seed, depth))
+    tables = _stacked_tables(spec, t, seed0=width)
+    rng = np.random.default_rng(width + depth)
+    rows = jnp.asarray(np.sort(rng.choice(t, r, replace=False)), jnp.int32)
+    keys = jnp.stack([sk._dedup(_keys(n, width * 2, seed=90 + i))[0]
+                      for i in range(r)])
+    mult = jnp.stack([sk._dedup(_keys(n, width * 2, seed=90 + i))[1]
+                      for i in range(r)])
+    unif = jax.random.uniform(jax.random.PRNGKey(3), keys.shape)
+    cand = jnp.stack([_keys(m, width * 3, seed=70 + i) for i in range(r)])
+
+    t_fused, est_fused = fused_update_score_pallas(
+        tables, keys, mult, unif, cand, rows, seeds=seeds, width=width,
+        counter=counter, interpret=True)
+    t_pair = fused_update_rows_pallas(tables, keys, mult, unif, rows,
+                                      seeds=seeds, width=width,
+                                      counter=counter, interpret=True)
+    est_pair = fused_query_pallas(t_pair[rows], cand, seeds=seeds,
+                                  width=width, counter=counter,
+                                  interpret=True)
+    assert est_fused.shape == (r, m) and est_fused.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(t_fused), np.asarray(t_pair))
+    np.testing.assert_array_equal(np.asarray(est_fused),
+                                  np.asarray(est_pair))
+
+
+def test_update_score_rows_engines_bit_identical():
+    """ops.update_score_rows: kernel and XLA engines land the same tables
+    AND the same candidate estimates (the XLA engine is what auto picks
+    off-TPU, so this is the parity the service's flush epoch rests on)."""
+    spec = SketchSpec(width=512, depth=3, counter=CMLS16)
+    tables = _stacked_tables(spec, 5, seed0=7)
+    rng = np.random.default_rng(1)
+    rows = np.asarray([0, 2, 4], np.int32)
+    keys = jnp.asarray(rng.integers(0, 900, (3, 2 * CHUNK), dtype=np.uint32))
+    weights = jnp.asarray((rng.random((3, 2 * CHUNK)) < 0.8)
+                          .astype(np.float32))
+    cand = jnp.asarray(rng.integers(0, 900, (3, 80), dtype=np.uint32))
+    lane = np.asarray([5, 1], np.uint32)
+    tk, ek = ops.update_score_rows(tables, spec, keys, lane, rows, cand,
+                                   weights=weights, engine="kernel")
+    tx, ex = ops.update_score_rows(tables, spec, keys, lane, rows, cand,
+                                   weights=weights, engine="xla")
+    np.testing.assert_array_equal(np.asarray(tk), np.asarray(tx))
+    np.testing.assert_array_equal(np.asarray(ek), np.asarray(ex))
+    # and the two-launch wrapper pipeline agrees (shared parity uniforms)
+    t2 = ops.update_rows(tables, spec, keys, lane, rows, weights=weights)
+    e2 = ops.query_many(t2[jnp.asarray(rows)], spec, cand)
+    np.testing.assert_array_equal(np.asarray(tk), np.asarray(t2))
+    np.testing.assert_array_equal(np.asarray(ek), np.asarray(e2))
+    with pytest.raises(ValueError):
+        ops.update_score_rows(tables, spec, keys, lane, rows, cand,
+                              engine="banana")
+
+
+# --------------------------------------------------------------------------
+# stacked multi-ring window query
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["sum", "max"])
+@pytest.mark.parametrize("r,b,width,depth,nq", [
+    (1, 3, 512, 2, 64), (3, 4, 512, 3, 1025), (4, 2, 1024, 2, 600),
+])
+def test_window_query_stacked_matches_per_ring_kernel(mode, r, b, width,
+                                                      depth, nq):
+    """One multi-ring launch must be bit-identical to R per-ring
+    `window_query_pallas` launches (each ring with its own weight row)."""
+    spec = SketchSpec(width=width, depth=depth, counter=CMLS16)
+    seeds = tuple(int(x) for x in make_row_seeds(spec.seed, depth))
+    rng = np.random.default_rng(r * 10 + b)
+    rings = jnp.stack([_stacked_tables(spec, b, seed0=100 * i)
+                       for i in range(r)])
+    probes = jnp.stack([_keys(nq, width * 2, seed=60 + i) for i in range(r)])
+    weights = jnp.asarray(rng.random((r, b)).astype(np.float32))
+    got = window_query_stacked_pallas(rings, probes, weights, seeds=seeds,
+                                      width=width, counter=spec.counter,
+                                      mode=mode, interpret=True)
+    want = jnp.stack([
+        window_query_pallas(rings[i], probes[i], weights[i], seeds=seeds,
+                            width=width, counter=spec.counter, mode=mode,
+                            interpret=True) for i in range(r)])
+    assert got.shape == (r, nq) and got.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("mode", ["sum", "max"])
+def test_window_query_stacked_xla_ref_close(mode):
+    """The XLA engine mirrors the kernel's in-order bucket accumulation;
+    float "sum" rounding is fusion-dependent across engines (one ulp), so
+    the cross-engine check is allclose — "max" and the per-bucket
+    estimates themselves are bit-identical."""
+    spec = SketchSpec(width=512, depth=3, counter=CMLS16)
+    rng = np.random.default_rng(9)
+    rings = jnp.stack([_stacked_tables(spec, 4, seed0=100 * i)
+                       for i in range(3)])
+    probes = jnp.stack([_keys(600, 1024, seed=i) for i in range(3)])
+    weights = jnp.asarray(rng.random((3, 4)).astype(np.float32))
+    got_k = ops.window_query_stacked(rings, spec, probes, weights, mode=mode,
+                                     engine="kernel")
+    got_x = ops.window_query_stacked(rings, spec, probes, weights, mode=mode,
+                                     engine="xla")
+    if mode == "max":
+        np.testing.assert_array_equal(np.asarray(got_k), np.asarray(got_x))
+    else:
+        np.testing.assert_allclose(np.asarray(got_k), np.asarray(got_x),
+                                   rtol=1e-6)
+
+
+def test_window_query_stacked_validates():
+    spec = SketchSpec(width=256, depth=2, counter=CMLS16)
+    rings = jnp.zeros((2, 3, 2, 256), jnp.uint16)
+    keys = jnp.zeros((2, 16), jnp.uint32)
+    with pytest.raises(ValueError):
+        ops.window_query_stacked(rings, spec, keys, jnp.ones((2, 3)),
+                                 mode="median")
+    with pytest.raises(ValueError):
+        ops.window_query_stacked(rings, spec, jnp.zeros((3, 16), jnp.uint32),
+                                 jnp.ones((2, 3)))
+    with pytest.raises(ValueError):
+        ops.window_query_stacked(rings, spec, keys, jnp.ones((3,)))
+    with pytest.raises(ValueError):
+        ops.window_query_stacked(rings, spec, keys, jnp.ones((2, 3)),
+                                 engine="banana")
+
+
+def test_launch_counts_tally_wrapper_dispatches():
+    """`ops.launch_counts` audits one entry per fused dispatch — the
+    counter the flush-epoch benchmarks record per cycle."""
+    spec = SketchSpec(width=256, depth=2, counter=CMLS16)
+    tables = _stacked_tables(spec, 2, seed0=3)
+    ops.reset_launch_counts()
+    ops.query_many(tables, spec, jnp.arange(16, dtype=jnp.uint32))
+    ops.update_score_rows(tables, spec,
+                          jnp.zeros((1, CHUNK), jnp.uint32),
+                          np.asarray([0, 0], np.uint32), np.asarray([1]),
+                          jnp.zeros((1, 8), jnp.uint32))
+    got = ops.launch_counts()
+    assert got == {"query_many": 1, "update_score_rows": 1}
+    ops.reset_launch_counts()
+    assert ops.launch_counts() == {}
 
 
 def test_update_kernel_multichunk_sequential_semantics():
