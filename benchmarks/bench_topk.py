@@ -20,7 +20,7 @@ Three questions about the flush pipeline refactor:
      pipeline (active-row update launch, then a fused query refresh
      launch).  Tables AND heaps are asserted bit-identical; the results
      JSON additionally records `launch_audit` — per-op dispatch counts
-     captured from `ops.launch_counts()` during one flush epoch — so the
+     captured under `ops.audit_scope()` during one flush epoch — so the
      single-launch claim is machine-checked by check_regression.py, not
      prose.
 
@@ -66,7 +66,7 @@ METHODOLOGY = {
              "two-launch _refresh_topk query).  Interleaved pairs, median "
              "ratio; tables AND tracker heaps asserted bit-identical "
              "afterwards.",
-    "launch_audit": "per-op dispatch counts (ops.launch_counts) captured "
+    "launch_audit": "per-op dispatch counts (ops.audit_scope) captured "
                     "over ONE flush epoch per scenario: the tracked "
                     "tenant-plane flush must be exactly one "
                     "update_score_rows dispatch, and the windowed plane's "
@@ -191,19 +191,24 @@ def _epoch_point(spec, t, cap, k=64):
 
 
 def _launch_audit(spec, cap, k=8):
-    """Per-op dispatch counts over one flush epoch per scenario."""
+    """Per-op dispatch counts over one flush epoch per scenario.
+
+    Each scenario runs under its own `ops.audit_scope()` — a scoped tally
+    that sees exactly the dispatches of its `with` block, so concurrent
+    suites (or the service's own metrics registry) can't leak counts into
+    the audit the way the old global reset/read pair could."""
     audit = {}
     names = ["a", "b", "c"]
     svc = CountService(spec, tenants=names, queue_capacity=cap, track_top=k)
     svc.enqueue_many({"a": _hot_batch(256, 1), "b": _hot_batch(256, 2)})
-    ops.reset_launch_counts()
-    svc.flush()
-    audit["tracked_flush_epoch"] = ops.launch_counts()
+    with ops.audit_scope() as tally:
+        svc.flush()
+    audit["tracked_flush_epoch"] = dict(tally)
     svc.enqueue_many({"a": _hot_batch(256, 3)})
-    ops.reset_launch_counts()
-    for plane in svc.planes:
-        plane.flush(dense=True)
-    audit["dense_two_launch"] = ops.launch_counts()
+    with ops.audit_scope() as tally:
+        for plane in svc.planes:
+            plane.flush(dense=True)
+    audit["dense_two_launch"] = dict(tally)
     wspec = WindowSpec(sketch=spec, buckets=4, interval=60.0)
     wsvc = CountService(queue_capacity=cap, track_top=k)
     for n in names:
@@ -211,10 +216,9 @@ def _launch_audit(spec, cap, k=8):
     for flushed in (1, 3):
         for i, n in enumerate(names[:flushed]):
             wsvc.enqueue(n, _hot_batch(256, 10 + i), ts=10.0)
-        ops.reset_launch_counts()
-        wsvc.flush()
-        audit[f"window_flush_T{flushed}"] = ops.launch_counts()
-    ops.reset_launch_counts()
+        with ops.audit_scope() as tally:
+            wsvc.flush()
+        audit[f"window_flush_T{flushed}"] = dict(tally)
     return audit
 
 

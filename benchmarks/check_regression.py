@@ -24,12 +24,21 @@ baselines from the current results/ directory (run the quick benches
 first, then commit the refreshed files).
 
 Beyond timings, bench_topk records a `launch_audit` section — per-op
-dispatch counts captured from `kernels.ops.launch_counts()` over one
+dispatch counts captured under `kernels.ops.audit_scope()` over one
 flush epoch per scenario — and this checker FAILS the suite if the
 single-launch claims regress: a tracked tenant-plane flush must be
 exactly one `update_score_rows` dispatch, and a windowed plane's tracker
 refresh exactly one `window_query_stacked` dispatch regardless of how
 many tenants flushed.
+
+ACCURACY is gated the same way as speed: `benchmarks/run.py` scores a
+fixed-seed SLO probe workload (exact shadow counts, ARE by frequency
+decile) into results/accuracy.json, and `check_accuracy` fails the run
+when any decile's fresh ARE exceeds the committed envelope in
+benchmarks/baselines/accuracy.json by more than margin x + eps.  The
+workload is fully deterministic (same stream, same row hashes), so the
+envelope is tight — a violation means counting semantics changed, not
+that the runner was noisy.  A missing fresh accuracy file fails.
 """
 from __future__ import annotations
 
@@ -93,6 +102,54 @@ def audit_launches(doc: dict) -> list[str]:
     return problems
 
 
+def check_accuracy(fresh: dict, baseline: dict, margin: float = 1.25,
+                   eps: float = 0.02) -> list[str]:
+    """Pure ARE-by-decile envelope check; returns the violations.
+
+    Every tenant/decile in the BASELINE must exist in the fresh results
+    and satisfy fresh <= baseline * margin + eps (eps absorbs float
+    jitter near zero where a ratio alone would be meaningless).  Extra
+    fresh tenants are ignored — the envelope gates what was promised.
+    """
+    problems = []
+    base = baseline.get("are_by_decile", {})
+    new = fresh.get("are_by_decile", {})
+    if not base:
+        return ["baseline has no are_by_decile section"]
+    for tenant in sorted(base):
+        bds = base[tenant]
+        fds = new.get(tenant)
+        if fds is None:
+            problems.append(f"{tenant}: missing from fresh accuracy results")
+            continue
+        if len(fds) != len(bds):
+            problems.append(f"{tenant}: {len(fds)} deciles vs baseline's "
+                            f"{len(bds)}")
+            continue
+        for d, (b, f) in enumerate(zip(bds, fds)):
+            limit = b * margin + eps
+            if f > limit:
+                problems.append(
+                    f"{tenant} decile {d}: ARE {f:.4f} > envelope "
+                    f"{limit:.4f} (baseline {b:.4f} x {margin:.2f} + "
+                    f"{eps:.2f})")
+    return problems
+
+
+def _check_accuracy_files(margin: float, eps: float) -> list[str]:
+    """File-level wrapper: load baseline + fresh, fail on missing files."""
+    base_path = os.path.join(BASELINE_DIR, "accuracy.json")
+    new_path = os.path.join("results", "accuracy.json")
+    problems = []
+    for path, what in ((base_path, "baseline"), (new_path, "fresh")):
+        if not os.path.exists(path):
+            problems.append(f"missing {what} accuracy file {path}")
+    if problems:
+        return problems
+    return check_accuracy(_load(new_path), _load(base_path), margin=margin,
+                          eps=eps)
+
+
 def check(threshold: float) -> int:
     failures = []
     cal_here = calibration_us()
@@ -136,6 +193,14 @@ def check(threshold: float) -> int:
                   f"{base[worst]:.0f} -> {new[worst]:.0f} us")
             if med > threshold:
                 failures.append(suite)
+    problems = _check_accuracy_files(margin=1.25, eps=0.02)
+    for p in problems:
+        print(f"FAIL accuracy envelope: {p}")
+    if problems:
+        failures.append("accuracy.json")
+    else:
+        print("ok accuracy.json: ARE-by-decile within the committed "
+              "envelope")
     return 1 if failures else 0
 
 
@@ -152,6 +217,14 @@ def update() -> int:
         with open(os.path.join(BASELINE_DIR, suite), "w") as f:
             json.dump(doc, f, indent=1)
         print(f"baseline updated: {suite} (calibration {cal:.0f} us)")
+    src = os.path.join("results", "accuracy.json")
+    if not os.path.exists(src):
+        print(f"missing {src}: run benchmarks.run (any suite selection "
+              "records the SLO probe) first")
+        return 1
+    with open(os.path.join(BASELINE_DIR, "accuracy.json"), "w") as f:
+        json.dump(_load(src), f, indent=1)
+    print("baseline updated: accuracy.json (ARE-by-decile envelope)")
     return 0
 
 

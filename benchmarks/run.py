@@ -12,20 +12,38 @@ them.  --compiled lowers the Pallas kernels for the real backend (the
 flag that turns these scripts into TPU-hardware numbers); the default
 --interpret runs them in interpreter mode, and every suite records the
 mode in its JSON methodology block.
+
+Every invocation is observed through `repro.obs`:
+
+  * each suite runs under `ops.audit_scope()` and a tracer span, so the
+    results JSON carries a `metrics` section — per-suite dispatch
+    tallies and wall-clock span timings — alongside the timed rows;
+  * a fixed-seed SLO probe workload (a CountService with a full-rate
+    exact shadow counter) runs after the suites and scores serving
+    accuracy by frequency decile; the deciles land in
+    results/accuracy.json for `check_regression.py` to diff against the
+    committed envelope in benchmarks/baselines/accuracy.json;
+  * the registry and trace export as results/metrics.prom (Prometheus
+    text exposition) and results/trace.json (chrome://tracing) — the
+    artifacts CI's bench-smoke job uploads.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
-import sys
 import time
+
+import numpy as np
 
 from benchmarks import (bench_are_counts, bench_batched_divergence,
                         bench_damped_update, bench_ingest, bench_pmi,
                         bench_query, bench_throughput, bench_topk,
                         bench_window)
-from benchmarks.common import add_mode_flags, emit, set_kernel_mode
+from benchmarks.common import (add_mode_flags, emit, mode_methodology,
+                               set_kernel_mode)
+from repro import obs
+from repro.kernels import ops
 
 SUITES = [
     ("fig1_are_counts", bench_are_counts.run),
@@ -38,6 +56,9 @@ SUITES = [
     ("ingest_plane", bench_ingest.run),
     ("topk_plane", bench_topk.run),
 ]
+
+SLO_SEED = 0
+SLO_TENANT = "slo"
 
 
 def _aliases(name: str, fn) -> set[str]:
@@ -61,6 +82,31 @@ def _select(args) -> list:
     return [(n, f) for n, f in SUITES if _aliases(n, f) & wanted]
 
 
+def slo_probe_run(registry: obs.MetricsRegistry, tracer: obs.Tracer
+                  ) -> dict[str, list[float]]:
+    """Fixed-seed accuracy probe workload: a CountService fed a Zipfian
+    stream with every key shadowed exactly (rate=1.0), scored by
+    frequency decile.  Deterministic given SLO_SEED — both the stream and
+    the sketch's row hashes — and deliberately NOT scaled by --quick, so
+    every run (CI quick mode, local full mode, the baseline refresh)
+    scores the identical workload and the committed envelope is a tight
+    per-decile bound, not a statistical one."""
+    from repro.core import CMLS16, SketchSpec
+    from repro.stream import CountService
+
+    spec = SketchSpec(width=2048, depth=2, counter=CMLS16)
+    probe = obs.AccuracyProbe(rate=1.0, capacity=8192)
+    svc = CountService(spec, tenants=(SLO_TENANT,), queue_capacity=4096,
+                       seed=SLO_SEED, metrics=registry, tracer=tracer,
+                       probe=probe)
+    rng = np.random.default_rng(SLO_SEED)
+    for _ in range(8):
+        keys = (rng.zipf(1.2, 2048) % 20_000).astype(np.uint32)
+        svc.enqueue(SLO_TENANT, keys)
+    svc.flush()
+    return probe.record(svc)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -74,18 +120,44 @@ def main() -> None:
     args = ap.parse_args()
     set_kernel_mode(args.mode)
 
+    registry = obs.MetricsRegistry()
+    tracer = obs.Tracer(enabled=True)
+
     print("name,us_per_call,derived")
     all_rows = []
+    dispatch: dict[str, dict[str, int]] = {}
     for name, fn in _select(args):
         t0 = time.time()
-        rows = fn(quick=args.quick)
+        with ops.audit_scope() as tally, tracer.span(f"suite/{name}"):
+            rows = fn(quick=args.quick)
+        dispatch[name] = dict(sorted(tally.items()))
+        for op, n in tally.items():
+            registry.counter("dispatch", suite=name, op=op).inc(n)
         emit(rows)
         all_rows += rows
         print(f"suite/{name},{round((time.time() - t0) * 1e6)},elapsed",
               flush=True)
+
+    with ops.audit_scope() as tally, tracer.span("slo_probe"):
+        accuracy = slo_probe_run(registry, tracer)
+    dispatch["slo_probe"] = dict(sorted(tally.items()))
+
+    metrics = {
+        "dispatch": dispatch,
+        "spans": tracer.summary(),
+        "accuracy_are_deciles": accuracy,
+    }
     os.makedirs("results", exist_ok=True)
     with open("results/benchmarks.json", "w") as f:
-        json.dump(all_rows, f, indent=1)
+        json.dump({"rows": all_rows, "metrics": metrics}, f, indent=1)
+    with open("results/accuracy.json", "w") as f:
+        json.dump({"methodology": dict(mode_methodology(), seed=SLO_SEED),
+                   "are_by_decile": accuracy}, f, indent=1)
+    obs.write_prometheus("results/metrics.prom", registry)
+    obs.write_chrome_trace("results/trace.json", tracer)
+    for tenant, deciles in accuracy.items():
+        print(f"accuracy/{tenant},,are_deciles="
+              f"{'|'.join(f'{v:.4f}' for v in deciles)}")
 
 
 if __name__ == "__main__":

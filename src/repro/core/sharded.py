@@ -263,6 +263,26 @@ def routed_admit(tracker, ids: jnp.ndarray, spec, axis_name: str):
     return admission.admit_tracked(keys, est, filled, ids, spec)
 
 
+def merged_metrics(values: jnp.ndarray, axis_name: str,
+                   mode: str = "sum") -> jnp.ndarray:
+    """Fleet-wide reduction of per-shard metric values (inside shard_map).
+
+    The device half of `obs.registry.merge_snapshots`: each shard packs
+    its local instrument values into a flat array (counters and histogram
+    buckets under mode="sum", gauges/high-water under mode="max"), this
+    all-gathers the per-shard rows and reduces them, and every shard gets
+    the replicated fleet view to load back into a registry snapshot.
+    all_gather + reduce rather than psum/pmax so the same helper also
+    returns per-shard breakdowns if the caller keeps the gathered axis.
+    """
+    gathered = jax.lax.all_gather(values, axis_name)
+    if mode == "sum":
+        return gathered.sum(axis=0)
+    if mode == "max":
+        return gathered.max(axis=0)
+    raise ValueError(f"unknown metric merge mode: {mode!r}")
+
+
 def routed_window_query(win, keys: jnp.ndarray, axis_name: str,
                         capacity: int, n_buckets: int | None = None,
                         mode: str = "sum", gamma: float | None = None,

@@ -23,7 +23,8 @@ active-row conservative update with the heavy-hitter candidate re-query
 with one multi-ring launch.  Both follow the queue-append engine pattern
 ("auto" = Pallas kernel on TPU, bit-identical jitted XLA reference from
 `kernels/ref.py` elsewhere), and every wrapper here tallies its dispatches
-in `launch_counts()` so launch-count claims are auditable.
+into the active `audit_scope()` tallies (plus the default
+`launch_counts()` scope) so launch-count claims are auditable.
 """
 from __future__ import annotations
 
@@ -59,20 +60,60 @@ _INTERPRET_OVERRIDE: bool | None = None
 # dispatch — so callers (the service, the benchmarks) can AUDIT dispatch
 # counts: "the flush epoch is one launch" is a measured number in
 # results/bench_topk.json, not prose.
-_LAUNCHES: collections.Counter = collections.Counter()
+#
+# Tallies are CONTEXT-SCOPED: `audit_scope()` pushes a fresh Counter that
+# sees exactly the dispatches issued while it is active (scopes nest —
+# every active scope is bumped), so two benchmark suites in one process
+# audit independent windows instead of sharing one module global whose
+# reset races between them.  Index 0 is the process-default scope;
+# `launch_counts()` / `reset_launch_counts()` are thin views over it for
+# callers that predate scoping.
+_DEFAULT_SCOPE: collections.Counter = collections.Counter()
+_SCOPES: list[collections.Counter] = [_DEFAULT_SCOPE]
 
 
 def _launch(name: str) -> None:
-    _LAUNCHES[name] += 1
+    for scope in _SCOPES:
+        scope[name] += 1
+
+
+class audit_scope:
+    """Context manager scoping a dispatch tally to one with-block.
+
+        with ops.audit_scope() as tally:
+            svc.flush()
+        assert dict(tally) == {"update_score_rows": 1}
+
+    The yielded Counter keeps its final counts after exit (read it any
+    time); concurrent/nested scopes each see every dispatch issued while
+    they were active and nothing from outside their window.
+    """
+
+    def __init__(self):
+        self.tally = collections.Counter()
+
+    def __enter__(self) -> collections.Counter:
+        _SCOPES.append(self.tally)
+        return self.tally
+
+    def __exit__(self, *exc) -> None:
+        # remove by IDENTITY: Counters compare by value, so list.remove
+        # would happily detach the default scope (or a sibling) whenever
+        # its contents happen to equal this scope's tally
+        for i in range(len(_SCOPES) - 1, -1, -1):
+            if _SCOPES[i] is self.tally:
+                del _SCOPES[i]
+                break
 
 
 def launch_counts() -> dict[str, int]:
-    """Snapshot of {op name: dispatches issued} since the last reset."""
-    return dict(_LAUNCHES)
+    """Snapshot of the DEFAULT scope's {op: dispatches} since its last
+    reset (prefer `audit_scope()` for isolated windows)."""
+    return dict(_DEFAULT_SCOPE)
 
 
 def reset_launch_counts() -> None:
-    _LAUNCHES.clear()
+    _DEFAULT_SCOPE.clear()
 
 
 def set_interpret_override(value: bool | None) -> None:

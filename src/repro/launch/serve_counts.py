@@ -15,6 +15,18 @@ admission plane, and round-trips the whole multi-plane registry through a
 checkpoint.  The ingest loop runs under
 `jax.transfer_guard_device_to_host("disallow")` — the queue buffers
 provably never cross back to the host.
+
+The whole run is observed through `repro.obs`: per-plane ring/watermark
+gauges and dispatch tallies come off the service's metrics registry
+(never `svc.stats`), the flush epochs are span-traced, and a sampled
+exact shadow probe scores serving accuracy by frequency decile.  Scrape
+the run with:
+
+    PYTHONPATH=src python -m repro.launch.serve_counts \
+        --metrics-out /tmp/serve.prom --trace-out /tmp/serve_trace.json
+
+`serve.prom` is Prometheus text exposition (point a scraper at it or
+diff it in CI); `serve_trace.json` loads in chrome://tracing or Perfetto.
 """
 from __future__ import annotations
 
@@ -26,6 +38,7 @@ import numpy as np
 
 import jax
 
+from repro import obs
 from repro.core import CMLS16, CMS32, SketchSpec
 from repro.core.admission import AdmissionSpec
 from repro.stream import CountService, WindowPlane, WindowSpec
@@ -40,13 +53,22 @@ def main(argv=None) -> None:
     ap.add_argument("--width", type=int, default=4096)
     ap.add_argument("--depth", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write Prometheus text exposition here on exit")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a chrome://tracing JSON here on exit")
+    ap.add_argument("--probe-rate", type=float, default=0.05,
+                    help="hash-sample rate of the exact accuracy shadow")
     args = ap.parse_args(argv)
 
     spec = SketchSpec(width=args.width, depth=args.depth, counter=CMLS16)
     metrics_spec = SketchSpec(width=1024, depth=2, counter=CMS32)
     names = [f"tenant_{t:02d}" for t in range(args.tenants)]
+    tracer = obs.Tracer(enabled=True)
+    slo_probe = obs.AccuracyProbe(rate=args.probe_rate)
     svc = CountService(spec, tenants=names, queue_capacity=args.queue_cap,
-                       seed=args.seed, track_top=16)
+                       seed=args.seed, track_top=16, tracer=tracer,
+                       probe=slo_probe)
     # heterogeneous plane: two CMS32 metrics tenants ride the same service
     svc.add_tenant("metrics_qps", spec=metrics_spec)
     svc.add_tenant("metrics_err", spec=metrics_spec)
@@ -78,12 +100,29 @@ def main(argv=None) -> None:
                             np.uint32), ts=ts)
         svc.flush()
     dt = time.time() - t0
-    total = svc.stats["events"]
+    total = int(svc.metrics.counter("events").value)
+    flushes = int(svc.metrics.counter("flushes").value)
     print(f"[serve_counts] ingested {total} events for "
           f"{len(svc.tenants)} tenants across {len(svc.planes)} planes "
           f"in {dt:.2f}s ({total/dt/1e6:.2f} M events/s, "
-          f"{svc.stats['flushes']} flushes, device rings donated "
+          f"{flushes} flushes, device rings donated "
           f"end-to-end — no host read-back)")
+
+    # per-plane health straight off the registry: ring occupancy high-water
+    # (how close each plane came to auto-flush pressure) and event-time
+    # watermark lag for the windowed tenants
+    for plane in svc.planes:
+        fill = svc.metrics.gauge("ring_fill", plane=plane.label)
+        cap = len(plane.names) * svc.queue_capacity
+        line = (f"[serve_counts] plane {plane.label}: "
+                f"{int(svc.metrics.counter('plane_events', plane=plane.label).value)}"
+                f" events, ring high-water {int(fill.high_water)}/{cap}")
+        if isinstance(plane, WindowPlane):
+            lags = [int(svc.metrics.gauge("watermark_lag", plane=plane.label,
+                                          tenant=n).value)
+                    for n in plane.names]
+            line += f", watermark lag {lags} intervals"
+        print(line)
 
     # every tenant's hot keys answered by one fused query launch per plane
     probes = np.stack(
@@ -139,6 +178,33 @@ def main(argv=None) -> None:
         print(f"[serve_counts] snapshot/restore roundtrip: queries match="
               f"{same}, tenants={len(svc2.tenants)}, planes="
               f"{len(svc2.planes)}, stats={svc2.stats}")
+
+    # accuracy SLO probe: the exact shadow slice scored by frequency decile
+    # (decile 0 = coldest keys; the paper's ARE-by-decile evaluation as a
+    # live metric).  record() also lands the deciles in the registry.
+    ares = slo_probe.record(svc)
+    for tenant in sorted(ares)[:3]:
+        print(f"[serve_counts] {tenant} ARE by decile (cold->hot, "
+              f"{len(slo_probe.counts[tenant])} shadowed keys): "
+              f"{[round(v, 3) for v in ares[tenant]]}")
+
+    # span timings: wall time measured only at block_until_ready boundaries
+    summ = tracer.summary()
+    spans = ", ".join(f"{name} x{s['count']} {s['total_us']/1e3:.1f}ms"
+                      for name, s in sorted(summ.items()))
+    print(f"[serve_counts] spans: {spans}")
+    disp = {k: v for k, v in svc.metrics.snapshot()["counters"].items()
+            if k.startswith("dispatch")}
+    print(f"[serve_counts] dispatch tallies: {disp}")
+
+    if args.metrics_out:
+        obs.write_prometheus(args.metrics_out, svc.metrics)
+        print(f"[serve_counts] wrote Prometheus exposition -> "
+              f"{args.metrics_out}")
+    if args.trace_out:
+        obs.write_chrome_trace(args.trace_out, tracer)
+        print(f"[serve_counts] wrote chrome://tracing JSON -> "
+              f"{args.trace_out}")
 
 
 if __name__ == "__main__":

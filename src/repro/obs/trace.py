@@ -1,0 +1,110 @@
+"""Span tracer for the async-dispatch hot path.
+
+JAX dispatch is asynchronous: a wall clock around `svc.flush()` times the
+*enqueue* of the fused launch, not the launch.  Spans therefore only
+record durations at `block_until_ready` boundaries: an enabled span
+closes by blocking on whatever arrays the caller handed to `Span.sync`
+(the flush's tables, the query's estimates), so its duration covers the
+device work it claims to cover — that is the measurement tax tracing
+opts into.
+
+The DISABLED tracer (the default everywhere) must cost nothing on the
+ingest hot loop: `Tracer(enabled=False).span(...)` returns one shared
+`_NullSpan` whose `sync` is identity — no timestamp read, no allocation,
+and crucially ZERO added `block_until_ready` calls or kernel launches
+(spy-tested in tests/test_obs.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Optional
+
+
+class _NullSpan:
+    """Shared no-op span: the disabled tracer's entire overhead."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        return None
+
+    def sync(self, arrays: Any) -> Any:
+        return arrays
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class Span:
+    """One timed region.  Duration runs from __enter__ to __exit__; call
+    `sync(arrays)` on the region's outputs so the closing timestamp sits
+    at a block_until_ready boundary (un-synced spans still record, but
+    only measure host-side dispatch time — `synced` says which)."""
+
+    __slots__ = ("tracer", "name", "meta", "t0", "synced")
+
+    def __init__(self, tracer: "Tracer", name: str, meta: dict):
+        self.tracer = tracer
+        self.name = name
+        self.meta = meta
+        self.t0 = 0.0
+        self.synced = False
+
+    def __enter__(self) -> "Span":
+        self.t0 = time.perf_counter()
+        return self
+
+    def sync(self, arrays: Any) -> Any:
+        import jax  # deferred so the registry/export half stays jax-free
+        jax.block_until_ready(arrays)
+        self.synced = True
+        return arrays
+
+    def __exit__(self, *exc) -> None:
+        t1 = time.perf_counter()
+        self.tracer._record(self.name, self.t0, t1, self.synced, self.meta)
+
+
+class Tracer:
+    """Collects spans as chrome://tracing-ready complete events."""
+
+    def __init__(self, enabled: bool = False):
+        self.enabled = bool(enabled)
+        self.events: list[dict] = []
+        self._epoch = time.perf_counter()
+
+    def span(self, name: str, **meta):
+        """Context manager timing one region (no-op when disabled)."""
+        if not self.enabled:
+            return _NULL_SPAN
+        return Span(self, name, meta)
+
+    def _record(self, name: str, t0: float, t1: float, synced: bool,
+                meta: dict) -> None:
+        args = dict(meta)
+        args["synced"] = synced
+        self.events.append({
+            "name": name,
+            "ts": (t0 - self._epoch) * 1e6,   # chrome traces are in us
+            "dur": (t1 - t0) * 1e6,
+            "args": args,
+        })
+
+    def clear(self) -> None:
+        self.events.clear()
+        self._epoch = time.perf_counter()
+
+    def summary(self) -> dict[str, dict]:
+        """{span name: {count, total_us, max_us}} — what benchmark JSON
+        embeds as its span-timing metrics block."""
+        out: dict[str, dict] = {}
+        for ev in self.events:
+            s = out.setdefault(ev["name"],
+                               {"count": 0, "total_us": 0.0, "max_us": 0.0})
+            s["count"] += 1
+            s["total_us"] += ev["dur"]
+            s["max_us"] = max(s["max_us"], ev["dur"])
+        return out

@@ -11,8 +11,9 @@
 from repro.stream.window import (DecayedSketch, WindowSpec, WindowedSketch,
                                  decay, decayed_init, decayed_query,
                                  decayed_rotate, decayed_update,
-                                 interval_epoch, window_advance_steps,
-                                 window_advance_to, window_init, window_query,
+                                 interval_epoch, interval_lag,
+                                 window_advance_steps, window_advance_to,
+                                 window_init, window_query,
                                  window_query_many, window_rotate,
                                  window_update, window_weights)
 from repro.stream.service import CountService, TenantPlane, WindowPlane
@@ -21,6 +22,7 @@ __all__ = [
     "WindowSpec", "WindowedSketch", "window_init", "window_update",
     "window_rotate", "window_advance_steps", "window_advance_to",
     "window_query", "window_query_many", "window_weights", "interval_epoch",
+    "interval_lag",
     "DecayedSketch", "decay", "decayed_init", "decayed_rotate",
     "decayed_update", "decayed_query",
     "CountService", "TenantPlane", "WindowPlane",

@@ -58,6 +58,7 @@ different width (shrink keeps the best K', grow cold-masks new slots).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Optional, Sequence
 
@@ -65,6 +66,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import admission as adm
 from repro.core import sketch as sk
 from repro.core import topk
@@ -178,6 +180,38 @@ class _DeviceRing:
         self.fill[:] = 0
 
 
+class _TelemetryMixin:
+    """Per-plane instruments + tracer, shared by both plane kinds.
+
+    Every plane owns a label in its service's `MetricsRegistry` and keeps
+    its ring-occupancy gauge (with automatic high-water), event/flush
+    counters, and tenant-count gauge current from the host control path —
+    zero device work.  A plane constructed standalone (tests, benchmarks)
+    gets a private registry and a disabled tracer, so the instrument code
+    never branches.
+    """
+
+    def _init_telemetry(self, metrics: Optional[obs.MetricsRegistry],
+                        tracer: Optional[obs.Tracer], label: str) -> None:
+        self.metrics = metrics if metrics is not None else obs.MetricsRegistry()
+        self.tracer = tracer if tracer is not None else obs.Tracer()
+        self.label = label
+        self._m_events = self.metrics.counter("plane_events", plane=label)
+        self._m_flushes = self.metrics.counter("plane_flushes", plane=label)
+        self._g_fill = self.metrics.gauge("ring_fill", plane=label)
+        self._g_tenants = self.metrics.gauge("plane_tenants", plane=label)
+
+    def note_append(self) -> None:
+        """Refresh the ring-occupancy gauge after an append (the gauge's
+        high-water mark records the worst queue pressure ever seen)."""
+        self._g_fill.set(int(self.ring.fill.sum()))
+
+    def _note_flush(self, pending: int) -> None:
+        self._m_events.inc(int(pending))
+        self._m_flushes.inc()
+        self._g_fill.set(0)
+
+
 class _TrackerMixin:
     """Stacked (T, K) heavy-hitter tracker shared by both plane kinds."""
 
@@ -208,11 +242,13 @@ class _TrackerMixin:
                          filled=tk.filled[rows])
 
 
-class TenantPlane(_TrackerMixin):
+class TenantPlane(_TrackerMixin, _TelemetryMixin):
     """Tenants sharing one SketchSpec: stacked (T, d, w) tables + ring."""
 
     def __init__(self, spec: SketchSpec, queue_capacity: int, seed: int = 0,
-                 track_top: Optional[int] = None):
+                 track_top: Optional[int] = None,
+                 metrics: Optional[obs.MetricsRegistry] = None,
+                 tracer: Optional[obs.Tracer] = None, label: str = "p0"):
         self.spec = spec
         self.tables = jnp.zeros((0, spec.depth, spec.width),
                                 spec.counter.dtype)
@@ -220,6 +256,7 @@ class TenantPlane(_TrackerMixin):
         self.rng = _RngLane(seed)
         self.names: list[str] = []
         self._init_tracker(track_top)
+        self._init_telemetry(metrics, tracer, label)
 
     @property
     def queue_capacity(self) -> int:
@@ -231,6 +268,7 @@ class TenantPlane(_TrackerMixin):
         self.tables = jnp.concatenate([self.tables, zero], axis=0)
         self.names.append(name)
         self._grow_tracker()
+        self._g_tenants.set(len(self.names))
         return self.ring.add_row()
 
     def pending(self) -> int:
@@ -259,35 +297,48 @@ class TenantPlane(_TrackerMixin):
             return 0
         rng = self.rng.next()
         active = np.flatnonzero(self.ring.fill).astype(np.int32)
-        if dense:
-            # two-launch baseline: whole-plane update, then (if tracking)
-            # a fused query refresh over the gathered active rows
-            keys, weights = self.ring.live_slice()
-            self.tables = ops.update_many(self.tables, self.spec, keys, rng,
-                                          weights=weights)
-            if self.tracker is not None:
-                sel = jnp.asarray(active)
-                self._refresh_topk(active, keys[sel], weights[sel])
-        elif self.tracker is not None:
-            keys, weights = self.ring.live_slice(active)
-            rows_d = jnp.asarray(active)
-            cand, valid = topk.candidates(self._tracker_rows(rows_d), keys,
-                                          weights > 0)
-            self.tables, est = ops.update_score_rows(
-                self.tables, self.spec, keys, rng, active, cand,
-                weights=weights)
-            self._scatter_tracker(rows_d,
-                                  topk.reselect(cand, valid, est,
-                                                self.track_top))
-        elif active.size == len(self.names):
-            keys, weights = self.ring.live_slice()
-            self.tables = ops.update_many(self.tables, self.spec, keys, rng,
-                                          weights=weights)
-        else:
-            keys, weights = self.ring.live_slice(active)
-            self.tables = ops.update_rows(self.tables, self.spec, keys, rng,
-                                          active, weights=weights)
-        self.ring.reset()
+        tr = self.tracer
+        with tr.span("flush_epoch", plane=self.label,
+                     rows=int(active.size)) as ep:
+            if dense:
+                # two-launch baseline: whole-plane update, then (if
+                # tracking) a fused query refresh over the gathered rows
+                keys, weights = self.ring.live_slice()
+                self.tables = ops.update_many(self.tables, self.spec, keys,
+                                              rng, weights=weights)
+                if self.tracker is not None:
+                    sel = jnp.asarray(active)
+                    self._refresh_topk(active, keys[sel], weights[sel])
+            elif self.tracker is not None:
+                with tr.span("queue_gather", plane=self.label) as sp:
+                    keys, weights = sp.sync(self.ring.live_slice(active))
+                rows_d = jnp.asarray(active)
+                cand, valid = topk.candidates(self._tracker_rows(rows_d),
+                                              keys, weights > 0)
+                with tr.span("update_score_rows", plane=self.label) as sp:
+                    self.tables, est = ops.update_score_rows(
+                        self.tables, self.spec, keys, rng, active, cand,
+                        weights=weights)
+                    sp.sync((self.tables, est))
+                with tr.span("tracker_reselect", plane=self.label) as sp:
+                    self._scatter_tracker(rows_d,
+                                          topk.reselect(cand, valid, est,
+                                                        self.track_top))
+                    sp.sync(self.tracker.keys)
+            elif active.size == len(self.names):
+                keys, weights = self.ring.live_slice()
+                self.tables = ops.update_many(self.tables, self.spec, keys,
+                                              rng, weights=weights)
+            else:
+                with tr.span("queue_gather", plane=self.label) as sp:
+                    keys, weights = sp.sync(self.ring.live_slice(active))
+                with tr.span("update_rows", plane=self.label) as sp:
+                    self.tables = sp.sync(ops.update_rows(
+                        self.tables, self.spec, keys, rng, active,
+                        weights=weights))
+            self.ring.reset()
+            ep.sync(self.tables)
+        self._note_flush(pending)
         return pending
 
     def _refresh_topk(self, rows, keys, weights) -> None:
@@ -318,7 +369,7 @@ class TenantPlane(_TrackerMixin):
         return ops.query_many(self.tables, self.spec, keys)
 
 
-class WindowPlane(_TrackerMixin):
+class WindowPlane(_TrackerMixin, _TelemetryMixin):
     """Watermark-windowed tenants sharing one WindowSpec.
 
     Each tenant owns a ring-backed `WindowedSketch`; ingest buffers in the
@@ -331,7 +382,9 @@ class WindowPlane(_TrackerMixin):
     """
 
     def __init__(self, wspec: w.WindowSpec, queue_capacity: int,
-                 seed: int = 0, track_top: Optional[int] = None):
+                 seed: int = 0, track_top: Optional[int] = None,
+                 metrics: Optional[obs.MetricsRegistry] = None,
+                 tracer: Optional[obs.Tracer] = None, label: str = "w0"):
         self.wspec = wspec
         self.wins: list[w.WindowedSketch] = []
         self.ring = _DeviceRing(queue_capacity)
@@ -342,6 +395,13 @@ class WindowPlane(_TrackerMixin):
         # read a device scalar back on the ingest hot path
         self.epochs: list[Optional[int]] = []
         self._init_tracker(track_top)
+        self._init_telemetry(metrics, tracer, label)
+        self._m_rotations = self.metrics.counter("plane_rotations",
+                                                 plane=label)
+        # per-tenant watermark gauges, cached so a timestamped enqueue
+        # costs two attribute pokes, not a registry lookup
+        self._g_epoch: list = []
+        self._g_lag: list = []
 
     @property
     def spec(self) -> SketchSpec:
@@ -356,6 +416,11 @@ class WindowPlane(_TrackerMixin):
         self.names.append(name)
         self.epochs.append(None)
         self._grow_tracker()
+        self._g_tenants.set(len(self.names))
+        self._g_epoch.append(self.metrics.gauge("watermark_epoch",
+                                                plane=self.label, tenant=name))
+        self._g_lag.append(self.metrics.gauge("watermark_lag",
+                                              plane=self.label, tenant=name))
         return self.ring.add_row()
 
     def pending(self) -> int:
@@ -376,11 +441,16 @@ class WindowPlane(_TrackerMixin):
             self.wins[row] = dataclasses.replace(
                 self.wins[row], epoch=jnp.asarray(target, jnp.int32))
             self.epochs[row] = target
+            self._g_epoch[row].set(target)
             return
         if target < have:
             raise ValueError(
                 f"non-monotone watermark: ts {ts} (interval {target}) is "
                 f"behind the ring's watermark interval {have}")
+        # the lag gauge reads how far ahead of the standing watermark this
+        # batch arrived (0 = same interval); its high-water is the worst
+        # rotation fast-forward the tenant has ever forced
+        self._g_lag[row].set(target - have)
         if target == have:
             return
         if self.ring.fill[row]:
@@ -388,6 +458,8 @@ class WindowPlane(_TrackerMixin):
         self.wins[row] = w.window_advance_steps(self.wins[row],
                                                 target - have)
         self.epochs[row] = target
+        self._g_epoch[row].set(target)
+        self._m_rotations.inc(target - have)
 
     def flush(self, dense: bool = False) -> int:
         """Land every pending tenant's events in its ACTIVE bucket.
@@ -407,23 +479,36 @@ class WindowPlane(_TrackerMixin):
         t = len(self.wins)
         rows = (np.arange(t, dtype=np.int32) if dense
                 else np.flatnonzero(self.ring.fill).astype(np.int32))
-        keys, weights = self.ring.live_slice(None if dense else rows)
-        stack = jnp.stack([
-            jax.lax.dynamic_index_in_dim(self.wins[r].tables,
-                                         self.wins[r].cursor, 0,
-                                         keepdims=False)
-            for r in rows])
-        stack = ops.update_many(stack, self.spec, keys, rng, weights=weights,
-                                uniform_rows=(t, rows))
-        for i, r in enumerate(rows):
-            win = self.wins[r]
-            tables = jax.lax.dynamic_update_index_in_dim(
-                win.tables, stack[i], win.cursor, 0)
-            self.wins[r] = w.WindowedSketch(tables=tables, cursor=win.cursor,
-                                            spec=win.spec, epoch=win.epoch)
-        if self.tracker is not None:
-            self._refresh_topk(rows, keys, weights)
-        self.ring.reset()
+        tr = self.tracer
+        with tr.span("flush_epoch", plane=self.label,
+                     rows=int(rows.size)) as ep:
+            with tr.span("queue_gather", plane=self.label) as sp:
+                keys, weights = sp.sync(
+                    self.ring.live_slice(None if dense else rows))
+            stack = jnp.stack([
+                jax.lax.dynamic_index_in_dim(self.wins[r].tables,
+                                             self.wins[r].cursor, 0,
+                                             keepdims=False)
+                for r in rows])
+            with tr.span("window_update", plane=self.label) as sp:
+                stack = sp.sync(ops.update_many(stack, self.spec, keys, rng,
+                                                weights=weights,
+                                                uniform_rows=(t, rows)))
+            for i, r in enumerate(rows):
+                win = self.wins[r]
+                tables = jax.lax.dynamic_update_index_in_dim(
+                    win.tables, stack[i], win.cursor, 0)
+                self.wins[r] = w.WindowedSketch(tables=tables,
+                                                cursor=win.cursor,
+                                                spec=win.spec,
+                                                epoch=win.epoch)
+            if self.tracker is not None:
+                with tr.span("tracker_refresh", plane=self.label) as sp:
+                    self._refresh_topk(rows, keys, weights)
+                    sp.sync(self.tracker.keys)
+            self.ring.reset()
+            ep.sync([win.tables for win in self.wins])
+        self._note_flush(pending)
         return pending
 
     def _refresh_topk(self, rows, keys, weights) -> None:
@@ -469,7 +554,10 @@ class CountService:
 
     def __init__(self, spec: Optional[SketchSpec] = None,
                  tenants: Sequence[str] = (), queue_capacity: int = 4096,
-                 seed: int = 0, track_top: Optional[int] = None):
+                 seed: int = 0, track_top: Optional[int] = None,
+                 metrics: Optional[obs.MetricsRegistry] = None,
+                 tracer: Optional[obs.Tracer] = None,
+                 probe: Optional[obs.AccuracyProbe] = None):
         if queue_capacity < 1:
             raise ValueError("queue_capacity must be positive")
         if track_top is not None and track_top < 1:
@@ -483,11 +571,49 @@ class CountService:
         self._where: dict[str, tuple[object, int]] = {}
         self._order: list[str] = []
         self._admission: dict[str, adm.AdmissionSpec] = {}
-        self.stats = {"events": 0, "flushes": 0}
+        # telemetry plane: one registry + tracer threaded through every
+        # plane; the accuracy probe (opt-in) shadows enqueued keys with
+        # exact host-side counts (see repro.obs)
+        self.metrics = metrics if metrics is not None else obs.MetricsRegistry()
+        self.tracer = tracer if tracer is not None else obs.Tracer()
+        self.probe = probe
+        self._m_events = self.metrics.counter("events")
+        self._m_flushes = self.metrics.counter("flushes")
+        self._audit_depth = 0
         for name in tenants:
             self.add_tenant(name)
 
     # ---- registry ----
+
+    @property
+    def stats(self) -> dict:
+        """Legacy {events, flushes} view, now served by the metrics
+        registry (same numbers, one source of truth)."""
+        return {"events": int(self._m_events.value),
+                "flushes": int(self._m_flushes.value)}
+
+    @stats.setter
+    def stats(self, d: dict) -> None:
+        self._m_events.value = int(d.get("events", 0))
+        self._m_flushes.value = int(d.get("flushes", 0))
+
+    @contextlib.contextmanager
+    def _audited(self):
+        """Scope one public call's kernel dispatches into the registry's
+        per-op `dispatch{op=...}` counters (re-entrant calls — a query's
+        internal flush — fold into the outermost scope, so nothing double
+        counts)."""
+        if self._audit_depth:
+            yield
+            return
+        self._audit_depth += 1
+        try:
+            with ops.audit_scope() as tally:
+                yield
+        finally:
+            self._audit_depth -= 1
+            for op, n in tally.items():
+                self.metrics.counter("dispatch", op=op).inc(n)
 
     @property
     def spec(self) -> Optional[SketchSpec]:
@@ -536,7 +662,10 @@ class CountService:
                 plane = self._wplanes.setdefault(
                     window, WindowPlane(window, self.queue_capacity,
                                         self.seed,
-                                        track_top=self.track_top))
+                                        track_top=self.track_top,
+                                        metrics=self.metrics,
+                                        tracer=self.tracer,
+                                        label=f"w{len(self._wplanes)}"))
         else:
             spec = spec or self.default_spec
             if spec is None:
@@ -546,7 +675,10 @@ class CountService:
             if plane is None:
                 plane = self._planes.setdefault(
                     spec, TenantPlane(spec, self.queue_capacity, self.seed,
-                                      track_top=self.track_top))
+                                      track_top=self.track_top,
+                                      metrics=self.metrics,
+                                      tracer=self.tracer,
+                                      label=f"p{len(self._planes)}"))
         row = plane.add(name)
         self._where[name] = (plane, row)
         self._order.append(name)
@@ -601,21 +733,26 @@ class CountService:
         """
         plane, row = self._lookup(name)
         keys = _as_keys(keys)
-        if ts is not None:
-            if not isinstance(plane, WindowPlane):
-                raise ValueError(f"tenant {name!r} is not windowed; "
-                                 "register with a WindowSpec to use ts")
-            plane.advance(row, ts, self.flush)
-        self.stats["events"] += int(keys.size)
-        cap = plane.queue_capacity
-        while keys.size:
-            free = plane.ring.free(row)
-            if free == 0:
-                self.flush()
-                free = cap
-            take = min(free, keys.size)
-            plane.ring.append([row], [keys[:take]])
-            keys = keys[take:]
+        with self._audited(), self.tracer.span("enqueue", tenant=name) as sp:
+            if ts is not None:
+                if not isinstance(plane, WindowPlane):
+                    raise ValueError(f"tenant {name!r} is not windowed; "
+                                     "register with a WindowSpec to use ts")
+                plane.advance(row, ts, self.flush)
+            if self.probe is not None:
+                self.probe.observe(name, keys)
+            self._m_events.inc(int(keys.size))
+            cap = plane.queue_capacity
+            while keys.size:
+                free = plane.ring.free(row)
+                if free == 0:
+                    self.flush()
+                    free = cap
+                take = min(free, keys.size)
+                plane.ring.append([row], [keys[:take]])
+                keys = keys[take:]
+            plane.note_append()
+            sp.sync(plane.ring.queue)
 
     def enqueue_many(self, events: dict, ts=None) -> None:
         """Buffer several tenants' microbatches with ONE scatter-append
@@ -629,25 +766,34 @@ class CountService:
         """
         by_plane: dict[int, tuple[object, list, list]] = {}
         overflow: list[tuple[str, np.ndarray]] = []
-        for name, keys in events.items():
-            plane, row = self._lookup(name)
-            keys = _as_keys(keys)
-            if ts is not None:
-                if not isinstance(plane, WindowPlane):
-                    raise ValueError(f"tenant {name!r} is not windowed; "
-                                     "register with a WindowSpec to use ts")
-                plane.advance(row, ts, self.flush)
-            if keys.size == 0:
-                continue
-            if keys.size > plane.ring.free(row):
-                overflow.append((name, keys))
-                continue
-            _, rows, batches = by_plane.setdefault(id(plane), (plane, [], []))
-            rows.append(row)
-            batches.append(keys)
-            self.stats["events"] += int(keys.size)
-        for plane, rows, batches in by_plane.values():
-            plane.ring.append(rows, batches)
+        with self._audited(), \
+                self.tracer.span("enqueue_many", tenants=len(events)) as sp:
+            for name, keys in events.items():
+                plane, row = self._lookup(name)
+                keys = _as_keys(keys)
+                if ts is not None:
+                    if not isinstance(plane, WindowPlane):
+                        raise ValueError(f"tenant {name!r} is not windowed; "
+                                         "register with a WindowSpec to use "
+                                         "ts")
+                    plane.advance(row, ts, self.flush)
+                if keys.size == 0:
+                    continue
+                if keys.size > plane.ring.free(row):
+                    overflow.append((name, keys))
+                    continue
+                _, rows, batches = by_plane.setdefault(id(plane),
+                                                       (plane, [], []))
+                rows.append(row)
+                batches.append(keys)
+                if self.probe is not None:
+                    self.probe.observe(name, keys)
+                self._m_events.inc(int(keys.size))
+            for plane, rows, batches in by_plane.values():
+                plane.ring.append(rows, batches)
+                plane.note_append()
+            sp.sync([plane.ring.queue
+                     for plane, _, _ in by_plane.values()])
         for name, keys in overflow:
             self.enqueue(name, keys)
 
@@ -660,9 +806,10 @@ class CountService:
         seed), so per-plane state evolves exactly as in a dedicated
         single-spec service.
         """
-        total = sum(plane.flush() for plane in self.planes)
+        with self._audited():
+            total = sum(plane.flush() for plane in self.planes)
         if total:
-            self.stats["flushes"] += 1
+            self._m_flushes.inc()
         return total
 
     # ---- serving ----
@@ -674,16 +821,17 @@ class CountService:
         `query_all`'s kernel).  Windowed tenants: the fused window
         reduction over the ring (`window_kw` forwards n_buckets / mode /
         gamma / engine)."""
-        self.flush()
-        plane, row = self._lookup(name)
-        probes = jnp.asarray(_as_keys(keys))
-        if isinstance(plane, WindowPlane):
-            return plane.query_row(row, probes, **window_kw)
-        if window_kw:
-            raise ValueError(f"tenant {name!r} is not windowed; "
-                             f"window args {sorted(window_kw)} do not apply")
-        return ops.query(Sketch(table=plane.tables[row], spec=plane.spec),
-                         probes)
+        with self._audited(), self.tracer.span("query", tenant=name) as sp:
+            self.flush()
+            plane, row = self._lookup(name)
+            probes = jnp.asarray(_as_keys(keys))
+            if isinstance(plane, WindowPlane):
+                return sp.sync(plane.query_row(row, probes, **window_kw))
+            if window_kw:
+                raise ValueError(f"tenant {name!r} is not windowed; window "
+                                 f"args {sorted(window_kw)} do not apply")
+            return sp.sync(ops.query(Sketch(table=plane.tables[row],
+                                            spec=plane.spec), probes))
 
     def query_all(self, keys) -> dict[str, jnp.ndarray]:
         """Estimated counts for EVERY tenant: one fused launch per plane.
@@ -693,29 +841,31 @@ class CountService:
         {tenant: float32 (N,) estimates}, bit-consistent with calling
         `query` per tenant.  Flushes first: read-your-writes.
         """
-        self.flush()
-        keys = np.asarray(keys)
-        per_tenant = keys.ndim == 2
-        if per_tenant and keys.shape[0] != len(self._order):
-            raise ValueError(f"per-tenant probes need {len(self._order)} "
-                             f"rows, got {keys.shape[0]}")
-        keys = _as_keys(keys).reshape(keys.shape)
-        out: dict[str, jnp.ndarray] = {}
-        row_of = {name: i for i, name in enumerate(self._order)}
-        for plane in self._planes.values():
-            if per_tenant:
-                probes = jnp.asarray(
-                    np.stack([keys[row_of[n]] for n in plane.names]))
-            else:
-                probes = jnp.asarray(keys)
-            est = plane.query_rows(probes)
-            for i, n in enumerate(plane.names):
-                out[n] = est[i]
-        for plane in self._wplanes.values():
-            for i, n in enumerate(plane.names):
-                probe = keys[row_of[n]] if per_tenant else keys
-                out[n] = plane.query_row(i, jnp.asarray(probe))
-        return out
+        with self._audited(), \
+                self.tracer.span("query_all", tenants=len(self._order)) as sp:
+            self.flush()
+            keys = np.asarray(keys)
+            per_tenant = keys.ndim == 2
+            if per_tenant and keys.shape[0] != len(self._order):
+                raise ValueError(f"per-tenant probes need {len(self._order)} "
+                                 f"rows, got {keys.shape[0]}")
+            keys = _as_keys(keys).reshape(keys.shape)
+            out: dict[str, jnp.ndarray] = {}
+            row_of = {name: i for i, name in enumerate(self._order)}
+            for plane in self._planes.values():
+                if per_tenant:
+                    probes = jnp.asarray(
+                        np.stack([keys[row_of[n]] for n in plane.names]))
+                else:
+                    probes = jnp.asarray(keys)
+                est = plane.query_rows(probes)
+                for i, n in enumerate(plane.names):
+                    out[n] = est[i]
+            for plane in self._wplanes.values():
+                for i, n in enumerate(plane.names):
+                    probe = keys[row_of[n]] if per_tenant else keys
+                    out[n] = plane.query_row(i, jnp.asarray(probe))
+            return sp.sync(out)
 
     def topk(self, name: str, k: Optional[int] = None, **window_kw):
         """Current top-k heavy hitters of one tenant: (keys, estimates).
@@ -740,8 +890,9 @@ class CountService:
         if window_kw and not isinstance(plane, WindowPlane):
             raise ValueError(f"tenant {name!r} is not windowed; "
                              f"window args {sorted(window_kw)} do not apply")
-        self.flush()
-        keys, est, filled = plane.topk_row(row, **window_kw)
+        with self._audited(), self.tracer.span("topk", tenant=name):
+            self.flush()
+            keys, est, filled = plane.topk_row(row, **window_kw)
         sel = filled[:k]
         return keys[:k][sel], est[:k][sel]
 
@@ -770,27 +921,35 @@ class CountService:
         if window_kw and not isinstance(plane, WindowPlane):
             raise ValueError(f"tenant {name!r} is not windowed; "
                              f"window args {sorted(window_kw)} do not apply")
-        self.flush()
-        if isinstance(plane, WindowPlane):
-            # re-score the heap against the current ring (rotation/expiry/
-            # decay) and persist it — then decide from the fresh tracker
-            plane.topk_row(row, **window_kw)
-        # tracker leaves sliced on device (no host round trip); ids
-        # validate host-side (np) and upload ONCE inside admit_tracked
-        tk = plane.tracker
-        return adm.admit_tracked(tk.keys[row], tk.estimates[row],
-                                 tk.filled[row], _as_keys(ids), aspec)
+        with self._audited(), self.tracer.span("admit", tenant=name) as sp:
+            self.flush()
+            if isinstance(plane, WindowPlane):
+                # re-score the heap against the current ring (rotation/
+                # expiry/decay) and persist it — then decide from the
+                # fresh tracker
+                plane.topk_row(row, **window_kw)
+            # tracker leaves sliced on device (no host round trip); ids
+            # validate host-side (np) and upload ONCE inside admit_tracked
+            tk = plane.tracker
+            return sp.sync(adm.admit_tracked(tk.keys[row], tk.estimates[row],
+                                             tk.filled[row], _as_keys(ids),
+                                             aspec))
 
     # ---- persistence ----
 
     def _meta(self) -> dict:
         meta = {
-            "version": 4,
+            "version": 5,
             "queue_capacity": self.queue_capacity,
             "seed": self.seed,
             "track_top": self.track_top,
             "tenant_order": self.tenants,
             "stats": dict(self.stats),
+            # v5: the whole metrics-registry snapshot (counters, gauges
+            # with high-water marks, histograms) — restore reloads it so
+            # telemetry survives a restart; "stats" stays alongside for
+            # pre-v5 readers
+            "metrics": self.metrics.snapshot(),
             # v4: per-tenant tracker-fed admission policies (decisions
             # themselves live in the tracker leaves, refreshed per epoch)
             "admission": {name: dataclasses.asdict(spec)
@@ -855,11 +1014,13 @@ class CountService:
                 track_top: Optional[int] = None) -> "CountService":
         """Rebuild a service (registry + planes + rings) from a snapshot.
 
-        Accepts the v4 manifest (admission plane), v3 (multi-plane +
-        tracker state), the v2 multi-plane layout, and the original v1
-        single-plane layout (whose host queue is replayed into the device
-        ring).  Checkpoints written with tracking on restore their
-        trackers; `track_top` re-arms tracking:
+        Accepts the v5 manifest (metrics snapshot), v4 (admission plane),
+        v3 (multi-plane + tracker state), the v2 multi-plane layout, and
+        the original v1 single-plane layout (whose host queue is replayed
+        into the device ring).  Pre-v5 checkpoints restore with COLD
+        metrics (only the legacy events/flushes stats carry over).
+        Checkpoints written with tracking on restore their trackers;
+        `track_top` re-arms tracking:
 
           * pre-v3 / tracker-less snapshot — COLD (T, track_top) heaps
             that refill from post-restore traffic (the tables carry no
@@ -919,6 +1080,10 @@ class CountService:
             if has_topk:
                 p.tracker = topk.TopK(**leaves["topk"])
         svc.stats = dict(meta.get("stats", svc.stats))
+        # v5 carries the full registry snapshot; pre-v5 checkpoints restore
+        # with cold metrics (only the stats counters above carry over)
+        if "metrics" in meta:
+            svc.metrics.load(meta["metrics"])
         if (track_top is not None and saved_k is not None
                 and track_top != saved_k):
             svc._resize_trackers(track_top)

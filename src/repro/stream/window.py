@@ -129,6 +129,17 @@ def interval_epoch(spec: WindowSpec, ts) -> int:
     return int(math.floor(float(ts) / spec.interval))
 
 
+def interval_lag(spec: WindowSpec, epoch: int | None, ts) -> int:
+    """Whole intervals event-time `ts` runs ahead of a ring whose
+    watermark interval is `epoch` (0 = same interval, or no watermark
+    yet).  This is the per-tenant watermark-lag gauge the telemetry plane
+    tracks: a persistently large lag at enqueue time means rotation is
+    about to fast-forward the ring and drop window coverage."""
+    if epoch is None:
+        return 0
+    return max(0, interval_epoch(spec, ts) - int(epoch))
+
+
 def window_rotate(win: WindowedSketch) -> WindowedSketch:
     """Advance the ring one interval: the oldest bucket becomes the new
     (zeroed) active bucket.  Call on a fixed wall-clock cadence (or let

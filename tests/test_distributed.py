@@ -405,6 +405,45 @@ def test_lazy_pmax_merge_multidevice():
 
 
 @pytest.mark.slow
+def test_merged_metrics_multidevice():
+    """Device half of the fleet metrics merge: per-shard instrument values
+    reduce with `sharded.merged_metrics` (sum for counters/histogram
+    buckets, max for gauges) and every shard sees the replicated fleet
+    view — matching `obs.merge_snapshots` on the same values host-side."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.core import sharded
+        from repro import obs
+
+        mesh = jax.make_mesh((8,), ("data",))
+        # shard i packs [events counter, ring-fill gauge] as a value row
+        vals = jnp.asarray(np.stack([[10.0 * (i + 1), float(i % 3)]
+                                     for i in range(8)], 0), jnp.float32)
+
+        def merge(v):
+            summed = sharded.merged_metrics(v[0], "data", mode="sum")
+            maxed = sharded.merged_metrics(v[0], "data", mode="max")
+            return jnp.stack([summed, maxed])[None]
+
+        got = np.asarray(shard_map(merge, mesh=mesh, in_specs=(P("data"),),
+                                   out_specs=P("data"))(vals))
+        # replicated: every shard holds the same fleet view
+        assert (got == got[0:1]).all(), "shards disagree on the merge"
+        snaps = [{"counters": {"events": 10.0 * (i + 1)},
+                  "gauges": {"fill": {"value": float(i % 3),
+                                      "high_water": float(i % 3)}}}
+                 for i in range(8)]
+        host = obs.merge_snapshots(snaps)
+        assert got[0][0][0] == host["counters"]["events"]
+        assert got[0][1][1] == host["gauges"]["fill"]["value"]
+        print("ok", got[0][0][0], got[0][1][1])
+    """)
+    assert "ok" in out
+
+
+@pytest.mark.slow
 def test_compressed_allreduce_multidevice():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np

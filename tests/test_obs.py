@@ -1,0 +1,404 @@
+"""Telemetry plane: registry, scoped dispatch tallies, tracer, SLO probes.
+
+Covers the contracts the observability subsystem promises:
+
+  * the registry's instruments, snapshot/load identity, and the
+    host-side shard merge (`merge_snapshots`);
+  * `ops.audit_scope` isolation (including the Counter-equality pitfall
+    list.remove would have) and the legacy launch_counts wrappers;
+  * the tracked flush epoch auditing as ONE `update_score_rows`
+    dispatch under a scoped tally;
+  * the disabled tracer adding ZERO `block_until_ready` calls and ZERO
+    kernel launches to an enqueue/flush loop (spy-tested);
+  * probe exactness + ARE-by-decile, and the accuracy envelope gate
+    tripping when a table is corrupted;
+  * service metrics (stats parity, ring/watermark gauges) and the
+    manifest v5 metrics roundtrip + pre-v5 cold-metrics restore.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from benchmarks.check_regression import check_accuracy
+from repro import obs
+from repro.core import CMLS16, SketchSpec
+from repro.kernels import ops
+from repro.stream import CountService, WindowSpec
+
+SPEC = SketchSpec(width=1024, depth=2, counter=CMLS16)
+
+
+def _zipf(n, vocab, seed=0):
+    return (np.random.default_rng(seed).zipf(1.3, n) % vocab).astype(np.uint32)
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+def test_registry_instruments_and_identity():
+    m = obs.MetricsRegistry()
+    c = m.counter("events", plane="p0")
+    c.inc(5)
+    c.inc(2.5)
+    assert m.counter("events", plane="p0") is c  # get-or-create identity
+    assert m.counter("events", plane="p0").value == 7.5
+    assert m.counter("events", plane="p1").value == 0  # labels distinguish
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+    g = m.gauge("fill")
+    g.set(10)
+    g.set(3)
+    assert (g.value, g.high_water) == (3, 10)
+
+    h = m.histogram("lat", lo=0, hi=3)
+    assert h.bounds() == [1.0, 2.0, 4.0, 8.0]
+    for v in (0.5, 2.0, 3.0, 100.0, -1.0):
+        h.observe(v)
+    # 0.5 and -1.0 in bucket 0; 2.0 in <=2; 3.0 in <=4; 100 overflows
+    assert h.counts == [2, 1, 1, 0, 1]
+    assert h.count == 5
+
+
+def test_registry_snapshot_load_keeps_objects_live():
+    m = obs.MetricsRegistry()
+    m.counter("events").inc(11)
+    m.gauge("fill").set(4)
+    m.histogram("lat", lo=0, hi=2).observe(3.0)
+    snap = m.snapshot()
+    assert json.loads(json.dumps(snap)) == snap  # plain JSON
+
+    m2 = obs.MetricsRegistry()
+    c = m2.counter("events")      # handed out BEFORE the load
+    m2.load(snap)
+    assert c.value == 11          # restored in place, object stays live
+    c.inc()
+    assert m2.snapshot()["counters"]["events"] == 12
+    assert m2.snapshot()["histograms"]["lat"] == snap["histograms"]["lat"]
+
+
+def test_merge_snapshots_sum_counters_max_gauges():
+    def shard(events, fill, hw):
+        m = obs.MetricsRegistry()
+        m.counter("events").inc(events)
+        m.gauge("fill").set(hw)
+        m.gauge("fill").set(fill)
+        m.histogram("are", lo=-2, hi=2).observe(0.5)
+        return m.snapshot()
+
+    merged = obs.merge_snapshots([shard(10, 3, 9), shard(32, 7, 8)])
+    assert merged["counters"]["events"] == 42
+    assert merged["gauges"]["fill"] == {"value": 7, "high_water": 9}
+    assert merged["histograms"]["are"]["count"] == 2
+    bad = shard(1, 1, 1)
+    bad["histograms"]["are"]["lo"] = -5  # bound mismatch must be loud
+    with pytest.raises(ValueError):
+        obs.merge_snapshots([merged, bad])
+
+
+# --------------------------------------------------------------------------
+# exporters
+# --------------------------------------------------------------------------
+
+def test_prometheus_exposition_shape():
+    m = obs.MetricsRegistry()
+    m.counter("plane_events", plane="p0").inc(7)
+    m.gauge("ring_fill", plane="p0").set(3)
+    h = m.histogram("accuracy_are", lo=-1, hi=1, tenant="a")
+    h.observe(0.4)
+    h.observe(3.0)
+    text = obs.to_prometheus(m)
+    lines = text.splitlines()
+    assert 'plane_events_total{plane="p0"} 7' in lines
+    assert 'ring_fill{plane="p0"} 3' in lines
+    assert 'ring_fill_high_water{plane="p0"} 3' in lines
+    # cumulative buckets: 0.4 <= 0.5, then both under +Inf
+    assert 'accuracy_are_bucket{tenant="a",le="0.5"} 1' in lines
+    assert 'accuracy_are_bucket{tenant="a",le="+Inf"} 2' in lines
+    assert 'accuracy_are_count{tenant="a"} 2' in lines
+
+
+def test_chrome_trace_shape(tmp_path):
+    tr = obs.Tracer(enabled=True)
+    with tr.span("flush_epoch", plane="p0"):
+        pass
+    doc = obs.to_chrome_trace(tr)
+    (ev,) = doc["traceEvents"]
+    assert ev["ph"] == "X" and ev["name"] == "flush_epoch"
+    assert ev["dur"] >= 0 and ev["args"]["plane"] == "p0"
+    path = os.path.join(str(tmp_path), "trace.json")
+    obs.write_chrome_trace(path, tr)
+    assert json.load(open(path))["traceEvents"] == doc["traceEvents"]
+
+
+# --------------------------------------------------------------------------
+# scoped dispatch tallies
+# --------------------------------------------------------------------------
+
+def test_audit_scope_isolation_and_legacy_wrappers():
+    ops.reset_launch_counts()
+    s = CountService(SPEC, tenants=("a", "b"), queue_capacity=512)
+    with ops.audit_scope() as outer:
+        s.enqueue("a", _zipf(100, 50))
+        with ops.audit_scope() as inner:
+            s.flush()                # one pending row of two: active path
+        s.query("a", [1])
+    assert "queue_append" in outer and "query" in outer
+    assert "queue_append" not in inner          # nothing from outside
+    assert inner["update_rows"] == 1
+    assert outer["update_rows"] == 1            # nesting sees everything
+    # the default scope (legacy wrappers) saw the same window
+    assert ops.launch_counts()["queue_append"] == outer["queue_append"]
+    ops.reset_launch_counts()
+    assert ops.launch_counts() == {}
+
+
+def test_audit_scope_equal_tallies_do_not_detach_default():
+    """Counters compare by VALUE: exiting a scope whose tally equals the
+    default scope's contents must not remove the default from the active
+    list (the list.remove failure mode)."""
+    ops.reset_launch_counts()
+    with ops.audit_scope():
+        pass                        # empty tally == freshly-reset default
+    s = CountService(SPEC, tenants=("a",), queue_capacity=512)
+    s.enqueue("a", _zipf(50, 20))
+    assert ops.launch_counts().get("queue_append") == 1
+    ops.reset_launch_counts()
+
+
+def test_tracked_flush_epoch_is_one_dispatch_under_scope():
+    svc = CountService(SPEC, tenants=("a", "b"), queue_capacity=4096,
+                       track_top=8)
+    svc.enqueue("a", _zipf(300, 100, seed=1))
+    svc.enqueue("b", _zipf(300, 100, seed=2))
+    with ops.audit_scope() as tally:
+        svc.flush()
+    assert dict(tally) == {"update_score_rows": 1}
+    # the service's own registry folded the same audit in
+    snap = svc.metrics.snapshot()["counters"]
+    assert snap['dispatch{op="update_score_rows"}'] == 1
+
+
+# --------------------------------------------------------------------------
+# tracer
+# --------------------------------------------------------------------------
+
+def test_tracer_spans_record_and_summarize():
+    tr = obs.Tracer(enabled=True)
+    svc = CountService(SPEC, tenants=("a",), queue_capacity=512, tracer=tr,
+                       track_top=4)
+    svc.enqueue("a", _zipf(200, 80))
+    svc.flush()
+    names = {ev["name"] for ev in tr.events}
+    assert {"enqueue", "flush_epoch", "update_score_rows"} <= names
+    epoch = [ev for ev in tr.events if ev["name"] == "flush_epoch"]
+    assert epoch[0]["args"]["synced"] is True   # closed at a sync boundary
+    summ = tr.summary()
+    assert summ["enqueue"]["count"] == 1
+    assert summ["flush_epoch"]["total_us"] >= summ["flush_epoch"]["max_us"]
+    tr.clear()
+    assert tr.events == []
+
+
+def test_disabled_tracer_costs_nothing():
+    """The no-op tracer path: an enqueue/flush loop must add ZERO
+    block_until_ready calls and ZERO kernel launches vs the span-free
+    baseline (the null span's sync is identity)."""
+    def loop(svc):
+        for i in range(3):
+            svc.enqueue("a", _zipf(200, 80, seed=i))
+            svc.flush()
+
+    blocks = []
+    orig_block = jax.block_until_ready
+
+    def spy_block(x):
+        blocks.append(1)
+        return orig_block(x)
+
+    svc_off = CountService(SPEC, tenants=("a",), queue_capacity=512,
+                           track_top=4)   # default tracer: disabled
+    assert svc_off.tracer.enabled is False
+    try:
+        jax.block_until_ready = spy_block
+        with ops.audit_scope() as tally_off:
+            loop(svc_off)
+    finally:
+        jax.block_until_ready = orig_block
+    assert blocks == []                   # zero added sync points
+
+    # identical loop with tracing on: same kernel launches, >0 syncs
+    svc_on = CountService(SPEC, tenants=("a",), queue_capacity=512,
+                          track_top=4, tracer=obs.Tracer(enabled=True))
+    try:
+        jax.block_until_ready = spy_block
+        with ops.audit_scope() as tally_on:
+            loop(svc_on)
+    finally:
+        jax.block_until_ready = orig_block
+    assert blocks != []
+    assert dict(tally_off) == dict(tally_on)  # tracing adds no launches
+
+
+# --------------------------------------------------------------------------
+# accuracy probes + envelope gate
+# --------------------------------------------------------------------------
+
+def test_probe_shadow_counts_are_exact():
+    probe = obs.AccuracyProbe(rate=1.0, capacity=1 << 16)
+    batches = [_zipf(500, 200, seed=i) for i in range(3)]
+    for b in batches:
+        probe.observe("t", b)
+    keys, true = probe.shadowed("t")
+    uniq, counts = np.unique(np.concatenate(batches), return_counts=True)
+    assert sorted(keys.tolist()) == uniq.tolist()
+    got = dict(zip(keys.tolist(), true.tolist()))
+    assert got == dict(zip(uniq.tolist(), counts.tolist()))
+    assert probe.dropped == 0
+
+
+def test_probe_sampling_is_deterministic_and_bounded():
+    probe = obs.AccuracyProbe(rate=0.25, capacity=8)
+    keys = np.arange(4096, dtype=np.uint32)
+    mask = probe.sampled(keys)
+    np.testing.assert_array_equal(mask, probe.sampled(keys))  # deterministic
+    assert 0.1 < mask.mean() < 0.4      # roughly the asked-for rate
+    probe.observe("t", keys)
+    assert len(probe.counts["t"]) == 8  # capacity cap held
+    assert probe.dropped > 0            # and the cost was counted
+
+
+def test_probe_are_by_decile_orders_cold_to_hot():
+    probe = obs.AccuracyProbe(rate=1.0)
+    rng = np.random.default_rng(0)
+    probe.observe("t", rng.zipf(1.3, 4000) % 500)
+    assert probe.are_by_decile(lambda k: k, "nope") is None  # unknown tenant
+    keys, true = probe.shadowed("t")
+    exact = dict(zip(keys.tolist(), true.tolist()))
+
+    # a query that overestimates every key by +3: relative error shrinks
+    # with frequency, so deciles must decrease cold -> hot
+    ares = probe.are_by_decile(
+        lambda k: np.array([exact[int(x)] + 3 for x in k], np.float64), "t")
+    assert len(ares) == 10
+    assert ares[0] > ares[-1]
+    # exact answers score a flat zero
+    assert probe.are_by_decile(
+        lambda k: np.array([exact[int(x)] for x in k], np.float64), "t") \
+        == [0.0] * 10
+
+
+def test_probe_record_lands_registry_metrics():
+    probe = obs.AccuracyProbe(rate=1.0)
+    svc = CountService(SPEC, tenants=("a",), queue_capacity=4096,
+                       probe=probe)
+    svc.enqueue("a", _zipf(2000, 300, seed=3))
+    out = probe.record(svc)
+    assert set(out) == {"a"} and len(out["a"]) == 10
+    snap = svc.metrics.snapshot()
+    assert snap["histograms"]['accuracy_are{tenant="a"}']["count"] == 10
+    assert 'accuracy_are_decile{decile="0",tenant="a"}' in snap["gauges"]
+
+
+def test_accuracy_envelope_gate_trips_on_corruption():
+    """The CI accuracy gate end-to-end: a healthy service passes its own
+    envelope; corrupting its tables trips `check_accuracy`."""
+    probe = obs.AccuracyProbe(rate=1.0)
+    svc = CountService(SPEC, tenants=("a",), queue_capacity=4096,
+                       probe=probe, seed=7)
+    for i in range(3):
+        svc.enqueue("a", _zipf(2000, 400, seed=10 + i))
+    svc.flush()
+    baseline = {"are_by_decile": probe.record(svc)}
+    assert check_accuracy({"are_by_decile": probe.record(svc)},
+                          baseline) == []
+    # corrupt the plane: zero the tables, so every estimate collapses
+    plane = svc.planes[0]
+    plane.tables = plane.tables * 0
+    problems = check_accuracy({"are_by_decile": probe.record(svc)}, baseline)
+    assert problems, "gate must trip on corrupted counts"
+    assert any("decile" in p for p in problems)
+    # and a missing tenant is its own loud failure
+    assert check_accuracy({"are_by_decile": {}}, baseline) \
+        == ["a: missing from fresh accuracy results"]
+
+
+# --------------------------------------------------------------------------
+# service wiring + manifest v5
+# --------------------------------------------------------------------------
+
+def test_service_metrics_parity_and_plane_gauges():
+    svc = CountService(SPEC, tenants=("a", "b"), queue_capacity=256)
+    svc.enqueue("a", np.full(100, 7, np.uint32))
+    svc.enqueue("b", np.full(300, 8, np.uint32))  # forces a pressure flush
+    svc.flush()
+    snap = svc.metrics.snapshot()
+    assert snap["counters"]["events"] == svc.stats["events"] == 400
+    assert snap["counters"]["flushes"] == svc.stats["flushes"]
+    assert snap["counters"]['plane_events{plane="p0"}'] == 400
+    fill = snap["gauges"]['ring_fill{plane="p0"}']
+    assert fill["value"] == 0 and fill["high_water"] >= 100
+    assert snap["gauges"]['plane_tenants{plane="p0"}']["value"] == 2
+
+
+def test_window_plane_watermark_gauges():
+    wspec = WindowSpec(sketch=SPEC, buckets=4, interval=10.0)
+    svc = CountService(queue_capacity=512)
+    svc.add_tenant("w", window=wspec)
+    svc.enqueue("w", _zipf(50, 20), ts=25.0)   # epoch 2
+    snap = svc.metrics.snapshot()["gauges"]
+    assert snap['watermark_epoch{plane="w0",tenant="w"}']["value"] == 2
+    assert snap['watermark_lag{plane="w0",tenant="w"}']["value"] == 0
+    svc.enqueue("w", _zipf(50, 20, seed=1), ts=57.0)  # epoch 5: lag 3 seen
+    snap = svc.metrics.snapshot()["gauges"]
+    assert snap['watermark_epoch{plane="w0",tenant="w"}']["value"] == 5
+    assert snap['watermark_lag{plane="w0",tenant="w"}']["high_water"] == 3
+    assert svc.metrics.snapshot()["counters"][
+        'plane_rotations{plane="w0"}'] == 3
+
+
+def test_manifest_v5_metrics_roundtrip(tmp_path):
+    svc = CountService(SPEC, tenants=("a",), queue_capacity=512, track_top=4)
+    svc.enqueue("a", _zipf(400, 100))
+    svc.flush()
+    before = svc.metrics.snapshot()
+    assert before["counters"]["events"] == 400
+    svc.snapshot(str(tmp_path), step=1)
+
+    svc2 = CountService.restore(str(tmp_path))
+    after = svc2.metrics.snapshot()
+    assert after["counters"] == before["counters"]
+    assert after["gauges"]['ring_fill{plane="p0"}'] \
+        == before["gauges"]['ring_fill{plane="p0"}']
+    # restored instruments keep counting into the same objects
+    svc2.enqueue("a", _zipf(10, 5))
+    assert svc2.stats["events"] == 410
+
+
+def test_pre_v5_checkpoint_restores_with_cold_metrics(tmp_path):
+    """A v4 manifest (no `metrics` snapshot) must load with zeroed
+    registry metrics — only the legacy events/flushes stats carry over."""
+    svc = CountService(SPEC, tenants=("a",), queue_capacity=512)
+    svc.enqueue("a", _zipf(400, 100))
+    svc.flush()
+    svc.snapshot(str(tmp_path), step=1)
+    # rewrite the manifest as a pre-v5 checkpoint
+    mpath = os.path.join(str(tmp_path), "step_00000001", "manifest.json")
+    doc = json.load(open(mpath))
+    assert doc["metadata"]["version"] == 5
+    doc["metadata"]["version"] = 4
+    del doc["metadata"]["metrics"]
+    with open(mpath, "w") as f:
+        json.dump(doc, f)
+
+    svc2 = CountService.restore(str(tmp_path))
+    assert svc2.stats == {"events": 400, "flushes": 1}  # stats carried
+    snap = svc2.metrics.snapshot()
+    assert snap["counters"]['plane_events{plane="p0"}'] == 0  # cold
+    assert snap["gauges"]['ring_fill{plane="p0"}']["high_water"] == 0
+    # counts themselves restored fine
+    assert float(svc2.query("a", [1])[0]) >= 1
