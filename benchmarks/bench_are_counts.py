@@ -15,11 +15,43 @@ import time
 from benchmarks.common import are_of, count_stream, emit, paper_corpus
 from repro.configs.paper_sketch import CFG
 
+# Constant-bytes packed-format sweep: one budget, all three formats in
+# PACKED storage, so every sketch occupies exactly this many table bytes
+# and the ARE ordering is a pure cells-for-bits trade (log8 gets 4x the
+# cells of cms32 at the same budget).  Fixed across --quick so the
+# ordering row is comparable between CI and full runs.
+FMT_BUDGET = 131_072
+
+
+def _format_rows(events, uniq, true) -> list[dict]:
+    ares = {}
+    rows = []
+    for variant, fmt in (("CMS-CU", "cms32"), ("CMLS16-CU", "log16"),
+                         ("CMLS8-CU", "log8")):
+        spec = CFG.spec(variant, FMT_BUDGET, packed=True)
+        assert spec.memory_bytes == FMT_BUDGET
+        t0 = time.perf_counter()
+        s = count_stream(spec, events, mode="exact")
+        dt = time.perf_counter() - t0
+        ares[fmt] = are_of(s, uniq, true)
+        rows.append({
+            "name": f"fig1_packed_are/{fmt}/{FMT_BUDGET // 1024}kB",
+            "us_per_call": round(dt * 1e6 / len(events), 3),
+            "derived": f"ARE={ares[fmt]:.4f} cells={spec.width}",
+        })
+    rows.append({
+        "name": f"fig1_packed_ordering/{FMT_BUDGET // 1024}kB",
+        "us_per_call": "",
+        "derived": (f"log16_le_cms32={ares['log16'] <= ares['cms32']} "
+                    f"log8_vs_cms32={ares['cms32'] / max(ares['log8'], 1e-9):.2f}x"),
+    })
+    return rows
+
 
 def run(quick: bool = False) -> list[dict]:
     toks, events, uniq, true = paper_corpus(125_000 if quick else 500_000)
     budgets = CFG.budgets[1::2] if quick else CFG.budgets
-    rows = []
+    rows = _format_rows(events, uniq, true)
     for budget in budgets:
         ares = {}
         for variant in CFG.variants:

@@ -19,6 +19,7 @@ bench_window's ingest claims):
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 
@@ -147,7 +148,13 @@ def _window_rows(quick: bool):
 def run(quick: bool = False) -> list[dict]:
     rows = _fusion_rows(quick) + _window_rows(quick)
     os.makedirs("results", exist_ok=True)
+    spec = SketchSpec(width=1024, depth=2, counter=CMLS16)
     methodology = dict(METHODOLOGY, **common.mode_methodology())
+    methodology["cell_format"] = {
+        "unpacked": common.format_methodology(spec),
+        "packed": common.format_methodology(
+            dataclasses.replace(spec, packed=True)),
+    }
     with open("results/bench_query.json", "w") as f:
         json.dump({"methodology": methodology, "rows": rows}, f, indent=1)
     return rows

@@ -28,6 +28,7 @@ Three questions about the flush pipeline refactor:
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 
@@ -39,6 +40,7 @@ from benchmarks import common
 from benchmarks.bench_ingest import _paired_cycles
 from repro.core import CMLS16, SketchSpec
 from repro.core import topk
+from repro.core.counters import pack_table
 from repro.kernels import ops
 from repro.stream import CountService, WindowSpec
 
@@ -69,11 +71,25 @@ METHODOLOGY = {
     "launch_audit": "per-op dispatch counts (ops.audit_scope) captured "
                     "over ONE flush epoch per scenario: the tracked "
                     "tenant-plane flush must be exactly one "
-                    "update_score_rows dispatch, and the windowed plane's "
-                    "tracker refresh exactly one window_query_stacked "
-                    "dispatch regardless of flushed-tenant count.  "
-                    "check_regression.py fails the suite if the audit "
-                    "regresses.",
+                    "update_score_rows dispatch — for PACKED storage too "
+                    "(tracked_flush_epoch_packed): packing changes the "
+                    "cell layout inside the launch, never the launch "
+                    "count — and the windowed plane's tracker refresh "
+                    "exactly one window_query_stacked dispatch regardless "
+                    "of flushed-tenant count.  check_regression.py fails "
+                    "the suite if the audit regresses.",
+    "packed_format": "topk_packed rows: the tracked single-launch epoch "
+                     "on packed vs unpacked storage (same seeds, "
+                     "interleaved pairs, median ratio); afterwards the "
+                     "packed tables are asserted lane-identical to "
+                     "pack_table(unpacked) and the heaps bit-identical.  "
+                     "topk_structure rows are not timings: they record "
+                     "how many tenant tables fit one VMEM block "
+                     "(VMEM_TABLE_LIMIT / table_bytes_streamed, using "
+                     "the 32-bit-lane streaming model from cell_format) "
+                     "and the bytes one T-tenant dense epoch sweeps — "
+                     "the capacity headroom packing buys even where "
+                     "interpret mode hides the bandwidth win.",
 }
 
 
@@ -190,6 +206,55 @@ def _epoch_point(spec, t, cap, k=64):
     return tf, tp, ratio
 
 
+def _packed_epoch_point(spec_u, spec_p, t, cap, k=64):
+    """Tracked single-launch epoch, packed vs unpacked storage, hot1."""
+    names = [f"tn{i}" for i in range(t)]
+    unp = CountService(spec_u, tenants=names, queue_capacity=cap, seed=0,
+                       track_top=k)
+    pk = CountService(spec_p, tenants=names, queue_capacity=cap, seed=0,
+                      track_top=k)
+    batch = _hot_batch(cap, seed=t + 55)
+
+    def packed_cycle():
+        pk.enqueue_many({names[0]: batch})
+        pk.planes[0].flush()
+        jax.block_until_ready((pk.planes[0].tables, pk.planes[0].tracker.keys))
+
+    def unpacked_cycle():
+        unp.enqueue_many({names[0]: batch})
+        unp.planes[0].flush()
+        jax.block_until_ready((unp.planes[0].tables,
+                               unp.planes[0].tracker.keys))
+
+    tp, tu, ratio = _paired_cycles(packed_cycle, unpacked_cycle, warmup=2,
+                                   reps=7)
+    pf, uf = pk.planes[0], unp.planes[0]
+    assert (np.asarray(pf.tables)
+            == np.asarray(pack_table(uf.tables, spec_u.counter.bits))).all(), \
+        "packed and unpacked epochs landed different cell states"
+    assert (np.asarray(pf.tracker.keys) == np.asarray(uf.tracker.keys)).all() \
+        and (np.asarray(pf.tracker.estimates)
+             == np.asarray(uf.tracker.estimates)).all(), \
+        "packed and unpacked epochs landed different heaps"
+    return tp, tu, ratio
+
+
+def _structure_rows(spec_u, spec_p, t):
+    """Capacity headroom from packing, derived from the storage shapes
+    (no timing): tenants per VMEM block and bytes per dense flush epoch."""
+    rows = []
+    for tag, spec in (("unpacked", spec_u), ("packed", spec_p)):
+        swept = common.format_methodology(spec)["table_bytes_streamed"]
+        rows.append({
+            "name": f"topk_structure/{tag}",
+            "us_per_call": "",
+            "derived": (f"tenants_per_vmem_block="
+                        f"{ops.VMEM_TABLE_LIMIT // swept} "
+                        f"epoch_bytes_T{t}={swept * t}"),
+        })
+    return rows
+
+
 def _launch_audit(spec, cap, k=8):
     """Per-op dispatch counts over one flush epoch per scenario.
 
@@ -204,6 +269,12 @@ def _launch_audit(spec, cap, k=8):
     with ops.audit_scope() as tally:
         svc.flush()
     audit["tracked_flush_epoch"] = dict(tally)
+    psvc = CountService(dataclasses.replace(spec, packed=True),
+                        tenants=names, queue_capacity=cap, track_top=k)
+    psvc.enqueue_many({"a": _hot_batch(256, 1), "b": _hot_batch(256, 2)})
+    with ops.audit_scope() as tally:
+        psvc.flush()
+    audit["tracked_flush_epoch_packed"] = dict(tally)
     svc.enqueue_many({"a": _hot_batch(256, 3)})
     with ops.audit_scope() as tally:
         for plane in svc.planes:
@@ -257,15 +328,32 @@ def _rows(quick: bool):
              "us_per_call": round(t_ref * 1e6),
              "derived": f"K=64+{ops.CHUNK} cands"},
         ]
+    pspec = dataclasses.replace(spec, packed=True)
+    for t in points[:1] if quick else points[:2]:
+        tp, tu, ratio = _packed_epoch_point(spec, pspec, t, cap)
+        rows += [
+            {"name": f"topk_packed/packed_T{t}",
+             "us_per_call": round(tp * 1e6),
+             "derived": f"{round(cap / tp / 1e6, 1)} Mkeys/s"},
+            {"name": f"topk_packed/unpacked_T{t}",
+             "us_per_call": round(tu * 1e6),
+             "derived": f"packed_speedup_x{ratio:.2f}"},
+        ]
+    rows += _structure_rows(spec, pspec, t=points[-1])
     return rows
 
 
 def run(quick: bool = False) -> list[dict]:
     rows = _rows(quick)
-    audit = _launch_audit(SketchSpec(width=1024, depth=2, counter=CMLS16),
-                          2 * ops.CHUNK)
+    spec = SketchSpec(width=1024, depth=2, counter=CMLS16)
+    audit = _launch_audit(spec, 2 * ops.CHUNK)
     os.makedirs("results", exist_ok=True)
     methodology = dict(METHODOLOGY, **common.mode_methodology())
+    methodology["cell_format"] = {
+        "unpacked": common.format_methodology(spec),
+        "packed": common.format_methodology(
+            dataclasses.replace(spec, packed=True)),
+    }
     with open("results/bench_topk.json", "w") as f:
         json.dump({"methodology": methodology, "rows": rows,
                    "launch_audit": audit}, f, indent=1)

@@ -27,7 +27,8 @@ Beyond timings, bench_topk records a `launch_audit` section — per-op
 dispatch counts captured under `kernels.ops.audit_scope()` over one
 flush epoch per scenario — and this checker FAILS the suite if the
 single-launch claims regress: a tracked tenant-plane flush must be
-exactly one `update_score_rows` dispatch, and a windowed plane's tracker
+exactly one `update_score_rows` dispatch (for packed and unpacked table
+storage alike), and a windowed plane's tracker
 refresh exactly one `window_query_stacked` dispatch regardless of how
 many tenants flushed.
 
@@ -90,10 +91,13 @@ def audit_launches(doc: dict) -> list[str]:
     if audit is None:
         return ["no launch_audit section (bench_topk should record one)"]
     problems = []
-    epoch = audit.get("tracked_flush_epoch", {})
-    if epoch != {"update_score_rows": 1}:
-        problems.append("tracked flush epoch is not a single fused "
-                        f"update+score dispatch: {epoch}")
+    # the single-launch epoch must hold for BOTH storage layouts: packing
+    # changes the cell format inside the launch, never the launch count
+    for key in ("tracked_flush_epoch", "tracked_flush_epoch_packed"):
+        epoch = audit.get(key, {})
+        if epoch != {"update_score_rows": 1}:
+            problems.append(f"{key} is not a single fused "
+                            f"update+score dispatch: {epoch}")
     for key in ("window_flush_T1", "window_flush_T3"):
         got = audit.get(key, {})
         if got.get("window_query_stacked") != 1:
@@ -172,7 +176,8 @@ def check(threshold: float) -> int:
                     failures.append(suite)
                 else:
                     print(f"ok {suite}: launch audit (flush epoch = 1 fused "
-                          "dispatch; window refresh = 1 stacked query)")
+                          "dispatch, packed and unpacked; window refresh = "
+                          "1 stacked query)")
             base = _timed_rows(base_doc)
             new = _timed_rows(new_doc)
             shared = sorted(set(base) & set(new))

@@ -39,6 +39,20 @@ def mode_methodology() -> dict:
             "device": jax.devices()[0].device_kind}
 
 
+def format_methodology(spec) -> dict:
+    """Cell-format fields for a suite's methodology block.
+
+    The kernels move tables as 32-bit device lanes, so an UNPACKED cell
+    occupies a full 4-byte lane regardless of `counter.bits`; packed
+    storage fits `cells_per_lane` cells per lane (1 byte/cell for log8,
+    2 for log16).  `table_bytes_streamed` is what one full table sweep —
+    a dense flush or whole-plane query — moves per tenant.
+    """
+    return {"counter_bits": spec.counter.bits, "packed": spec.packed,
+            "bytes_per_cell": 4.0 / spec.cells_per_lane,
+            "table_bytes_streamed": 4 * spec.depth * spec.storage_width}
+
+
 def add_mode_flags(ap) -> None:
     """--interpret / --compiled on a benchmark argparser."""
     g = ap.add_mutually_exclusive_group()

@@ -23,6 +23,9 @@ Every invocation is observed through `repro.obs`:
     accuracy by frequency decile; the deciles land in
     results/accuracy.json for `check_regression.py` to diff against the
     committed envelope in benchmarks/baselines/accuracy.json;
+  * a per-cell-format probe (packed cms32/log16/log8 at one constant
+    byte budget, same fixed-seed stream) adds fmt_* pseudo-tenants to
+    that envelope, gating the packed formats' accuracy per decile;
   * the registry and trace export as results/metrics.prom (Prometheus
     text exposition) and results/trace.json (chrome://tracing) — the
     artifacts CI's bench-smoke job uploads.
@@ -59,6 +62,10 @@ SUITES = [
 
 SLO_SEED = 0
 SLO_TENANT = "slo"
+# Byte budget for the per-format accuracy probe (packed storage, exact
+# from_memory sizing) — small enough to stress collisions so the decile
+# envelope actually separates the formats.
+FMT_BUDGET = 65_536
 
 
 def _aliases(name: str, fn) -> set[str]:
@@ -107,6 +114,38 @@ def slo_probe_run(registry: obs.MetricsRegistry, tracer: obs.Tracer
     return probe.record(svc)
 
 
+def format_probe_run(registry: obs.MetricsRegistry, tracer: obs.Tracer
+                     ) -> dict[str, list[float]]:
+    """Per-cell-format accuracy probe: one packed CountService per format
+    (cms32 / log16 / log8) at the same FMT_BUDGET table bytes, fed the
+    identical fixed-seed Zipfian stream as the SLO probe.  The resulting
+    pseudo-tenants (fmt_cms32, ...) land in results/accuracy.json next to
+    the SLO tenant, so check_regression's per-decile envelope gates the
+    packed formats' serving accuracy — including the constant-memory
+    ordering the paper's Figure 1 claims (log16 no worse than cms32 at
+    equal bytes on a skewed stream)."""
+    from repro.core import CMLS8, CMLS16, CMS32, SketchSpec
+    from repro.stream import CountService
+
+    out: dict[str, list[float]] = {}
+    for fmt, counter in (("cms32", CMS32), ("log16", CMLS16),
+                         ("log8", CMLS8)):
+        spec = SketchSpec.from_memory(FMT_BUDGET, depth=2, counter=counter,
+                                      packed=True)
+        probe = obs.AccuracyProbe(rate=1.0, capacity=8192)
+        tenant = f"fmt_{fmt}"
+        svc = CountService(spec, tenants=(tenant,), queue_capacity=4096,
+                           seed=SLO_SEED, metrics=registry, tracer=tracer,
+                           probe=probe)
+        rng = np.random.default_rng(SLO_SEED)
+        for _ in range(8):
+            keys = (rng.zipf(1.2, 2048) % 20_000).astype(np.uint32)
+            svc.enqueue(tenant, keys)
+        svc.flush()
+        out.update(probe.record(svc))
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -142,6 +181,10 @@ def main() -> None:
         accuracy = slo_probe_run(registry, tracer)
     dispatch["slo_probe"] = dict(sorted(tally.items()))
 
+    with ops.audit_scope() as tally, tracer.span("format_probe"):
+        accuracy.update(format_probe_run(registry, tracer))
+    dispatch["format_probe"] = dict(sorted(tally.items()))
+
     metrics = {
         "dispatch": dispatch,
         "spans": tracer.summary(),
@@ -151,7 +194,8 @@ def main() -> None:
     with open("results/benchmarks.json", "w") as f:
         json.dump({"rows": all_rows, "metrics": metrics}, f, indent=1)
     with open("results/accuracy.json", "w") as f:
-        json.dump({"methodology": dict(mode_methodology(), seed=SLO_SEED),
+        json.dump({"methodology": dict(mode_methodology(), seed=SLO_SEED,
+                                       format_probe_budget=FMT_BUDGET),
                    "are_by_decile": accuracy}, f, indent=1)
     obs.write_prometheus("results/metrics.prom", registry)
     obs.write_chrome_trace("results/trace.json", tracer)

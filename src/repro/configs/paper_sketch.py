@@ -20,9 +20,11 @@ class PaperSketchConfig:
     budgets = (32_768, 65_536, 131_072, 262_144, 524_288,
                1_048_576, 2_097_152, 4_194_304)
 
-    def spec(self, variant: str, budget: int) -> SketchSpec:
+    def spec(self, variant: str, budget: int,
+             packed: bool = False) -> SketchSpec:
         return SketchSpec.from_memory(budget, depth=self.depth,
-                                      counter=self.variants[variant])
+                                      counter=self.variants[variant],
+                                      packed=packed)
 
 
 CFG = PaperSketchConfig()

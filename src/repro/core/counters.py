@@ -55,6 +55,11 @@ class CounterSpec:
         return _DTYPES[self.bits]
 
     @property
+    def cells_per_lane(self) -> int:
+        """How many cells fit in one packed uint32 storage lane."""
+        return 32 // self.bits
+
+    @property
     def max_state(self) -> int:
         return (1 << self.bits) - 1
 
@@ -130,8 +135,24 @@ class CounterSpec:
         Returns the new state with the same dtype as `state`, saturating at
         max_state (the residual-error floor discussed in the paper's §4).
         """
-        s = state.astype(jnp.float32)
         n = n.astype(jnp.float32)
+        if self.kind == "linear":
+            # Integer-space path: float32 rounds past 2^24, so a uint32
+            # linear cell computed in estimate space would drift from its
+            # own state.  Split n into whole + fractional parts (exact in
+            # float32 for the whole part below 2^24, and any float32 above
+            # 2^24 is already whole), bump stochastically on the fraction,
+            # and add with room-clamped uint32 saturation.  Matches the
+            # old float path bit-for-bit wherever that path was exact.
+            s_u = state.astype(jnp.uint32)
+            n_int = jnp.floor(n)
+            frac = n - n_int
+            bump = (uniform < frac).astype(jnp.uint32)
+            room = jnp.uint32(self.max_state) - s_u
+            add_f = jnp.minimum(n_int, jnp.float32(2147483648.0))
+            add_u = jnp.minimum(add_f.astype(jnp.uint32) + bump, room)
+            return (s_u + add_u).astype(state.dtype)
+        s = state.astype(jnp.float32)
         v2 = self.decode(state) + n
         c2 = jnp.maximum(self.encode_floor(v2), s)  # monotone: never decrease
         frac = (v2 - self.decode(c2)) / self.point_mass(c2)
@@ -139,6 +160,41 @@ class CounterSpec:
         new = jnp.where(n > 0, c2 + inc, s)
         new = jnp.clip(new, 0.0, float(self.max_state))
         return new.astype(state.dtype)
+
+
+def pack_table(table: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack a (..., w) table of `bits`-wide cell states into uint32 lanes.
+
+    Cell j of a row lands in lane j // cpl at bit offset (j % cpl) * bits
+    (little-endian within the lane), so the returned array has shape
+    (..., w // cpl) where cpl = 32 // bits.  bits == 32 is the identity
+    layout (one cell per lane).
+    """
+    cpl = 32 // bits
+    if cpl == 1:
+        return table.astype(jnp.uint32)
+    *lead, w = table.shape
+    if w % cpl:
+        raise ValueError(f"width {w} not a multiple of cells_per_lane {cpl}")
+    grouped = table.astype(jnp.uint32).reshape(*lead, w // cpl, cpl)
+    out = jnp.zeros((*lead, w // cpl), jnp.uint32)
+    for s in range(cpl):
+        out = out | (grouped[..., s] << jnp.uint32(s * bits))
+    return out
+
+
+def unpack_table(lanes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Inverse of `pack_table`: (..., w/cpl) uint32 lanes -> (..., w) states.
+
+    Returns uint32 values (each < 2**bits); callers cast to the cell dtype.
+    """
+    cpl = 32 // bits
+    if cpl == 1:
+        return lanes.astype(jnp.uint32)
+    mask = jnp.uint32((1 << bits) - 1)
+    parts = [(lanes >> jnp.uint32(s * bits)) & mask for s in range(cpl)]
+    return jnp.stack(parts, axis=-1).reshape(*lanes.shape[:-1],
+                                             lanes.shape[-1] * cpl)
 
 
 # The paper's three evaluated variants (§3.2), importable by name.

@@ -42,9 +42,13 @@ _ROUTE_SALT = jnp.uint32(0x60D5)
 # --------------------------------------------------------------------------
 
 def pmax_merge(sketch: sk.Sketch, axis_names) -> sk.Sketch:
-    """Max-merge local sketches across mesh axes (inside shard_map)."""
-    return sk.Sketch(table=jax.lax.pmax(sketch.table, axis_names),
-                     spec=sketch.spec)
+    """Max-merge local sketches across mesh axes (inside shard_map).
+
+    Packed storage unpacks around the collective: a lane-wise uint32 pmax
+    would take the max of 4-cell bit patterns, not of each cell."""
+    states = sk.logical_table(sketch.table, sketch.spec)
+    merged = sk.storage_table(jax.lax.pmax(states, axis_names), sketch.spec)
+    return sk.Sketch(table=merged, spec=sketch.spec)
 
 
 def lazy_update(sketch: sk.Sketch, keys: jnp.ndarray, rng: jax.Array,
@@ -63,9 +67,12 @@ def pmax_merge_window(win, axis_names):
     Every worker rotates on the same schedule (rotation is driven by the
     host step counter or a shared watermark, replicated by construction),
     so bucket b means the same time slice on every shard and the ring
-    merges bucket-wise exactly like a plain sketch."""
-    return dataclasses.replace(win,
-                               tables=jax.lax.pmax(win.tables, axis_names))
+    merges bucket-wise exactly like a plain sketch (per-cell, so packed
+    rings unpack around the collective like `pmax_merge`)."""
+    spec = win.spec.sketch
+    states = sk.logical_table(win.tables, spec)
+    merged = sk.storage_table(jax.lax.pmax(states, axis_names), spec)
+    return dataclasses.replace(win, tables=merged)
 
 
 def lazy_update_window(win, keys: jnp.ndarray, rng: jax.Array,

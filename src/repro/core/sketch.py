@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.counters import CounterSpec
+from repro.core.counters import CounterSpec, pack_table, unpack_table
 from repro.core.hashing import make_row_seeds, row_hashes
 
 _KEY_MAX = 0xFFFF_FFFF
@@ -54,12 +54,40 @@ def as_uint32_keys(keys) -> np.ndarray:
 
 @dataclasses.dataclass(frozen=True)
 class SketchSpec:
-    """Static sketch geometry: d rows x w columns of `counter` cells."""
+    """Static sketch geometry: d rows x w columns of `counter` cells.
+
+    With packed=True the table is STORED as uint32 lanes holding
+    `counter.cells_per_lane` cells each (4x uint8 / 2x uint16), so a log8
+    cell really occupies one byte end-to-end; hashing, queries and
+    estimates are unchanged — width stays the LOGICAL cell count and the
+    packed path is bit-identical to the unpacked one.
+    """
 
     width: int
     depth: int = 2
     counter: CounterSpec = CounterSpec()
     seed: int = 0x5EED
+    packed: bool = False
+
+    def __post_init__(self):
+        if self.packed and self.width % self.counter.cells_per_lane:
+            raise ValueError(
+                f"packed width {self.width} must be a multiple of "
+                f"cells_per_lane {self.counter.cells_per_lane}")
+
+    @property
+    def cells_per_lane(self) -> int:
+        """Cells per uint32 storage lane (1 unless packed)."""
+        return self.counter.cells_per_lane if self.packed else 1
+
+    @property
+    def storage_width(self) -> int:
+        """Last-axis length of the stored table (lanes, not cells)."""
+        return self.width // self.cells_per_lane
+
+    @property
+    def storage_dtype(self):
+        return jnp.uint32 if self.packed else self.counter.dtype
 
     @property
     def memory_bytes(self) -> int:
@@ -67,17 +95,26 @@ class SketchSpec:
 
     @classmethod
     def from_memory(cls, budget_bytes: int, depth: int = 2,
-                    counter: CounterSpec = CounterSpec(), seed: int = 0x5EED
-                    ) -> "SketchSpec":
+                    counter: CounterSpec = CounterSpec(), seed: int = 0x5EED,
+                    packed: bool = False) -> "SketchSpec":
         """Paper-style sizing: fixed byte budget, width derived from cell size.
 
-        Widths >= 128 are rounded down to a multiple of 128 so the table is
-        lane-aligned for the Pallas kernels (TPU vector lanes are 128 wide).
+        Widths are rounded down to a lane-aligned multiple so the table
+        fits the Pallas kernels (TPU vector lanes are 128 wide): 128 cells
+        unpacked, 128 * cells_per_lane for packed formats (a packed lane
+        row must hold a whole number of 128-lane vectors).  memory_bytes
+        stays exact — the budget is met by the rounded width, never
+        silently over-allocated.
         """
+        cpl = counter.cells_per_lane if packed else 1
+        align = 128 * cpl
         width = max(1, budget_bytes // (depth * (counter.bits // 8)))
-        if width >= 128:
-            width -= width % 128
-        return cls(width=width, depth=depth, counter=counter, seed=seed)
+        if width >= align:
+            width -= width % align
+        elif packed:
+            width = max(cpl, width - width % cpl)
+        return cls(width=width, depth=depth, counter=counter, seed=seed,
+                   packed=packed)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -99,8 +136,23 @@ class Sketch:
 
 
 def init(spec: SketchSpec) -> Sketch:
-    table = jnp.zeros((spec.depth, spec.width), dtype=spec.counter.dtype)
+    table = jnp.zeros((spec.depth, spec.storage_width),
+                      dtype=spec.storage_dtype)
     return Sketch(table=table, spec=spec)
+
+
+def logical_table(table: jnp.ndarray, spec: SketchSpec) -> jnp.ndarray:
+    """Stored table -> (..., d, width) cell states in the counter dtype."""
+    if not spec.packed:
+        return table
+    return unpack_table(table, spec.counter.bits).astype(spec.counter.dtype)
+
+
+def storage_table(table: jnp.ndarray, spec: SketchSpec) -> jnp.ndarray:
+    """Logical cell states -> the stored layout (uint32 lanes if packed)."""
+    if not spec.packed:
+        return table
+    return pack_table(table, spec.counter.bits)
 
 
 # --------------------------------------------------------------------------
@@ -111,7 +163,8 @@ def query_state(sketch: Sketch, keys: jnp.ndarray) -> jnp.ndarray:
     """min_k sk[k, h_k(e)] — raw counter state per key, shape (N,)."""
     cols = row_hashes(keys, sketch.row_seeds, sketch.spec.width)  # (d, N)
     rows = jnp.arange(sketch.spec.depth)[:, None]
-    return sketch.table[rows, cols].min(axis=0)
+    table = logical_table(sketch.table, sketch.spec)
+    return table[rows, cols].min(axis=0)
 
 
 def query(sketch: Sketch, keys: jnp.ndarray) -> jnp.ndarray:
@@ -147,7 +200,7 @@ def update_exact(sketch: Sketch, keys: jnp.ndarray, rng: jax.Array) -> Sketch:
     rows = jnp.arange(spec.depth)
     uniforms = jax.random.uniform(rng, (keys.shape[0],))
 
-    sat = jnp.asarray(counter.max_state, dtype=sketch.table.dtype)
+    sat = jnp.asarray(counter.max_state, dtype=counter.dtype)
 
     def step(table, ev):
         key, u = ev
@@ -161,8 +214,9 @@ def update_exact(sketch: Sketch, keys: jnp.ndarray, rng: jax.Array) -> Sketch:
         new = jnp.where(bump, cur + 1, cur).astype(table.dtype)
         return table.at[rows, cols].set(new), None
 
-    table, _ = jax.lax.scan(step, sketch.table, (keys, uniforms))
-    return Sketch(table=table, spec=spec)
+    table, _ = jax.lax.scan(step, logical_table(sketch.table, spec),
+                            (keys, uniforms))
+    return Sketch(table=storage_table(table, spec), spec=spec)
 
 
 # --------------------------------------------------------------------------
@@ -223,7 +277,8 @@ def update_batched(sketch: Sketch, keys: jnp.ndarray, rng: jax.Array,
 
     cols = row_hashes(sk_keys, sketch.row_seeds, spec.width)     # (d, N)
     rows = jnp.arange(spec.depth)[:, None]
-    cur = sketch.table[rows, cols]                               # (d, N)
+    tbl = logical_table(sketch.table, spec)
+    cur = tbl[rows, cols]                                        # (d, N)
     cmin = cur.min(axis=0)                                       # (N,)
     if damp_alpha > 0.0 and spec.depth >= 2:
         srt = jnp.sort(cur, axis=0)
@@ -236,8 +291,8 @@ def update_batched(sketch: Sketch, keys: jnp.ndarray, rng: jax.Array,
     # masked rows (mult == 0) write state 0 == a no-op under max
     write = jnp.where(mult > 0, new_state, jnp.zeros_like(new_state))
     write = jnp.broadcast_to(write[None, :], (spec.depth, n))
-    table = sketch.table.at[rows, cols].max(write)
-    return Sketch(table=table, spec=spec)
+    tbl = tbl.at[rows, cols].max(write)
+    return Sketch(table=storage_table(tbl, spec), spec=spec)
 
 
 def update(sketch: Sketch, keys: jnp.ndarray, rng: jax.Array,
@@ -268,11 +323,16 @@ def merge(a: Sketch, b: Sketch, mode: str = "max", rng: jax.Array | None = None
     if a.spec != b.spec:
         raise ValueError("cannot merge sketches with different specs")
     c = a.spec.counter
+    # cell-wise, not lane-wise: a uint32 max over packed lanes is NOT the
+    # per-cell max (a high sub-cell shadows the low ones), so both modes
+    # operate on the logical table and repack.
+    ta = logical_table(a.table, a.spec)
+    tb = logical_table(b.table, b.spec)
     if mode == "max":
-        table = jnp.maximum(a.table, b.table)
+        table = jnp.maximum(ta, tb)
     elif mode == "estimate_sum":
-        v = c.decode(a.table) + c.decode(b.table)
-        table = c.reencode_stochastic(v, rng).astype(a.table.dtype)
+        v = c.decode(ta) + c.decode(tb)
+        table = c.reencode_stochastic(v, rng).astype(ta.dtype)
     else:
         raise ValueError(f"unknown merge mode {mode!r}")
-    return Sketch(table=table, spec=a.spec)
+    return Sketch(table=storage_table(table, a.spec), spec=a.spec)

@@ -147,7 +147,8 @@ def query(sketch: sk.Sketch, keys: jnp.ndarray) -> jnp.ndarray:
         return sk.query(sketch, keys)
     return query_pallas(sketch.table, keys, seeds=_seeds_tuple(sketch.spec),
                         width=sketch.spec.width, counter=sketch.spec.counter,
-                        interpret=_interpret())
+                        interpret=_interpret(),
+                        cpl=sketch.spec.cells_per_lane)
 
 
 def query_many(tables: jnp.ndarray, spec: sk.SketchSpec, keys: jnp.ndarray
@@ -172,7 +173,8 @@ def query_many(tables: jnp.ndarray, spec: sk.SketchSpec, keys: jnp.ndarray
         return sk.query_stacked(tables, spec, keys)
     return fused_query_pallas(tables, keys, seeds=_seeds_tuple(spec),
                               width=spec.width, counter=spec.counter,
-                              interpret=_interpret())
+                              interpret=_interpret(),
+                              cpl=spec.cells_per_lane)
 
 
 def window_query_tables(tables: jnp.ndarray, spec: sk.SketchSpec,
@@ -204,11 +206,12 @@ def window_query_tables(tables: jnp.ndarray, spec: sk.SketchSpec,
     if engine == "jnp":
         return ref.window_query_stacked_ref(
             tables[None], keys[None], weights[None], _row_seeds_array(spec),
-            spec.counter, mode=mode)[0]
+            spec.counter, mode=mode, cpl=spec.cells_per_lane)[0]
     return window_query_pallas(tables, keys, weights,
                                seeds=_seeds_tuple(spec), width=spec.width,
                                counter=spec.counter, mode=mode,
-                               interpret=_interpret())
+                               interpret=_interpret(),
+                               cpl=spec.cells_per_lane)
 
 
 def update(sketch: sk.Sketch, keys: jnp.ndarray, rng: jax.Array) -> sk.Sketch:
@@ -222,7 +225,8 @@ def update(sketch: sk.Sketch, keys: jnp.ndarray, rng: jax.Array) -> sk.Sketch:
                           seeds=_seeds_tuple(sketch.spec),
                           width=sketch.spec.width,
                           counter=sketch.spec.counter,
-                          interpret=_interpret())
+                          interpret=_interpret(),
+                          cpl=sketch.spec.cells_per_lane)
     return sk.Sketch(table=table, spec=sketch.spec)
 
 
@@ -232,7 +236,7 @@ def _update_xla_jit(table, keys, rng, *, spec):
     uniforms = jax.random.uniform(rng, sorted_keys.shape)
     return ref.update_chunked_ref(table, sorted_keys, mult, uniforms,
                                   _row_seeds_array(spec), spec.counter,
-                                  CHUNK)
+                                  CHUNK, cpl=spec.cells_per_lane)
 
 
 def update_xla(sketch: sk.Sketch, keys: jnp.ndarray, rng: jax.Array
@@ -270,7 +274,8 @@ def _update_many_jit(tables, keys, weights, rng, *, spec, interpret):
     uniforms = jax.random.uniform(rng, sorted_keys.shape)
     return fused_update_pallas(tables, sorted_keys, mult, uniforms,
                                seeds=_seeds_tuple(spec), width=spec.width,
-                               counter=spec.counter, interpret=interpret)
+                               counter=spec.counter, interpret=interpret,
+                               cpl=spec.cells_per_lane)
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "total", "interpret"))
@@ -282,7 +287,8 @@ def _update_gathered_jit(tables, keys, weights, rng, rows, *, spec, total,
     uniforms = _parity_uniforms(rng, keys.shape[1], total, rows)
     return fused_update_pallas(tables, sorted_keys, mult, uniforms,
                                seeds=_seeds_tuple(spec), width=spec.width,
-                               counter=spec.counter, interpret=interpret)
+                               counter=spec.counter, interpret=interpret,
+                               cpl=spec.cells_per_lane)
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "interpret"))
@@ -292,7 +298,8 @@ def _update_rows_jit(tables, keys, weights, rng, rows, *, spec, interpret):
     return fused_update_rows_pallas(tables, sorted_keys, mult, uniforms,
                                     rows, seeds=_seeds_tuple(spec),
                                     width=spec.width, counter=spec.counter,
-                                    interpret=interpret)
+                                    interpret=interpret,
+                                    cpl=spec.cells_per_lane)
 
 
 def update_many(tables: jnp.ndarray, spec: sk.SketchSpec, keys: jnp.ndarray,
@@ -383,7 +390,8 @@ def _update_score_rows_kernel_jit(tables, keys, weights, rng, rows, cand, *,
     return fused_update_score_pallas(tables, sorted_keys, mult, uniforms,
                                      cand, rows, seeds=_seeds_tuple(spec),
                                      width=spec.width, counter=spec.counter,
-                                     interpret=interpret)
+                                     interpret=interpret,
+                                     cpl=spec.cells_per_lane)
 
 
 @functools.partial(jax.jit, static_argnames=("spec",))
@@ -393,7 +401,8 @@ def _update_score_rows_xla_jit(tables, keys, weights, rng, rows, cand, *,
     uniforms = _parity_uniforms(rng, keys.shape[1], tables.shape[0], rows)
     return ref.update_score_rows_ref(tables, sorted_keys, mult, uniforms,
                                      rows, cand, _row_seeds_array(spec),
-                                     spec.counter, CHUNK)
+                                     spec.counter, CHUNK,
+                                     cpl=spec.cells_per_lane)
 
 
 def update_score_rows(tables: jnp.ndarray, spec: sk.SketchSpec,
@@ -442,7 +451,7 @@ def update_score_rows(tables: jnp.ndarray, spec: sk.SketchSpec,
 def _window_query_stacked_xla_jit(tables, keys, weights, *, spec, mode):
     return ref.window_query_stacked_ref(tables, keys, weights,
                                         _row_seeds_array(spec), spec.counter,
-                                        mode=mode)
+                                        mode=mode, cpl=spec.cells_per_lane)
 
 
 def window_query_stacked(tables: jnp.ndarray, spec: sk.SketchSpec,
@@ -490,7 +499,8 @@ def window_query_stacked(tables: jnp.ndarray, spec: sk.SketchSpec,
     return window_query_stacked_pallas(tables, keys, weights,
                                        seeds=_seeds_tuple(spec),
                                        width=spec.width, counter=spec.counter,
-                                       mode=mode, interpret=interpret)
+                                       mode=mode, interpret=interpret,
+                                       cpl=spec.cells_per_lane)
 
 
 # --------------------------------------------------------------------------

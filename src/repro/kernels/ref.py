@@ -20,13 +20,20 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.counters import CounterSpec
+from repro.core.counters import CounterSpec, pack_table, unpack_table
 from repro.core.hashing import row_hashes
 
 
 def query_ref(table: jnp.ndarray, keys: jnp.ndarray, row_seeds: jnp.ndarray,
-              counter: CounterSpec) -> jnp.ndarray:
-    """min over rows + Morris decode; returns float32 estimates (N,)."""
+              counter: CounterSpec, cpl: int = 1) -> jnp.ndarray:
+    """min over rows + Morris decode; returns float32 estimates (N,).
+
+    With cpl > 1 `table`'s last axis is packed uint32 lanes (cpl cells
+    each); the unpack yields the same uint32 state VALUES the unpacked
+    path reads, so the estimates are bit-identical.
+    """
+    if cpl > 1:
+        table = unpack_table(table, 32 // cpl)
     d, w = table.shape
     cols = row_hashes(keys, row_seeds, w)                 # (d, N)
     vals = table[jnp.arange(d)[:, None], cols]            # (d, N)
@@ -35,12 +42,15 @@ def query_ref(table: jnp.ndarray, keys: jnp.ndarray, row_seeds: jnp.ndarray,
 
 def update_ref(table: jnp.ndarray, keys: jnp.ndarray, mult: jnp.ndarray,
                uniforms: jnp.ndarray, row_seeds: jnp.ndarray,
-               counter: CounterSpec) -> jnp.ndarray:
+               counter: CounterSpec, cpl: int = 1) -> jnp.ndarray:
     """Batched conservative update.
 
     keys/mult/uniforms: (N,); entries with mult == 0 are no-ops (this is how
-    padding and intra-batch duplicates are expressed).  Returns new table.
+    padding and intra-batch duplicates are expressed).  Returns new table
+    (packed back into lanes when cpl > 1).
     """
+    if cpl > 1:
+        table = unpack_table(table, 32 // cpl)
     d, w = table.shape
     cols = row_hashes(keys, row_seeds, w)                 # (d, N)
     rows = jnp.arange(d)[:, None]
@@ -48,13 +58,15 @@ def update_ref(table: jnp.ndarray, keys: jnp.ndarray, mult: jnp.ndarray,
     cmin = cur.min(axis=0)
     new_state = counter.nfold(cmin, mult, uniforms)
     write = jnp.where(mult > 0, new_state, jnp.zeros_like(new_state))
-    return table.at[rows, cols].max(jnp.broadcast_to(write[None], (d, keys.shape[0])))
+    table = table.at[rows, cols].max(
+        jnp.broadcast_to(write[None], (d, keys.shape[0])))
+    return pack_table(table, 32 // cpl) if cpl > 1 else table
 
 
 def update_chunked_ref(table: jnp.ndarray, keys: jnp.ndarray,
                        mult: jnp.ndarray, uniforms: jnp.ndarray,
                        row_seeds: jnp.ndarray, counter: CounterSpec,
-                       chunk: int) -> jnp.ndarray:
+                       chunk: int, cpl: int = 1) -> jnp.ndarray:
     """`update_ref` applied in `chunk`-sized slices, sequentially.
 
     Mirrors the kernels' grid contract: each chunk's conservative
@@ -62,7 +74,11 @@ def update_chunked_ref(table: jnp.ndarray, keys: jnp.ndarray,
     on a cell across a chunk boundary read different minima than a
     one-shot update would), so this — not a single `update_ref` over the
     whole batch — is the bit-identical oracle for multi-chunk launches.
+    Packed tables unpack ONCE here, sweep the chunks on cell states, and
+    repack once at the end.
     """
+    if cpl > 1:
+        table = unpack_table(table, 32 // cpl)
     n = keys.shape[0]
     pad = -n % chunk
     keys = jnp.pad(keys, (0, pad))
@@ -72,14 +88,14 @@ def update_chunked_ref(table: jnp.ndarray, keys: jnp.ndarray,
         sl = slice(i * chunk, (i + 1) * chunk)
         table = update_ref(table, keys[sl], mult[sl], uniforms[sl],
                            row_seeds, counter)
-    return table
+    return pack_table(table, 32 // cpl) if cpl > 1 else table
 
 
 def update_score_rows_ref(tables: jnp.ndarray, keys: jnp.ndarray,
                           mult: jnp.ndarray, uniforms: jnp.ndarray,
                           rows: jnp.ndarray, cand: jnp.ndarray,
                           row_seeds: jnp.ndarray, counter: CounterSpec,
-                          chunk: int):
+                          chunk: int, cpl: int = 1):
     """XLA engine of `fused_update_score_pallas`: active-row update, then
     candidate re-query against the just-updated rows.
 
@@ -88,26 +104,35 @@ def update_score_rows_ref(tables: jnp.ndarray, keys: jnp.ndarray,
     estimates (R, M)) — bit-identical to the single-launch kernel epoch
     (the update runs chunk-sequentially per row; the scores read the new
     state, exactly as the kernel's score phase reads the aliased block).
+    Only the R gathered rows unpack/repack when cpl > 1.
     """
+    gathered = tables[rows]
+    if cpl > 1:
+        gathered = unpack_table(gathered, 32 // cpl)
+
     def one(table, k, m, u):
         return update_chunked_ref(table, k, m, u, row_seeds, counter, chunk)
 
-    new_rows = jax.vmap(one)(tables[rows], keys, mult, uniforms)
+    new_rows = jax.vmap(one)(gathered, keys, mult, uniforms)
     est = jax.vmap(lambda t, c: query_ref(t, c, row_seeds, counter))(
         new_rows, cand)
+    if cpl > 1:
+        new_rows = pack_table(new_rows, 32 // cpl)
     return tables.at[rows].set(new_rows), est
 
 
 def window_query_stacked_ref(tables: jnp.ndarray, keys: jnp.ndarray,
                              weights: jnp.ndarray, row_seeds: jnp.ndarray,
-                             counter: CounterSpec, mode: str = "sum"
-                             ) -> jnp.ndarray:
+                             counter: CounterSpec, mode: str = "sum",
+                             cpl: int = 1) -> jnp.ndarray:
     """XLA engine of `window_query_stacked_pallas`: R bucket rings reduced
     bucket-by-bucket IN ORDER (b ascending), matching the kernel's
     innermost-bucket accumulation bit for bit.
 
     tables (R, B, d, w); keys (R, N); weights (R, B).  Returns (R, N).
     """
+    if cpl > 1:
+        tables = unpack_table(tables, 32 // cpl)
     b = tables.shape[1]
 
     def one(ring, k, w):

@@ -70,23 +70,45 @@ def _mix32(x):
     return x
 
 
-def _table_min(table_ref, keys, *, seeds, width, t=None, pre=None):
+def _hash_cols(keys, seed, width):
+    """Logical column index per key: hashing always runs on the LOGICAL
+    width, so packed and unpacked tables address the same cells with the
+    same seeds."""
+    return (_mix32(keys ^ jnp.uint32(seed)) % jnp.uint32(width)).astype(jnp.int32)
+
+
+def _unpack_cells(lane_vals, sub, cpl):
+    """Packed uint32 lanes -> uint32 cell states at sub-slot `sub`."""
+    bits = 32 // cpl
+    shift = (sub * bits).astype(jnp.uint32)
+    return (lane_vals >> shift) & jnp.uint32((1 << bits) - 1)
+
+
+def _table_min(table_ref, keys, *, seeds, width, t=None, pre=None, cpl=1):
     """min over rows of the hashed cells: the shared read of every query
     kernel.  table_ref block is (d, w), (1, d, w) with leading index t, or
     any deeper nesting via the explicit `pre` index prefix (e.g. (0, 0) for
-    a (1, 1, d, w) ring block)."""
+    a (1, 1, d, w) ring block).  With cpl > 1 the block's last axis is
+    packed uint32 lanes (cpl cells each): the gather lands on lane
+    cols // cpl and the cell state is shift/masked out of the lane, so the
+    min runs on the same uint32 cell VALUES the unpacked path reads."""
     if pre is None:
         pre = () if t is None else (t,)
     cmin = None
     for k, seed in enumerate(seeds):
-        cols = (_mix32(keys ^ jnp.uint32(seed)) % jnp.uint32(width)).astype(jnp.int32)
+        cols = _hash_cols(keys, seed, width)
         row = table_ref[(*pre, k, slice(None))]
-        vals = row[cols.reshape(-1)].reshape(cols.shape)  # rank-1 VMEM gather
+        if cpl == 1:
+            vals = row[cols.reshape(-1)].reshape(cols.shape)  # rank-1 gather
+        else:
+            lanes = row[(cols // cpl).reshape(-1)].reshape(cols.shape)
+            vals = _unpack_cells(lanes, cols % cpl, cpl)
         cmin = vals if cmin is None else jnp.minimum(cmin, vals)
     return cmin
 
 
-def _fused_query_kernel(tables_ref, keys_ref, out_ref, *, seeds, width, counter):
+def _fused_query_kernel(tables_ref, keys_ref, out_ref, *, seeds, width,
+                        counter, cpl=1):
     """One (tenant, key-chunk) grid step of the multi-tenant query.
 
     Blocks: tables (1, d, w) — tenant t's table, VMEM-resident across that
@@ -95,12 +117,13 @@ def _fused_query_kernel(tables_ref, keys_ref, out_ref, *, seeds, width, counter)
     launch instead of T (the same amortization as `_fused_update_kernel`).
     """
     keys = keys_ref[0].astype(jnp.uint32)                # (8, 128)
-    cmin = _table_min(tables_ref, keys, seeds=seeds, width=width, t=0)
+    cmin = _table_min(tables_ref, keys, seeds=seeds, width=width, t=0,
+                      cpl=cpl)
     out_ref[0] = counter.decode(cmin)
 
 
 def _window_query_kernel(tables_ref, keys_ref, w_ref, out_ref, *, seeds,
-                         width, counter, mode):
+                         width, counter, mode, cpl=1):
     """One (key-chunk, bucket) grid step of the windowed query.
 
     The bucket ring is the leading axis of `tables`; the grid's *last* axis
@@ -113,7 +136,8 @@ def _window_query_kernel(tables_ref, keys_ref, w_ref, out_ref, *, seeds,
     """
     b = pl.program_id(1)
     keys = keys_ref[...].astype(jnp.uint32)              # (8, 128)
-    cmin = _table_min(tables_ref, keys, seeds=seeds, width=width, t=0)
+    cmin = _table_min(tables_ref, keys, seeds=seeds, width=width, t=0,
+                      cpl=cpl)
     est = counter.decode(cmin) * w_ref[0, 0]
 
     @pl.when(b == 0)
@@ -129,7 +153,7 @@ def _window_query_kernel(tables_ref, keys_ref, w_ref, out_ref, *, seeds,
 
 
 def _fused_update_kernel(tables_ref, keys_ref, mult_ref, unif_ref, out_ref, *,
-                         seeds, width, counter):
+                         seeds, width, counter, cpl=1):
     """One (tenant, key-chunk) grid step of the multi-tenant ingest.
 
     Blocks: tables/out (1, d, w) — tenant t's table, VMEM-resident across
@@ -138,6 +162,13 @@ def _fused_update_kernel(tables_ref, keys_ref, mult_ref, unif_ref, out_ref, *,
     aliased output block stays resident and each chunk sees the previous
     chunk's conservative writes — the same sequential-grid contract as
     `_update_kernel`, now amortized over T tenants in ONE launch.
+
+    With cpl > 1 the table block is packed uint32 lanes: the read
+    shift/masks cell states out of the gathered lanes, nfold runs on the
+    same uint32 state VALUES, and the conservative write becomes a
+    per-sub-slot masked scatter-max followed by a shift/OR repack — cell
+    for cell the max the unpacked path lands (mult == 0 entries still
+    write state 0, a no-op under max).
     """
     keys = keys_ref[0].astype(jnp.uint32)                # (8, 128)
     mult = mult_ref[0]
@@ -145,16 +176,35 @@ def _fused_update_kernel(tables_ref, keys_ref, mult_ref, unif_ref, out_ref, *,
     all_cols = []
     cmin = None
     for k, seed in enumerate(seeds):
-        cols = (_mix32(keys ^ jnp.uint32(seed)) % jnp.uint32(width)).astype(jnp.int32)
+        cols = _hash_cols(keys, seed, width)
         all_cols.append(cols.reshape(-1))
         row = out_ref[0, k, :]  # aliased output: sees this tenant's prior chunks
-        vals = row[cols.reshape(-1)].reshape(cols.shape)
+        if cpl == 1:
+            vals = row[cols.reshape(-1)].reshape(cols.shape)
+        else:
+            lanes = row[(cols // cpl).reshape(-1)].reshape(cols.shape)
+            vals = _unpack_cells(lanes, cols % cpl, cpl)
         cmin = vals if cmin is None else jnp.minimum(cmin, vals)
     new_state = counter.nfold(cmin, mult, unif)
     write = jnp.where(mult > 0, new_state, jnp.zeros_like(new_state)).reshape(-1)
+    if cpl == 1:
+        for k in range(len(seeds)):
+            row = out_ref[0, k, :]
+            out_ref[0, k, :] = row.at[all_cols[k]].max(write)
+        return
+    bits = 32 // cpl
+    mask = jnp.uint32((1 << bits) - 1)
     for k in range(len(seeds)):
+        lane_idx = all_cols[k] // cpl
+        sub_idx = all_cols[k] % cpl
         row = out_ref[0, k, :]
-        out_ref[0, k, :] = row.at[all_cols[k]].max(write)
+        new_row = jnp.zeros_like(row)
+        for s in range(cpl):
+            sub_state = (row >> jnp.uint32(s * bits)) & mask
+            w_s = jnp.where(sub_idx == s, write, jnp.uint32(0))
+            sub_state = sub_state.at[lane_idx].max(w_s)
+            new_row = new_row | (sub_state << jnp.uint32(s * bits))
+        out_ref[0, k, :] = new_row
 
 
 def _pad_tiles(x, pad_value):
@@ -165,9 +215,10 @@ def _pad_tiles(x, pad_value):
     return x.reshape(padded // LANES, LANES), padded
 
 
-@functools.partial(jax.jit, static_argnames=("width", "counter", "seeds", "interpret"))
+@functools.partial(jax.jit, static_argnames=("width", "counter", "seeds",
+                                             "interpret", "cpl"))
 def query_pallas(table, keys, *, seeds: tuple, width: int,
-                 counter: CounterSpec, interpret: bool = True):
+                 counter: CounterSpec, interpret: bool = True, cpl: int = 1):
     """Fused sketch query. table (d, w); keys (N,) -> float32 (N,).
 
     The single-tenant case IS the fused kernel at T=1 (one source of truth
@@ -175,12 +226,13 @@ def query_pallas(table, keys, *, seeds: tuple, width: int,
     """
     return fused_query_pallas(table[None], keys[None], seeds=seeds,
                               width=width, counter=counter,
-                              interpret=interpret)[0]
+                              interpret=interpret, cpl=cpl)[0]
 
 
-@functools.partial(jax.jit, static_argnames=("width", "counter", "seeds", "interpret"))
+@functools.partial(jax.jit, static_argnames=("width", "counter", "seeds",
+                                             "interpret", "cpl"))
 def update_pallas(table, keys, mult, uniforms, *, seeds: tuple, width: int,
-                  counter: CounterSpec, interpret: bool = True):
+                  counter: CounterSpec, interpret: bool = True, cpl: int = 1):
     """Batched conservative update. Entries with mult == 0 are no-ops.
 
     table (d, w); keys/mult/uniforms (N,).  Returns the new table (the input
@@ -189,7 +241,8 @@ def update_pallas(table, keys, mult, uniforms, *, seeds: tuple, width: int,
     for the conservative-update logic)."""
     return fused_update_pallas(table[None], keys[None], mult[None],
                                uniforms[None], seeds=seeds, width=width,
-                               counter=counter, interpret=interpret)[0]
+                               counter=counter, interpret=interpret,
+                               cpl=cpl)[0]
 
 
 def _pad_tiles_2d(x, pad_value):
@@ -201,10 +254,11 @@ def _pad_tiles_2d(x, pad_value):
     return x.reshape(t, padded // LANES, LANES), padded
 
 
-@functools.partial(jax.jit, static_argnames=("width", "counter", "seeds", "interpret"))
+@functools.partial(jax.jit, static_argnames=("width", "counter", "seeds",
+                                             "interpret", "cpl"))
 def fused_update_pallas(tables, keys, mult, uniforms, *, seeds: tuple,
                         width: int, counter: CounterSpec,
-                        interpret: bool = True):
+                        interpret: bool = True, cpl: int = 1):
     """Multi-tenant batched conservative update in ONE kernel launch.
 
     tables (T, d, w): stacked per-tenant sketch tables (identical spec);
@@ -213,32 +267,37 @@ def fused_update_pallas(tables, keys, mult, uniforms, *, seeds: tuple,
     Grids over (tenant, key-chunk) with tenant t's (d, w) table the
     VMEM-resident block, so T tenants cost one launch instead of T.
     Returns the new (T, d, w) tables (input buffer donated/aliased).
+
+    With cpl > 1 the stored last axis is width // cpl uint32 lanes (cpl
+    packed cells each); `width` stays the LOGICAL cell count.
     """
-    t, d, _ = tables.shape
+    t, d, sw = tables.shape
     key_t, padded = _pad_tiles_2d(keys.astype(jnp.uint32), 0)
     mult_t, _ = _pad_tiles_2d(mult.astype(jnp.float32), 0.0)
     unif_t, _ = _pad_tiles_2d(uniforms.astype(jnp.float32), 1.0)
     chunks = padded // CHUNK
     return pl.pallas_call(
         functools.partial(_fused_update_kernel, seeds=seeds, width=width,
-                          counter=counter),
+                          counter=counter, cpl=cpl),
         grid=(t, chunks),
         in_specs=[
-            pl.BlockSpec((1, d, width), lambda ti, ci: (ti, 0, 0)),
+            pl.BlockSpec((1, d, sw), lambda ti, ci: (ti, 0, 0)),
             pl.BlockSpec((1, SUBLANES, LANES), lambda ti, ci: (ti, ci, 0)),
             pl.BlockSpec((1, SUBLANES, LANES), lambda ti, ci: (ti, ci, 0)),
             pl.BlockSpec((1, SUBLANES, LANES), lambda ti, ci: (ti, ci, 0)),
         ],
-        out_specs=pl.BlockSpec((1, d, width), lambda ti, ci: (ti, 0, 0)),
+        out_specs=pl.BlockSpec((1, d, sw), lambda ti, ci: (ti, 0, 0)),
         out_shape=jax.ShapeDtypeStruct(tables.shape, tables.dtype),
         input_output_aliases={0: 0},
         interpret=interpret,
     )(tables, key_t, mult_t, unif_t)
 
 
-@functools.partial(jax.jit, static_argnames=("width", "counter", "seeds", "interpret"))
+@functools.partial(jax.jit, static_argnames=("width", "counter", "seeds",
+                                             "interpret", "cpl"))
 def fused_query_pallas(tables, keys, *, seeds: tuple, width: int,
-                       counter: CounterSpec, interpret: bool = True):
+                       counter: CounterSpec, interpret: bool = True,
+                       cpl: int = 1):
     """Multi-tenant batched query in ONE kernel launch.
 
     tables (T, d, w): stacked per-tenant sketch tables (identical spec);
@@ -246,16 +305,16 @@ def fused_query_pallas(tables, keys, *, seeds: tuple, width: int,
     with tenant t's (d, w) table the VMEM-resident block.  Returns float32
     (T, N) estimates, bit-identical to T per-tenant `query_pallas` calls.
     """
-    t, d, _ = tables.shape
+    t, d, sw = tables.shape
     n = keys.shape[1]
     tiles, padded = _pad_tiles_2d(keys.astype(jnp.uint32), 0)
     chunks = padded // CHUNK
     out = pl.pallas_call(
         functools.partial(_fused_query_kernel, seeds=seeds, width=width,
-                          counter=counter),
+                          counter=counter, cpl=cpl),
         grid=(t, chunks),
         in_specs=[
-            pl.BlockSpec((1, d, width), lambda ti, ci: (ti, 0, 0)),
+            pl.BlockSpec((1, d, sw), lambda ti, ci: (ti, 0, 0)),
             pl.BlockSpec((1, SUBLANES, LANES), lambda ti, ci: (ti, ci, 0)),
         ],
         out_specs=pl.BlockSpec((1, SUBLANES, LANES), lambda ti, ci: (ti, ci, 0)),
@@ -266,7 +325,8 @@ def fused_query_pallas(tables, keys, *, seeds: tuple, width: int,
 
 
 def _fused_update_rows_kernel(meta_ref, tables_ref, keys_ref, mult_ref,
-                              unif_ref, out_ref, *, seeds, width, counter):
+                              unif_ref, out_ref, *, seeds, width, counter,
+                              cpl=1):
     """One (active-row, key-chunk) grid step of the active-row ingest.
 
     Identical body to `_fused_update_kernel`: the (R,) row map rides in
@@ -276,14 +336,14 @@ def _fused_update_rows_kernel(meta_ref, tables_ref, keys_ref, mult_ref,
     """
     del meta_ref
     _fused_update_kernel(tables_ref, keys_ref, mult_ref, unif_ref, out_ref,
-                         seeds=seeds, width=width, counter=counter)
+                         seeds=seeds, width=width, counter=counter, cpl=cpl)
 
 
 @functools.partial(jax.jit, static_argnames=("width", "counter", "seeds",
-                                             "interpret"))
+                                             "interpret", "cpl"))
 def fused_update_rows_pallas(tables, keys, mult, uniforms, rows, *,
                              seeds: tuple, width: int, counter: CounterSpec,
-                             interpret: bool = True):
+                             interpret: bool = True, cpl: int = 1):
     """Active-row multi-tenant update: grid (R, chunk) instead of (T, chunk).
 
     tables (T, d, w): the WHOLE plane's stacked tables; keys/mult/uniforms
@@ -299,7 +359,7 @@ def fused_update_rows_pallas(tables, keys, mult, uniforms, rows, *,
     over the full grid with the unlisted rows' mult zeroed.
     """
     r = keys.shape[0]
-    _, d, _ = tables.shape
+    _, d, sw = tables.shape
     key_t, padded = _pad_tiles_2d(keys.astype(jnp.uint32), 0)
     mult_t, _ = _pad_tiles_2d(mult.astype(jnp.float32), 0.0)
     unif_t, _ = _pad_tiles_2d(uniforms.astype(jnp.float32), 1.0)
@@ -308,17 +368,17 @@ def fused_update_rows_pallas(tables, keys, mult, uniforms, rows, *,
         num_scalar_prefetch=1,
         grid=(r, chunks),
         in_specs=[
-            pl.BlockSpec((1, d, width), lambda ri, ci, meta: (meta[ri], 0, 0)),
+            pl.BlockSpec((1, d, sw), lambda ri, ci, meta: (meta[ri], 0, 0)),
             pl.BlockSpec((1, SUBLANES, LANES), lambda ri, ci, meta: (ri, ci, 0)),
             pl.BlockSpec((1, SUBLANES, LANES), lambda ri, ci, meta: (ri, ci, 0)),
             pl.BlockSpec((1, SUBLANES, LANES), lambda ri, ci, meta: (ri, ci, 0)),
         ],
-        out_specs=pl.BlockSpec((1, d, width),
+        out_specs=pl.BlockSpec((1, d, sw),
                                lambda ri, ci, meta: (meta[ri], 0, 0)),
     )
     return pl.pallas_call(
         functools.partial(_fused_update_rows_kernel, seeds=seeds, width=width,
-                          counter=counter),
+                          counter=counter, cpl=cpl),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(tables.shape, tables.dtype),
         input_output_aliases={1: 0},  # tables aliased past the meta scalars
@@ -328,7 +388,7 @@ def fused_update_rows_pallas(tables, keys, mult, uniforms, rows, *,
 
 def _fused_update_score_kernel(meta_ref, tables_ref, keys_ref, mult_ref,
                                unif_ref, cand_ref, out_ref, est_ref, *,
-                               seeds, width, counter, upd_chunks):
+                               seeds, width, counter, upd_chunks, cpl=1):
     """One (active-row, chunk) grid step of the single-launch flush epoch.
 
     The chunk axis is split in two phases: steps 0..upd_chunks-1 run the
@@ -347,20 +407,21 @@ def _fused_update_score_kernel(meta_ref, tables_ref, keys_ref, mult_ref,
     def _update():
         _fused_update_kernel(tables_ref, keys_ref, mult_ref, unif_ref,
                              out_ref, seeds=seeds, width=width,
-                             counter=counter)
+                             counter=counter, cpl=cpl)
 
     @pl.when(ci >= upd_chunks)
     def _score():
         keys = cand_ref[0].astype(jnp.uint32)            # (8, 128)
-        cmin = _table_min(out_ref, keys, seeds=seeds, width=width, t=0)
+        cmin = _table_min(out_ref, keys, seeds=seeds, width=width, t=0,
+                          cpl=cpl)
         est_ref[0] = counter.decode(cmin)
 
 
 @functools.partial(jax.jit, static_argnames=("width", "counter", "seeds",
-                                             "interpret"))
+                                             "interpret", "cpl"))
 def fused_update_score_pallas(tables, keys, mult, uniforms, cand, rows, *,
                               seeds: tuple, width: int, counter: CounterSpec,
-                              interpret: bool = True):
+                              interpret: bool = True, cpl: int = 1):
     """Single-launch flush epoch: conservative update THEN candidate
     re-score, while each active row's (d, w) table block is VMEM-resident.
 
@@ -377,7 +438,7 @@ def fused_update_score_pallas(tables, keys, mult, uniforms, cand, rows, *,
     second table fetch.  Returns (new_tables (T, d, w), est (R, M)).
     """
     r = keys.shape[0]
-    _, d, _ = tables.shape
+    _, d, sw = tables.shape
     m = cand.shape[1]
     key_t, padded = _pad_tiles_2d(keys.astype(jnp.uint32), 0)
     mult_t, _ = _pad_tiles_2d(mult.astype(jnp.float32), 0.0)
@@ -389,7 +450,7 @@ def fused_update_score_pallas(tables, keys, mult, uniforms, cand, rows, *,
         num_scalar_prefetch=1,
         grid=(r, uc + qc),
         in_specs=[
-            pl.BlockSpec((1, d, width), lambda ri, ci, meta: (meta[ri], 0, 0)),
+            pl.BlockSpec((1, d, sw), lambda ri, ci, meta: (meta[ri], 0, 0)),
             pl.BlockSpec((1, SUBLANES, LANES),
                          lambda ri, ci, meta: (ri, jnp.minimum(ci, uc - 1), 0)),
             pl.BlockSpec((1, SUBLANES, LANES),
@@ -400,14 +461,15 @@ def fused_update_score_pallas(tables, keys, mult, uniforms, cand, rows, *,
                          lambda ri, ci, meta: (ri, jnp.maximum(ci - uc, 0), 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, d, width), lambda ri, ci, meta: (meta[ri], 0, 0)),
+            pl.BlockSpec((1, d, sw), lambda ri, ci, meta: (meta[ri], 0, 0)),
             pl.BlockSpec((1, SUBLANES, LANES),
                          lambda ri, ci, meta: (ri, jnp.maximum(ci - uc, 0), 0)),
         ],
     )
     new_tables, est = pl.pallas_call(
         functools.partial(_fused_update_score_kernel, seeds=seeds,
-                          width=width, counter=counter, upd_chunks=uc),
+                          width=width, counter=counter, upd_chunks=uc,
+                          cpl=cpl),
         grid_spec=grid_spec,
         out_shape=(jax.ShapeDtypeStruct(tables.shape, tables.dtype),
                    jax.ShapeDtypeStruct(cand_t.shape, jnp.float32)),
@@ -552,10 +614,10 @@ def queue_append_dense_pallas(queue, keys, meta, *, interpret: bool = True,
 
 @functools.partial(jax.jit,
                    static_argnames=("width", "counter", "seeds", "mode",
-                                    "interpret"))
+                                    "interpret", "cpl"))
 def window_query_pallas(tables, keys, weights, *, seeds: tuple, width: int,
                         counter: CounterSpec, mode: str = "sum",
-                        interpret: bool = True):
+                        interpret: bool = True, cpl: int = 1):
     """Windowed query with the in-kernel bucket reduction.
 
     tables (B, d, w): the bucket ring (leading axis = bucket); keys (N,);
@@ -568,17 +630,17 @@ def window_query_pallas(tables, keys, weights, *, seeds: tuple, width: int,
     """
     if mode not in ("sum", "max"):
         raise ValueError(f"unknown window query mode {mode!r}")
-    b, d, _ = tables.shape
+    b, d, sw = tables.shape
     n = keys.shape[0]
     tiles, padded = _pad_tiles(keys.astype(jnp.uint32), 0)
     w_tiles = jnp.broadcast_to(weights.astype(jnp.float32)[:, None],
                                (b, LANES))
     out = pl.pallas_call(
         functools.partial(_window_query_kernel, seeds=seeds, width=width,
-                          counter=counter, mode=mode),
+                          counter=counter, mode=mode, cpl=cpl),
         grid=(padded // CHUNK, b),
         in_specs=[
-            pl.BlockSpec((1, d, width), lambda ci, bi: (bi, 0, 0)),
+            pl.BlockSpec((1, d, sw), lambda ci, bi: (bi, 0, 0)),
             pl.BlockSpec((SUBLANES, LANES), lambda ci, bi: (ci, 0)),
             pl.BlockSpec((1, LANES), lambda ci, bi: (bi, 0)),
         ],
@@ -590,7 +652,7 @@ def window_query_pallas(tables, keys, weights, *, seeds: tuple, width: int,
 
 
 def _window_query_stacked_kernel(tables_ref, keys_ref, w_ref, out_ref, *,
-                                 seeds, width, counter, mode):
+                                 seeds, width, counter, mode, cpl=1):
     """One (ring, key-chunk, bucket) grid step of the multi-ring query.
 
     Same reduction as `_window_query_kernel` with a leading ring axis: the
@@ -603,7 +665,7 @@ def _window_query_stacked_kernel(tables_ref, keys_ref, w_ref, out_ref, *,
     b = pl.program_id(2)
     keys = keys_ref[0].astype(jnp.uint32)                # (8, 128)
     cmin = _table_min(tables_ref, keys, seeds=seeds, width=width,
-                      pre=(0, 0))
+                      pre=(0, 0), cpl=cpl)
     est = counter.decode(cmin) * w_ref[0, 0, 0]
 
     @pl.when(b == 0)
@@ -620,10 +682,11 @@ def _window_query_stacked_kernel(tables_ref, keys_ref, w_ref, out_ref, *,
 
 @functools.partial(jax.jit,
                    static_argnames=("width", "counter", "seeds", "mode",
-                                    "interpret"))
+                                    "interpret", "cpl"))
 def window_query_stacked_pallas(tables, keys, weights, *, seeds: tuple,
                                 width: int, counter: CounterSpec,
-                                mode: str = "sum", interpret: bool = True):
+                                mode: str = "sum", interpret: bool = True,
+                                cpl: int = 1):
     """Stacked multi-ring windowed query: R bucket rings, ONE launch.
 
     tables (R, B, d, w): one bucket ring per flushed window tenant; keys
@@ -635,17 +698,17 @@ def window_query_stacked_pallas(tables, keys, weights, *, seeds: tuple,
     """
     if mode not in ("sum", "max"):
         raise ValueError(f"unknown window query mode {mode!r}")
-    r, b, d, _ = tables.shape
+    r, b, d, sw = tables.shape
     n = keys.shape[1]
     tiles, padded = _pad_tiles_2d(keys.astype(jnp.uint32), 0)
     w_tiles = jnp.broadcast_to(weights.astype(jnp.float32)[:, :, None],
                                (r, b, LANES))
     out = pl.pallas_call(
         functools.partial(_window_query_stacked_kernel, seeds=seeds,
-                          width=width, counter=counter, mode=mode),
+                          width=width, counter=counter, mode=mode, cpl=cpl),
         grid=(r, padded // CHUNK, b),
         in_specs=[
-            pl.BlockSpec((1, 1, d, width), lambda ri, ci, bi: (ri, bi, 0, 0)),
+            pl.BlockSpec((1, 1, d, sw), lambda ri, ci, bi: (ri, bi, 0, 0)),
             pl.BlockSpec((1, SUBLANES, LANES), lambda ri, ci, bi: (ri, ci, 0)),
             pl.BlockSpec((1, 1, LANES), lambda ri, ci, bi: (ri, bi, 0)),
         ],

@@ -84,12 +84,16 @@ _as_keys = sk.as_uint32_keys
 def _spec_meta(spec: SketchSpec) -> dict:
     c = spec.counter
     return {"width": spec.width, "depth": spec.depth, "seed": spec.seed,
+            "packed": spec.packed,
             "counter": {"kind": c.kind, "base": c.base, "bits": c.bits}}
 
 
 def _spec_from_meta(meta: dict) -> SketchSpec:
+    # pre-v6 manifests carry no "packed" flag: those tables were stored
+    # one-cell-per-lane, which is exactly packed=False
     return SketchSpec(width=meta["width"], depth=meta["depth"],
                       seed=meta["seed"],
+                      packed=meta.get("packed", False),
                       counter=CounterSpec(**meta["counter"]))
 
 
@@ -250,8 +254,8 @@ class TenantPlane(_TrackerMixin, _TelemetryMixin):
                  metrics: Optional[obs.MetricsRegistry] = None,
                  tracer: Optional[obs.Tracer] = None, label: str = "p0"):
         self.spec = spec
-        self.tables = jnp.zeros((0, spec.depth, spec.width),
-                                spec.counter.dtype)
+        self.tables = jnp.zeros((0, spec.depth, spec.storage_width),
+                                spec.storage_dtype)
         self.ring = _DeviceRing(queue_capacity)
         self.rng = _RngLane(seed)
         self.names: list[str] = []
@@ -263,8 +267,8 @@ class TenantPlane(_TrackerMixin, _TelemetryMixin):
         return self.ring.capacity
 
     def add(self, name: str) -> int:
-        zero = jnp.zeros((1, self.spec.depth, self.spec.width),
-                         self.spec.counter.dtype)
+        zero = jnp.zeros((1, self.spec.depth, self.spec.storage_width),
+                         self.spec.storage_dtype)
         self.tables = jnp.concatenate([self.tables, zero], axis=0)
         self.names.append(name)
         self._grow_tracker()
@@ -939,7 +943,9 @@ class CountService:
 
     def _meta(self) -> dict:
         meta = {
-            "version": 5,
+            # v6: spec metadata records the packed-storage flag (pre-v6
+            # readers ignore it; pre-v6 manifests restore as packed=False)
+            "version": 6,
             "queue_capacity": self.queue_capacity,
             "seed": self.seed,
             "track_top": self.track_top,
@@ -1011,16 +1017,22 @@ class CountService:
 
     @classmethod
     def restore(cls, root: str, step: Optional[int] = None,
-                track_top: Optional[int] = None) -> "CountService":
+                track_top: Optional[int] = None,
+                packed: Optional[bool] = None) -> "CountService":
         """Rebuild a service (registry + planes + rings) from a snapshot.
 
-        Accepts the v5 manifest (metrics snapshot), v4 (admission plane),
-        v3 (multi-plane + tracker state), the v2 multi-plane layout, and
-        the original v1 single-plane layout (whose host queue is replayed
-        into the device ring).  Pre-v5 checkpoints restore with COLD
-        metrics (only the legacy events/flushes stats carry over).
-        Checkpoints written with tracking on restore their trackers;
-        `track_top` re-arms tracking:
+        Accepts the v6 manifest (packed-storage flag), v5 (metrics
+        snapshot), v4 (admission plane), v3 (multi-plane + tracker state),
+        the v2 multi-plane layout, and the original v1 single-plane layout
+        (whose host queue is replayed into the device ring).  Pre-v5
+        checkpoints restore with COLD metrics (only the legacy
+        events/flushes stats carry over); pre-v6 specs restore as
+        packed=False.  `packed=True/False` converts every plane's storage
+        layout on load (repack-on-load): tables restore in their saved
+        layout, then unpack/repack cell-exactly, so an unpacked v5
+        snapshot comes back as a packed service (or vice versa) with
+        bit-identical estimates.  Checkpoints written with tracking on
+        restore their trackers; `track_top` re-arms tracking:
 
           * pre-v3 / tracker-less snapshot — COLD (T, track_top) heaps
             that refill from post-restore traffic (the tables carry no
@@ -1032,7 +1044,10 @@ class CountService:
         """
         meta, step = checkpoint.load_metadata(root, step)
         if meta.get("version", 1) < 2:
-            return cls._restore_v1(root, step, meta, track_top)
+            svc = cls._restore_v1(root, step, meta, track_top)
+            if packed is not None:
+                svc._convert_packing(packed)
+            return svc
         default = (_spec_from_meta(meta["spec"]) if "spec" in meta else None)
         saved_k = meta.get("track_top")
         svc = cls(default, queue_capacity=meta["queue_capacity"],
@@ -1087,7 +1102,45 @@ class CountService:
         if (track_top is not None and saved_k is not None
                 and track_top != saved_k):
             svc._resize_trackers(track_top)
+        if packed is not None:
+            svc._convert_packing(packed)
         return svc
+
+    def _convert_packing(self, packed: bool) -> None:
+        """Switch every plane's table storage layout in place
+        (repack-on-load): unpack each table to its cell states under the
+        current spec, re-store them under the converted spec.  Cell
+        VALUES are preserved exactly, so estimates are bit-identical
+        across the conversion; packing requires each spec's width to
+        divide by cells_per_lane (`SketchSpec` validates).  Registry
+        keys, the default spec, and the windowed sketches' embedded
+        specs all follow the new layout."""
+        if self.default_spec is not None:
+            self.default_spec = dataclasses.replace(self.default_spec,
+                                                    packed=packed)
+        planes: dict[SketchSpec, TenantPlane] = {}
+        for spec, p in self._planes.items():
+            new = dataclasses.replace(spec, packed=packed)
+            if new != spec:
+                p.tables = sk.storage_table(sk.logical_table(p.tables, spec),
+                                            new)
+                p.spec = new
+            planes[new] = p
+        self._planes = planes
+        wplanes: dict[w.WindowSpec, WindowPlane] = {}
+        for wspec, p in self._wplanes.items():
+            new_sk = dataclasses.replace(wspec.sketch, packed=packed)
+            new_w = (wspec if new_sk == wspec.sketch
+                     else dataclasses.replace(wspec, sketch=new_sk))
+            if new_w != wspec:
+                for i, win in enumerate(p.wins):
+                    tables = sk.storage_table(
+                        sk.logical_table(win.tables, wspec.sketch), new_sk)
+                    p.wins[i] = dataclasses.replace(win, tables=tables,
+                                                    spec=new_w)
+                p.wspec = new_w
+            wplanes[new_w] = p
+        self._wplanes = wplanes
 
     def _resize_trackers(self, k: int) -> None:
         """Re-arm every plane's heap stack at width k (restore with a

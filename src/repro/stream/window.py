@@ -104,7 +104,8 @@ def window_init(spec: WindowSpec, epoch: int | None = None) -> WindowedSketch:
     with an event-time epoch), where a None epoch cannot be initialized
     inside the trace."""
     s = spec.sketch
-    tables = jnp.zeros((spec.buckets, s.depth, s.width), s.counter.dtype)
+    tables = jnp.zeros((spec.buckets, s.depth, s.storage_width),
+                       s.storage_dtype)
     return WindowedSketch(
         tables=tables, cursor=jnp.zeros((), jnp.int32), spec=spec,
         epoch=None if epoch is None else jnp.asarray(epoch, jnp.int32))
@@ -289,8 +290,12 @@ def decay(sketch: Sketch, gamma: float, rng: jax.Array) -> Sketch:
     if not 0.0 < gamma <= 1.0:
         raise ValueError("gamma must be in (0, 1]")
     c = sketch.spec.counter
-    v = c.decode(sketch.table) * jnp.float32(gamma)
-    table = c.reencode_stochastic(v, rng).astype(sketch.table.dtype)
+    # estimate-space math runs on cell STATES: packed storage unpacks
+    # first (a lane-wise decode would mix neighbouring cells' bits)
+    states = sk.logical_table(sketch.table, sketch.spec)
+    v = c.decode(states) * jnp.float32(gamma)
+    table = sk.storage_table(
+        c.reencode_stochastic(v, rng).astype(c.dtype), sketch.spec)
     return Sketch(table=table, spec=sketch.spec)
 
 
@@ -325,7 +330,7 @@ def decayed_init(spec: SketchSpec, gamma: float = 0.98,
     if not 0.0 < gamma <= 1.0:
         raise ValueError("gamma must be in (0, 1]")
     win = window_init(WindowSpec(sketch=spec, buckets=history))
-    tail = jnp.zeros((spec.depth, spec.width), spec.counter.dtype)
+    tail = jnp.zeros((spec.depth, spec.storage_width), spec.storage_dtype)
     return DecayedSketch(win=win, tail=tail, gamma=gamma)
 
 
@@ -340,12 +345,15 @@ def decayed_rotate(ds: DecayedSketch, rng: jax.Array) -> DecayedSketch:
     `reencode_stochastic` argument as eager `decay`, at 1/update-rate of
     its cost.
     """
-    c = ds.win.spec.sketch.counter
+    spec = ds.win.spec.sketch
+    c = spec.counter
     expiring = jax.lax.dynamic_index_in_dim(
         ds.win.tables, (ds.win.cursor + 1) % ds.win.spec.buckets, 0,
         keepdims=False)
-    v = c.decode(expiring) + jnp.float32(ds.gamma) * c.decode(ds.tail)
-    tail = c.reencode_stochastic(v, rng).astype(ds.tail.dtype)
+    v = (c.decode(sk.logical_table(expiring, spec))
+         + jnp.float32(ds.gamma) * c.decode(sk.logical_table(ds.tail, spec)))
+    tail = sk.storage_table(c.reencode_stochastic(v, rng).astype(c.dtype),
+                            spec)
     return DecayedSketch(win=window_rotate(ds.win), tail=tail, gamma=ds.gamma)
 
 

@@ -71,6 +71,33 @@ def test_saturation_at_max_state():
     assert (np.asarray(new) == c.max_state).all()
 
 
+def test_linear_nfold_exact_past_float32_precision():
+    """CMS32 linear cells are exact in integer space: states past 2^24
+    round in float32, so the old estimate-space path drifted from its own
+    uint32 state.  The integer path must land s + n exactly."""
+    c = CMS32
+    s0 = 1 << 24
+    s = jnp.asarray([s0, s0 + 1, s0 + 3, 0], jnp.uint32)
+    n = jnp.asarray([3.0, 5.0, 1.0, float(1 << 25)], jnp.float32)
+    new = np.asarray(c.nfold(s, n, jnp.zeros((4,))))
+    np.testing.assert_array_equal(new, [s0 + 3, s0 + 6, s0 + 4, 1 << 25])
+
+
+def test_linear_nfold_saturates_and_rounds_fraction():
+    c = CMS32
+    # room-clamped saturation at max_state, no uint32 wraparound
+    s = jnp.asarray([c.max_state - 2, c.max_state], jnp.uint32)
+    new = np.asarray(c.nfold(s, jnp.asarray([10.0, 1e12], jnp.float32),
+                             jnp.zeros((2,))))
+    assert (new == c.max_state).all()
+    # fractional n: stochastic bump with P = frac
+    s = jnp.full((100_000,), 7, jnp.uint32)
+    u = jax.random.uniform(jax.random.PRNGKey(1), s.shape)
+    new = np.asarray(c.nfold(s, jnp.full(s.shape, 2.25, jnp.float32), u))
+    assert set(np.unique(new)) == {9, 10}
+    assert abs((new == 10).mean() - 0.25) < 0.01
+
+
 def test_encode_floor_inverts_decode():
     c = CMLS16
     states = jnp.arange(0, 60_000, 123, dtype=jnp.uint16)

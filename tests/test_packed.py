@@ -1,0 +1,389 @@
+"""Packed-cell storage: bit-parity with the unpacked path everywhere.
+
+The packed layout stores `cells_per_lane` counter states per uint32 lane
+(4x uint8 / 2x uint16); hashing stays on the LOGICAL width, so every
+packed estimate must be bit-identical to the unpacked same-CounterSpec
+path.  The sweep here covers all six fused kernels through their
+`kernels.ops` wrappers (kernel engine in interpret mode AND the XLA
+reference engines), the sizing contract, in-kernel saturation, the
+service flush pipeline across traffic regimes (same shape as
+tests/test_flush_pipeline.py), windowed tenants mid-rotation, and the
+checkpoint manifest's repack-on-load conversion.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CMLS8, CMLS16, CMS32, SketchSpec, init
+from repro.core import sketch as sk
+from repro.core.counters import CounterSpec, pack_table, unpack_table
+from repro.kernels import ops
+from repro.kernels.sketch import CHUNK
+from repro.stream import window as w
+from repro.stream.service import CountService
+
+COUNTERS = {"cms32": CMS32, "cmls16": CMLS16, "cmls8": CMLS8}
+
+
+def _keys(n, vocab, seed=0):
+    return jnp.asarray((np.random.default_rng(seed).zipf(1.25, n) % vocab)
+                       .astype(np.uint32))
+
+
+def _pair(width, depth, counter, seed=0x5EED):
+    """(unpacked, packed) specs sharing geometry, counter, and hash seeds."""
+    u = SketchSpec(width=width, depth=depth, counter=counter, seed=seed)
+    return u, dataclasses.replace(u, packed=True)
+
+
+def _assert_tables_equal(packed_tables, unpacked_tables, counter):
+    """Packed storage must hold exactly the unpacked path's cell states."""
+    np.testing.assert_array_equal(
+        np.asarray(packed_tables),
+        np.asarray(pack_table(unpacked_tables, counter.bits)))
+
+
+# --------------------------------------------------------------------------
+# pack/unpack primitives
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [8, 16, 32])
+def test_pack_unpack_roundtrip(bits):
+    rng = np.random.default_rng(bits)
+    table = jnp.asarray(rng.integers(0, 1 << bits, (3, 2, 256),
+                                     dtype=np.uint32))
+    lanes = pack_table(table, bits)
+    assert lanes.shape == (3, 2, 256 * bits // 32)
+    assert lanes.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(unpack_table(lanes, bits)),
+                                  np.asarray(table))
+
+
+def test_pack_rejects_misaligned_width():
+    with pytest.raises(ValueError):
+        pack_table(jnp.zeros((2, 129), jnp.uint8), 8)
+    with pytest.raises(ValueError):
+        SketchSpec(width=130, depth=2, counter=CMLS8, packed=True)
+
+
+# --------------------------------------------------------------------------
+# from_memory sizing (satellite: lane alignment at constant bytes)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("counter_name", list(COUNTERS))
+def test_from_memory_packed_lane_alignment(counter_name):
+    counter = COUNTERS[counter_name]
+    cpl = counter.cells_per_lane
+    for budget in (32 << 10, 100_000, 1 << 20):
+        spec = SketchSpec.from_memory(budget, depth=2, counter=counter,
+                                      packed=True)
+        # width is a whole number of 128-wide uint32 lane vectors
+        assert spec.width % (128 * cpl) == 0
+        assert spec.storage_width == spec.width // cpl
+        assert spec.memory_bytes <= budget
+        # memory_bytes stays exact: the stored array IS that many bytes
+        assert init(spec).table.nbytes == spec.memory_bytes
+        # and matches the unpacked sizing cell-for-cell when the unpacked
+        # width happens to land on the packed alignment
+        u = SketchSpec.from_memory(budget, depth=2, counter=counter)
+        assert u.memory_bytes <= budget
+        assert spec.width <= u.width
+
+
+def test_from_memory_tiny_budget_keeps_lane_multiple():
+    spec = SketchSpec.from_memory(64, depth=2, counter=CMLS8, packed=True)
+    assert spec.width % CMLS8.cells_per_lane == 0
+    assert spec.width >= CMLS8.cells_per_lane
+
+
+# --------------------------------------------------------------------------
+# six-kernel parity sweep: packed vs unpacked, kernel vs XLA engines
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("counter_name", list(COUNTERS))
+def test_update_and_query_packed_parity(counter_name):
+    """Kernels 1+2 (update / query) via ops, plus the XLA update engine."""
+    counter = COUNTERS[counter_name]
+    su, sp = _pair(512, 3, counter)
+    keys = _keys(4000, 1200, seed=5)
+    rng = jax.random.PRNGKey(2)
+    a = ops.update(init(su), keys, rng)
+    b = ops.update(init(sp), keys, rng)
+    assert b.table.shape == (3, 512 // sp.cells_per_lane)
+    assert b.table.dtype == jnp.uint32
+    _assert_tables_equal(b.table, a.table, counter)
+    ax = ops.update_xla(init(su), keys, rng)
+    bx = ops.update_xla(init(sp), keys, rng)
+    np.testing.assert_array_equal(np.asarray(a.table), np.asarray(ax.table))
+    _assert_tables_equal(bx.table, ax.table, counter)
+    probes = _keys(700, 2000, seed=9)
+    np.testing.assert_array_equal(np.asarray(ops.query(a, probes)),
+                                  np.asarray(ops.query(b, probes)))
+
+
+@pytest.mark.parametrize("counter_name", list(COUNTERS))
+def test_fused_update_many_query_many_packed_parity(counter_name):
+    """Kernels 3+4 (fused multi-tenant update / fused query) via ops."""
+    counter = COUNTERS[counter_name]
+    su, sp = _pair(1024, 2, counter)
+    t = 4
+    keys = jnp.stack([_keys(2 * CHUNK, 3000, seed=i) for i in range(t)])
+    weights = jnp.asarray(
+        (np.random.default_rng(3).random((t, 2 * CHUNK)) < 0.9)
+        .astype(np.float32))
+    rng = jax.random.PRNGKey(7)
+    ta = ops.update_many(jnp.zeros((t, 2, 1024), su.storage_dtype), su,
+                         keys, rng, weights=weights)
+    tb = ops.update_many(jnp.zeros((t, 2, sp.storage_width),
+                                   sp.storage_dtype), sp,
+                         keys, rng, weights=weights)
+    _assert_tables_equal(tb, ta, counter)
+    probes = jnp.stack([_keys(300, 3000, seed=40 + i) for i in range(t)])
+    np.testing.assert_array_equal(np.asarray(ops.query_many(ta, su, probes)),
+                                  np.asarray(ops.query_many(tb, sp, probes)))
+
+
+@pytest.mark.parametrize("engine", ["kernel", "xla"])
+@pytest.mark.parametrize("counter_name", list(COUNTERS))
+def test_update_rows_and_score_packed_parity(counter_name, engine):
+    """Kernels 5+6 (active-row update / single-launch update+score) in both
+    engines: tables and candidate estimates bit-identical to unpacked."""
+    counter = COUNTERS[counter_name]
+    su, sp = _pair(512, 3, counter)
+    t, r = 5, 3
+    rngs = np.random.default_rng(11)
+    rows = np.asarray([0, 2, 4], np.int32)
+    keys = jnp.asarray(rngs.integers(0, 900, (r, 2 * CHUNK), dtype=np.uint32))
+    weights = jnp.asarray((rngs.random((r, 2 * CHUNK)) < 0.8)
+                          .astype(np.float32))
+    cand = jnp.asarray(rngs.integers(0, 900, (r, 64), dtype=np.uint32))
+    lane = np.asarray([5, 1], np.uint32)
+    ta = jnp.zeros((t, 3, 512), su.storage_dtype)
+    tb = jnp.zeros((t, 3, sp.storage_width), sp.storage_dtype)
+    if engine == "kernel":
+        ua = ops.update_rows(ta, su, keys, lane, rows, weights=weights)
+        ub = ops.update_rows(tb, sp, keys, lane, rows, weights=weights)
+        _assert_tables_equal(ub, ua, counter)
+    na, ea = ops.update_score_rows(ta, su, keys, lane, rows, cand,
+                                   weights=weights, engine=engine)
+    nb, eb = ops.update_score_rows(tb, sp, keys, lane, rows, cand,
+                                   weights=weights, engine=engine)
+    _assert_tables_equal(nb, na, counter)
+    np.testing.assert_array_equal(np.asarray(ea), np.asarray(eb))
+
+
+@pytest.mark.parametrize("engine", ["kernel", "jnp"])
+@pytest.mark.parametrize("mode", ["sum", "max"])
+@pytest.mark.parametrize("counter_name", list(COUNTERS))
+def test_window_query_packed_parity(counter_name, mode, engine):
+    """Window kernels (per-ring + stacked multi-ring) in both engines,
+    with expired (weight-0) and decay-style fractional weights."""
+    counter = COUNTERS[counter_name]
+    su, sp = _pair(512, 2, counter)
+    r, b = 3, 4
+    rng = jax.random.PRNGKey(1)
+    rings_u = []
+    for i in range(r):
+        buckets = [ops.update(init(su), _keys(1500, 1000, seed=10 * i + j),
+                              jax.random.fold_in(rng, 10 * i + j)).table
+                   for j in range(b)]
+        rings_u.append(jnp.stack(buckets))
+    rings_u = jnp.stack(rings_u)
+    rings_p = pack_table(rings_u, counter.bits) if sp.cells_per_lane > 1 \
+        else rings_u.astype(jnp.uint32)
+    probes = jnp.stack([_keys(400, 1500, seed=70 + i) for i in range(r)])
+    weights = jnp.asarray([[0.0 if j == b - 1 else 0.8 ** j
+                            for j in range(b)]] * r, jnp.float32)
+    # per-ring window reduction
+    wu = ops.window_query_tables(rings_u[0], su, probes[0], weights[0],
+                                 mode=mode, engine=engine)
+    wp = ops.window_query_tables(rings_p[0], sp, probes[0], weights[0],
+                                 mode=mode, engine=engine)
+    np.testing.assert_array_equal(np.asarray(wu), np.asarray(wp))
+    # stacked multi-ring launch
+    eng = "xla" if engine == "jnp" else engine
+    gu = ops.window_query_stacked(rings_u, su, probes, weights, mode=mode,
+                                  engine=eng)
+    gp = ops.window_query_stacked(rings_p, sp, probes, weights, mode=mode,
+                                  engine=eng)
+    np.testing.assert_array_equal(np.asarray(gu), np.asarray(gp))
+
+
+def test_packed_saturation_at_max_state():
+    """In-kernel saturation (paper §4 residual floor) under packing: a
+    linear 8-bit cell clamps at 255 and neighbouring cells in the SAME
+    uint32 lane stay untouched by the masked repack."""
+    counter = CounterSpec(kind="linear", base=1.0 + 1e-9, bits=8)
+    su, sp = _pair(128, 1, counter)
+    keys = jnp.full((400,), 7, jnp.uint32)
+    rng = jax.random.PRNGKey(0)
+    a = ops.update(init(su), keys, rng)
+    b = ops.update(init(sp), keys, rng)
+    _assert_tables_equal(b.table, a.table, counter)
+    states = np.asarray(sk.logical_table(b.table, sp))
+    assert states.max() == counter.max_state  # saturated, not wrapped
+    assert (states > 0).sum() == 1            # one cell touched, rest zero
+    est = ops.query(b, jnp.asarray([7], jnp.uint32))
+    assert float(est[0]) == float(counter.max_state)
+
+
+def test_packed_merge_parity():
+    """core merge (max + estimate_sum) unpacks around the cell-wise op —
+    a lane-wise uint32 max would NOT be the per-cell max."""
+    for counter in (CMLS8, CMLS16):
+        su, sp = _pair(256, 2, counter)
+        a1 = ops.update(init(su), _keys(2000, 600, seed=1),
+                        jax.random.PRNGKey(1))
+        a2 = ops.update(init(su), _keys(2000, 600, seed=2),
+                        jax.random.PRNGKey(2))
+        b1 = sk.Sketch(table=pack_table(a1.table, counter.bits), spec=sp)
+        b2 = sk.Sketch(table=pack_table(a2.table, counter.bits), spec=sp)
+        ma = sk.merge(a1, a2, mode="max")
+        mb = sk.merge(b1, b2, mode="max")
+        _assert_tables_equal(mb.table, ma.table, counter)
+        rng = jax.random.PRNGKey(5)
+        sa = sk.merge(a1, a2, mode="estimate_sum", rng=rng)
+        sb = sk.merge(b1, b2, mode="estimate_sum", rng=rng)
+        _assert_tables_equal(sb.table, sa.table, counter)
+
+
+# --------------------------------------------------------------------------
+# service flush pipeline: regimes + windowed mid-rotation
+# --------------------------------------------------------------------------
+
+def _zipf(n, vocab, seed):
+    r = np.random.default_rng(seed)
+    return (r.zipf(1.2, n) % vocab).astype(np.uint32)
+
+
+REGIMES = {
+    "uniform": ("u", "v", "x"),
+    "hot1": ("v",),
+    "subset": ("u", "x"),
+}
+
+
+@pytest.mark.parametrize("regime", sorted(REGIMES))
+@pytest.mark.parametrize("counter_name", ["cmls16", "cmls8"])
+def test_service_flush_packed_parity(counter_name, regime):
+    """Paired services, identical traffic, one packed: tables (as cell
+    states), query_all, and tracker heaps must match bit for bit."""
+    counter = COUNTERS[counter_name]
+    su, sp = _pair(2048, 3, counter)
+    names = ("u", "v", "x")
+    a = CountService(su, tenants=names, queue_capacity=4096, seed=7,
+                     track_top=8)
+    b = CountService(sp, tenants=names, queue_capacity=4096, seed=7,
+                     track_top=8)
+    active = REGIMES[regime]
+    for step in range(3):
+        batch = {n: _zipf(900, 20_000, 100 * step + i)
+                 for i, n in enumerate(names) if n in active}
+        a.enqueue_many(batch)
+        b.enqueue_many(batch)
+        a.flush()
+        b.flush()
+    pa = next(iter(a._planes.values()))
+    pb = next(iter(b._planes.values()))
+    _assert_tables_equal(pb.tables, pa.tables, counter)
+    probes = np.arange(256, dtype=np.uint32)
+    qa, qb = a.query_all(probes), b.query_all(probes)
+    for n in names:
+        np.testing.assert_array_equal(np.asarray(qa[n]), np.asarray(qb[n]))
+    for n in active:
+        ka, ea = a.topk(n)
+        kb, eb = b.topk(n)
+        np.testing.assert_array_equal(np.asarray(ka), np.asarray(kb))
+        np.testing.assert_array_equal(np.asarray(ea), np.asarray(eb))
+
+
+def test_windowed_service_packed_parity_mid_rotation():
+    """Windowed tenants with staggered watermarks: rotation boundaries,
+    partial rings, and the stacked window tracker refresh all agree."""
+    su, sp = _pair(2048, 3, CMLS16)
+    ws_u = w.WindowSpec(sketch=su, buckets=4, interval=60.0)
+    ws_p = w.WindowSpec(sketch=sp, buckets=4, interval=60.0)
+    a = CountService(queue_capacity=4096, seed=9, track_top=8)
+    b = CountService(queue_capacity=4096, seed=9, track_top=8)
+    for n in ("u", "v"):
+        a.add_tenant(n, window=ws_u)
+        b.add_tenant(n, window=ws_p)
+    feed = [("u", 10.0, 0), ("v", 70.0, 1), ("u", 130.0, 2), ("v", 140.0, 3)]
+    for name, ts, seed in feed:
+        keys = _zipf(700, 10_000, seed)
+        a.enqueue(name, keys, ts=ts)
+        b.enqueue(name, keys, ts=ts)
+    probes = np.arange(256, dtype=np.uint32)
+    for n in ("u", "v"):
+        np.testing.assert_array_equal(np.asarray(a.query(n, probes)),
+                                      np.asarray(b.query(n, probes)))
+        assert a.epoch_of(n) == b.epoch_of(n)
+        ka, ea = a.topk(n)
+        kb, eb = b.topk(n)
+        np.testing.assert_array_equal(np.asarray(ka), np.asarray(kb))
+        np.testing.assert_array_equal(np.asarray(ea), np.asarray(eb))
+    # decayed window modes ride the same packed weight path
+    for n in ("u", "v"):
+        np.testing.assert_array_equal(
+            np.asarray(a.query(n, probes, mode="max", gamma=0.9)),
+            np.asarray(b.query(n, probes, mode="max", gamma=0.9)))
+
+
+# --------------------------------------------------------------------------
+# checkpoint: v6 manifest + repack-on-load
+# --------------------------------------------------------------------------
+
+def test_packed_snapshot_restore_roundtrip(tmp_path):
+    su, sp = _pair(1024, 2, CMLS8)
+    svc = CountService(sp, tenants=["u", "v"], queue_capacity=2048, seed=3,
+                       track_top=4)
+    for i in range(2):
+        svc.enqueue_many({"u": _zipf(500, 5000, i), "v": _zipf(300, 5000,
+                                                               50 + i)})
+        svc.flush()
+    svc.enqueue("u", _zipf(100, 5000, 99))  # pending ring events persist too
+    probes = np.arange(128, dtype=np.uint32)
+    want = svc.query_all(probes)
+    svc.snapshot(str(tmp_path), step=1)
+    got = CountService.restore(str(tmp_path))
+    assert next(iter(got._planes)).packed  # v6 manifest keeps the layout
+    back = got.query_all(probes)
+    for n in ("u", "v"):
+        np.testing.assert_array_equal(np.asarray(want[n]),
+                                      np.asarray(back[n]))
+
+
+def test_restore_repack_on_load_both_directions(tmp_path):
+    """An unpacked snapshot restores straight into packed storage (and
+    back), with bit-identical estimates and converted registry specs."""
+    su, sp = _pair(1024, 2, CMLS16)
+    svc = CountService(su, tenants=["u"], queue_capacity=2048, seed=3)
+    svc.add_tenant("x", window=w.WindowSpec(sketch=su, buckets=3,
+                                            interval=60.0))
+    svc.enqueue("u", _zipf(800, 4000, 0))
+    svc.enqueue("x", _zipf(400, 4000, 1), ts=10.0)
+    probes = np.arange(128, dtype=np.uint32)
+    want = svc.query_all(probes)
+    svc.snapshot(str(tmp_path / "u"), step=1)
+
+    packed_svc = CountService.restore(str(tmp_path / "u"), packed=True)
+    assert packed_svc.spec_of("u").packed
+    assert packed_svc.spec_of("x").packed
+    plane = next(iter(packed_svc._planes.values()))
+    assert plane.tables.dtype == jnp.uint32
+    assert plane.tables.shape[-1] == 1024 // CMLS16.cells_per_lane
+    back = packed_svc.query_all(probes)
+    for n in ("u", "x"):
+        np.testing.assert_array_equal(np.asarray(want[n]),
+                                      np.asarray(back[n]))
+
+    packed_svc.snapshot(str(tmp_path / "p"), step=1)
+    unpacked_svc = CountService.restore(str(tmp_path / "p"), packed=False)
+    assert not unpacked_svc.spec_of("u").packed
+    back2 = unpacked_svc.query_all(probes)
+    for n in ("u", "x"):
+        np.testing.assert_array_equal(np.asarray(want[n]),
+                                      np.asarray(back2[n]))
