@@ -74,10 +74,33 @@ METHODOLOGY = {
                     "update_score_rows dispatch — for PACKED storage too "
                     "(tracked_flush_epoch_packed): packing changes the "
                     "cell layout inside the launch, never the launch "
-                    "count — and the windowed plane's tracker refresh "
-                    "exactly one window_query_stacked dispatch regardless "
-                    "of flushed-tenant count.  check_regression.py fails "
-                    "the suite if the audit regresses.",
+                    "count — and the windowed plane's flush epoch exactly "
+                    "one row-mapped update (update_rows on the native "
+                    "(T*B, d, w) reshape) plus one window_query_stacked "
+                    "tracker refresh regardless of flushed-tenant count.  "
+                    "window_rotation_T3 audits a watermark advance of ALL "
+                    "three tenants with empty queues: one masked "
+                    "window_advance_rows dispatch, not one rotation per "
+                    "tenant.  check_regression.py fails the suite if the "
+                    "audit regresses.",
+    "window_epoch_native": "windowed flush on the native (T, B, d, w) "
+                           "leaf vs the legacy restack pipeline, every "
+                           "tenant pending (so both paths process the "
+                           "same R=T rows and the delta is purely data "
+                           "movement).  native = plane.flush(): the leaf "
+                           "reshapes FREE to (T*B, d, w) and the "
+                           "row-mapped kernel lands each batch at flat "
+                           "row tenant*B+cursor, leaf donated and in/out "
+                           "aliased — zero bytes restacked.  restack = "
+                           "plane.flush(dense=True): gathers the active "
+                           "buckets into a fresh (T, d, w) stack, runs "
+                           "the dense launch, scatters each bucket back "
+                           "— 2*T*d*w_storage*itemsize bytes copied per "
+                           "epoch (gather + scatter-back), reported as "
+                           "restack_bytes in the derived column.  "
+                           "Interleaved pairs, median ratio; leafs AND "
+                           "tracker heaps asserted bit-identical "
+                           "afterwards.",
     "packed_format": "topk_packed rows: the tracked single-launch epoch "
                      "on packed vs unpacked storage (same seeds, "
                      "interleaved pairs, median ratio); afterwards the "
@@ -239,6 +262,44 @@ def _packed_epoch_point(spec_u, spec_p, t, cap, k=64):
     return tp, tu, ratio
 
 
+def _window_epoch_point(spec, t, cap, buckets=4, k=8):
+    """Native zero-copy windowed flush vs the legacy restack pipeline,
+    every tenant pending (same R rows both sides — the delta is pure
+    data movement)."""
+    wspec = WindowSpec(sketch=spec, buckets=buckets, interval=60.0)
+    names = [f"tn{i}" for i in range(t)]
+    nat = CountService(queue_capacity=cap, seed=0, track_top=k)
+    rst = CountService(queue_capacity=cap, seed=0, track_top=k)
+    for svc in (nat, rst):
+        for n in names:
+            svc.add_tenant(n, window=wspec)
+    batches = {n: _hot_batch(cap // t, seed=7 + i)
+               for i, n in enumerate(names)}
+
+    def native_cycle():
+        nat.enqueue_many(batches, ts=10.0)
+        nat.planes[0].flush()
+        jax.block_until_ready(nat.planes[0].tables)
+
+    def restack_cycle():
+        rst.enqueue_many(batches, ts=10.0)
+        rst.planes[0].flush(dense=True)
+        jax.block_until_ready(rst.planes[0].tables)
+
+    tn, tr, ratio = _paired_cycles(native_cycle, restack_cycle, warmup=2,
+                                   reps=7)
+    pn, pr = nat.planes[0], rst.planes[0]
+    assert (np.asarray(pn.tables) == np.asarray(pr.tables)).all(), \
+        "native and restack window flushes landed different leafs"
+    assert (np.asarray(pn.tracker.keys) == np.asarray(pr.tracker.keys)).all() \
+        and (np.asarray(pn.tracker.estimates)
+             == np.asarray(pr.tracker.estimates)).all(), \
+        "native and restack window flushes landed different heaps"
+    restack_bytes = (2 * t * spec.depth * spec.storage_width
+                     * pn.tables.dtype.itemsize)
+    return tn, tr, ratio, restack_bytes
+
+
 def _structure_rows(spec_u, spec_p, t):
     """Capacity headroom from packing, derived from the storage shapes
     (no timing): tenants per VMEM block and bytes per dense flush epoch."""
@@ -290,6 +351,13 @@ def _launch_audit(spec, cap, k=8):
         with ops.audit_scope() as tally:
             wsvc.flush()
         audit[f"window_flush_T{flushed}"] = dict(tally)
+    # all three tenants cross a watermark boundary with empty queues:
+    # the whole plane must rotate in ONE masked dispatch
+    wplane = wsvc.planes[0]
+    with ops.audit_scope() as tally:
+        wplane.advance_many([(i, 70.0) for i in range(len(names))],
+                            wsvc.flush)
+    audit["window_rotation_T3"] = dict(tally)
     return audit
 
 
@@ -338,6 +406,17 @@ def _rows(quick: bool):
             {"name": f"topk_packed/unpacked_T{t}",
              "us_per_call": round(tu * 1e6),
              "derived": f"packed_speedup_x{ratio:.2f}"},
+        ]
+    for t in points[:1] if quick else points[:2]:
+        tn, tr, ratio, restack_bytes = _window_epoch_point(spec, t, cap)
+        rows += [
+            {"name": f"window_epoch_native/native_T{t}",
+             "us_per_call": round(tn * 1e6),
+             "derived": "0 restack bytes (donated leaf)"},
+            {"name": f"window_epoch_native/restack_T{t}",
+             "us_per_call": round(tr * 1e6),
+             "derived": f"speedup_x{ratio:.2f} "
+                        f"restack_bytes={restack_bytes}"},
         ]
     rows += _structure_rows(spec, pspec, t=points[-1])
     return rows

@@ -28,9 +28,11 @@ dispatch counts captured under `kernels.ops.audit_scope()` over one
 flush epoch per scenario — and this checker FAILS the suite if the
 single-launch claims regress: a tracked tenant-plane flush must be
 exactly one `update_score_rows` dispatch (for packed and unpacked table
-storage alike), and a windowed plane's tracker
-refresh exactly one `window_query_stacked` dispatch regardless of how
-many tenants flushed.
+storage alike), a windowed plane's flush epoch exactly one row-mapped
+`update_rows` dispatch on the native (T, B, d, w) leaf plus one
+`window_query_stacked` tracker refresh regardless of how many tenants
+flushed, and a multi-tenant watermark rotation exactly one masked
+`window_advance_rows` dispatch.
 
 ACCURACY is gated the same way as speed: `benchmarks/run.py` scores a
 fixed-seed SLO probe workload (exact shadow counts, ARE by frequency
@@ -98,11 +100,22 @@ def audit_launches(doc: dict) -> list[str]:
         if epoch != {"update_score_rows": 1}:
             problems.append(f"{key} is not a single fused "
                             f"update+score dispatch: {epoch}")
+    # the native-leaf window epoch: ONE row-mapped update on the free
+    # (T*B, d, w) reshape + ONE stacked tracker-refresh query, however
+    # many tenants flushed — a restack/update_many regression shows up
+    # as a different op name, an extra dispatch as a higher count
     for key in ("window_flush_T1", "window_flush_T3"):
         got = audit.get(key, {})
-        if got.get("window_query_stacked") != 1:
-            problems.append(f"{key}: tracker refresh is not ONE stacked "
+        if got != {"update_rows": 1, "window_query_stacked": 1}:
+            problems.append(f"{key}: window flush epoch is not one "
+                            f"row-mapped update + one stacked "
                             f"window-query dispatch: {got}")
+    # multi-tenant watermark rotation: ONE masked whole-leaf dispatch,
+    # not one window_advance_steps per crossing tenant
+    rot = audit.get("window_rotation_T3", {})
+    if rot != {"window_advance_rows": 1}:
+        problems.append("window_rotation_T3: rotating every tenant is not "
+                        f"ONE masked window_advance_rows dispatch: {rot}")
     return problems
 
 
@@ -176,8 +189,9 @@ def check(threshold: float) -> int:
                     failures.append(suite)
                 else:
                     print(f"ok {suite}: launch audit (flush epoch = 1 fused "
-                          "dispatch, packed and unpacked; window refresh = "
-                          "1 stacked query)")
+                          "dispatch, packed and unpacked; window epoch = "
+                          "1 row-mapped update + 1 stacked query; rotation "
+                          "= 1 masked dispatch)")
             base = _timed_rows(base_doc)
             new = _timed_rows(new_doc)
             shared = sorted(set(base) & set(new))

@@ -61,6 +61,19 @@ def lazy_update(sketch: sk.Sketch, keys: jnp.ndarray, rng: jax.Array,
     return sk.Sketch(table=table, spec=sketch.spec)
 
 
+def pmax_merge_window_stack(tables: jnp.ndarray, spec, axis_names
+                            ) -> jnp.ndarray:
+    """Max-merge a stacked window leaf across mesh axes (inside shard_map).
+
+    tables: the native (T, B, d, w) window-plane leaf (or any leading-dim
+    stack of bucket rings) — `logical_table`/`storage_table` act on the
+    trailing (d, w) axes, so the whole plane merges in one collective,
+    zero-copy from the resident array.  spec: the rings' SketchSpec
+    (packed storage unpacks around the collective like `pmax_merge`)."""
+    states = sk.logical_table(tables, spec)
+    return sk.storage_table(jax.lax.pmax(states, axis_names), spec)
+
+
 def pmax_merge_window(win, axis_names):
     """Max-merge per-shard bucket rings across mesh axes (inside shard_map).
 
@@ -68,10 +81,10 @@ def pmax_merge_window(win, axis_names):
     host step counter or a shared watermark, replicated by construction),
     so bucket b means the same time slice on every shard and the ring
     merges bucket-wise exactly like a plain sketch (per-cell, so packed
-    rings unpack around the collective like `pmax_merge`)."""
-    spec = win.spec.sketch
-    states = sk.logical_table(win.tables, spec)
-    merged = sk.storage_table(jax.lax.pmax(states, axis_names), spec)
+    rings unpack around the collective like `pmax_merge`).  The (B, d, w)
+    ring is the T=1 case of `pmax_merge_window_stack`, which merges a
+    whole window plane's native leaf at once."""
+    merged = pmax_merge_window_stack(win.tables, win.spec.sketch, axis_names)
     return dataclasses.replace(win, tables=merged)
 
 

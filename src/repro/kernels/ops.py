@@ -45,7 +45,8 @@ from repro.kernels.sketch import (CHUNK, LANES, _shift_to_fill,
                                   queue_append_dense_pallas,
                                   queue_append_pallas, update_pallas,
                                   window_query_pallas,
-                                  window_query_stacked_pallas)
+                                  window_query_stacked_pallas,
+                                  window_query_stacked_rows_pallas)
 
 # VMEM budget the resident-table strategy is valid for (per TPU core).
 VMEM_TABLE_LIMIT = 12 * 1024 * 1024
@@ -291,15 +292,25 @@ def _update_gathered_jit(tables, keys, weights, rng, rows, *, spec, total,
                                cpl=spec.cells_per_lane)
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
-def _update_rows_jit(tables, keys, weights, rng, rows, *, spec, interpret):
+def _update_rows_impl(tables, keys, weights, rng, rows, urows, *, spec,
+                      total, interpret):
     sorted_keys, mult = jax.vmap(sk.dedup_weighted)(keys, weights)
-    uniforms = _parity_uniforms(rng, keys.shape[1], tables.shape[0], rows)
+    uniforms = _parity_uniforms(rng, keys.shape[1], total, urows)
     return fused_update_rows_pallas(tables, sorted_keys, mult, uniforms,
                                     rows, seeds=_seeds_tuple(spec),
                                     width=spec.width, counter=spec.counter,
                                     interpret=interpret,
                                     cpl=spec.cells_per_lane)
+
+
+_update_rows_jit = jax.jit(
+    _update_rows_impl, static_argnames=("spec", "total", "interpret"))
+# donated twin: the window plane flushes its resident (T*B, d, w) leaf
+# through this — the old buffer is dead the moment the epoch lands, so
+# donation lets XLA alias it in place instead of materializing a copy
+_update_rows_donated_jit = jax.jit(
+    _update_rows_impl, static_argnames=("spec", "total", "interpret"),
+    donate_argnames=("tables",))
 
 
 def update_many(tables: jnp.ndarray, spec: sk.SketchSpec, keys: jnp.ndarray,
@@ -342,8 +353,8 @@ def update_many(tables: jnp.ndarray, spec: sk.SketchSpec, keys: jnp.ndarray,
 
 
 def update_rows(tables: jnp.ndarray, spec: sk.SketchSpec, keys: jnp.ndarray,
-                rng: jax.Array, rows, weights: jnp.ndarray | None = None
-                ) -> jnp.ndarray:
+                rng: jax.Array, rows, weights: jnp.ndarray | None = None,
+                uniform_rows=None, donate: bool = False) -> jnp.ndarray:
     """Active-row fused update: land R rows' batches without touching the
     other T - R tables.
 
@@ -357,21 +368,38 @@ def update_rows(tables: jnp.ndarray, spec: sk.SketchSpec, keys: jnp.ndarray,
     zeroed — the active-row flush can replace the dense flush without
     changing a single landed counter.  Falls back to a vmapped jnp update
     + row scatter past the VMEM budget.
+
+    uniform_rows: optional (total, urows) pair decoupling the parity
+    uniform draw from the kernel row map — the window plane updates flat
+    rows `tenant * B + cursor` of its reshaped (T*B, d, w) leaf while
+    drawing uniforms over the (T, N) TENANT grid gathered at `urows`, so
+    the native flush lands bit-identical counters to the legacy
+    restack-and-`update_many` epoch it replaces.
+
+    donate=True donates `tables` to the computation (the caller must drop
+    its reference): XLA aliases the update in place, which is what makes
+    the resident window leaf's flush epoch zero-copy.
     """
     rows = np.asarray(rows, np.int32)
+    if uniform_rows is None:
+        total, urows = tables.shape[0], rows
+    else:
+        total, urows = uniform_rows
+        urows = np.asarray(urows, np.int32)
     if weights is None:
         weights = jnp.ones(keys.shape, jnp.float32)
     _launch("update_rows")
     if not fits_vmem(spec):
-        rngs = jax.random.split(rng, tables.shape[0])[rows]
+        rngs = jax.random.split(rng, int(total))[urows]
 
         def one(table, k, w, r):
             s = sk.Sketch(table=table, spec=spec)
             return sk.update_batched(s, k, r, weights=w).table
         new = jax.vmap(one)(tables[rows], keys, weights, rngs)
         return tables.at[rows].set(new)
-    return _update_rows_jit(tables, keys, weights, rng, rows, spec=spec,
-                            interpret=_interpret())
+    fn = _update_rows_donated_jit if donate else _update_rows_jit
+    return fn(tables, keys, weights, rng, rows, urows, spec=spec,
+              total=int(total), interpret=_interpret())
 
 
 # --------------------------------------------------------------------------
@@ -454,10 +482,18 @@ def _window_query_stacked_xla_jit(tables, keys, weights, *, spec, mode):
                                         mode=mode, cpl=spec.cells_per_lane)
 
 
+@functools.partial(jax.jit, static_argnames=("spec", "mode"))
+def _window_query_stacked_rows_xla_jit(tables, keys, weights, rows, *, spec,
+                                       mode):
+    return ref.window_query_stacked_rows_ref(
+        tables, keys, weights, rows, _row_seeds_array(spec), spec.counter,
+        mode=mode, cpl=spec.cells_per_lane)
+
+
 def window_query_stacked(tables: jnp.ndarray, spec: sk.SketchSpec,
                          keys: jnp.ndarray, weights: jnp.ndarray,
-                         mode: str = "sum", engine: str = "auto"
-                         ) -> jnp.ndarray:
+                         mode: str = "sum", engine: str = "auto",
+                         rows=None) -> jnp.ndarray:
     """Stacked multi-ring window reduction: R rings, ONE fused launch.
 
     tables (R, B, d, w) bucket rings; keys (R, N) per-ring probes; weights
@@ -465,6 +501,13 @@ def window_query_stacked(tables: jnp.ndarray, spec: sk.SketchSpec,
     lazy decay).  The WindowPlane tracker refresh calls this once per
     flush epoch no matter how many tenants flushed — previously one
     `window_query` launch per flushed tenant.
+
+    rows: optional (R,) int32 — query R tenant rings straight off a native
+    (T, B, d, w) window-plane leaf (tables' leading axis is then T, keys/
+    weights stay R-indexed).  The kernel variant steers its table blocks
+    through a scalar-prefetch row map (`window_query_stacked_rows_pallas`)
+    and the XLA engine gathers inside the jitted computation, so neither
+    path ever restacks rings on the host.
 
     engine: "auto" follows the per-ring `window_query_tables` policy —
     the kernel whenever the bucket table fits VMEM, the reference
@@ -481,18 +524,29 @@ def window_query_stacked(tables: jnp.ndarray, spec: sk.SketchSpec,
         raise ValueError(f"unknown window query mode {mode!r}")
     if engine not in ("auto", "kernel", "xla"):
         raise ValueError(f"unknown window_query_stacked engine {engine!r}")
-    if keys.shape[0] != tables.shape[0]:
-        raise ValueError(f"per-ring keys need {tables.shape[0]} rows, "
+    n_rings = tables.shape[0] if rows is None else len(rows)
+    if keys.shape[0] != n_rings:
+        raise ValueError(f"per-ring keys need {n_rings} rows, "
                          f"got {keys.shape[0]}")
-    if weights.shape != tables.shape[:2]:
+    if weights.shape != (n_rings, tables.shape[1]):
         raise ValueError(f"need (R, B) weights: {weights.shape} vs "
-                         f"{tables.shape[:2]}")
+                         f"{(n_rings, tables.shape[1])}")
     interpret = _interpret()
     if engine == "auto":
         engine = "kernel" if fits_vmem(spec) else "xla"
     if engine == "kernel" and not fits_vmem(spec):
         raise ValueError("table exceeds the VMEM budget; use engine='xla'")
     _launch("window_query_stacked")
+    if rows is not None:
+        rows = jnp.asarray(np.asarray(rows, np.int32))
+        if engine == "xla":
+            return _window_query_stacked_rows_xla_jit(tables, keys, weights,
+                                                      rows, spec=spec,
+                                                      mode=mode)
+        return window_query_stacked_rows_pallas(
+            tables, keys, weights, rows, seeds=_seeds_tuple(spec),
+            width=spec.width, counter=spec.counter, mode=mode,
+            interpret=interpret, cpl=spec.cells_per_lane)
     if engine == "xla":
         return _window_query_stacked_xla_jit(tables, keys, weights,
                                              spec=spec, mode=mode)
@@ -501,6 +555,34 @@ def window_query_stacked(tables: jnp.ndarray, spec: sk.SketchSpec,
                                        width=spec.width, counter=spec.counter,
                                        mode=mode, interpret=interpret,
                                        cpl=spec.cells_per_lane)
+
+
+@functools.partial(jax.jit, donate_argnames=("tables",))
+def _window_advance_rows_jit(tables, cursors, steps):
+    b = tables.shape[1]
+    off = (jnp.arange(b, dtype=jnp.int32)[None, :] - cursors[:, None] - 1) % b
+    cleared = (off < steps[:, None]) | (steps[:, None] >= b)
+    return jnp.where(cleared[:, :, None, None], 0, tables)
+
+
+def window_advance_rows(tables: jnp.ndarray, cursors, steps) -> jnp.ndarray:
+    """Watermark rotation on the native (T, B, d, w) window leaf: advance
+    every tenant's ring by its own step count in ONE masked device op.
+
+    tables (T, B, d, w storage) is DONATED (the caller reassigns its
+    leaf); cursors/steps (T,) int32 — `steps[t] == 0` leaves tenant t
+    untouched, so a mixed advance (only some tenants' watermarks moved)
+    is still one dispatch instead of one `window_advance_steps` per
+    tenant.  Per row the cleared-bucket mask is exactly
+    `stream.window.window_advance_steps`'s: the `steps` buckets after the
+    cursor (the ones rotation will reuse) zero, everything clears when
+    steps >= B.  The caller owns the host cursor mirror:
+    `cursor' = (cursor + steps) % B`.
+    """
+    _launch("window_advance_rows")
+    return _window_advance_rows_jit(tables,
+                                    jnp.asarray(np.asarray(cursors, np.int32)),
+                                    jnp.asarray(np.asarray(steps, np.int32)))
 
 
 # --------------------------------------------------------------------------

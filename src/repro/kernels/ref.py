@@ -148,3 +148,17 @@ def window_query_stacked_ref(tables: jnp.ndarray, keys: jnp.ndarray,
         return out
 
     return jax.vmap(one)(tables, keys, weights)
+
+
+def window_query_stacked_rows_ref(tables: jnp.ndarray, keys: jnp.ndarray,
+                                  weights: jnp.ndarray, rows: jnp.ndarray,
+                                  row_seeds: jnp.ndarray,
+                                  counter: CounterSpec, mode: str = "sum",
+                                  cpl: int = 1) -> jnp.ndarray:
+    """XLA engine of `window_query_stacked_rows_pallas`: gather the R
+    tenant rings out of the native (T, B, d, w) plane, then run the same
+    in-order bucket reduction.  The gather is XLA-internal (one fused
+    dispatch) — the host never restacks.  Returns (R, N).
+    """
+    return window_query_stacked_ref(tables[rows], keys, weights, row_seeds,
+                                    counter, mode=mode, cpl=cpl)

@@ -568,15 +568,15 @@ def _queue_append_dense_kernel(meta_ref, queue_ref, buf_ref, out_ref):
     """Whole-plane append: every tenant row in ONE grid step.
 
     The full (T, capw) ring is the resident block; the (2, T) fill/count
-    scalars are read from SMEM (unrolled over the small static T) and the
-    masked copy lands all rows at once — the batched-ingest fast path
-    `enqueue_many` hits when a microbatch covers the whole plane.  The
-    single block covers the whole output, so this variant is functional
-    (no in-kernel aliasing): the jit wrapper donates the ring instead.
+    scalars are read from SMEM as whole-row slices (one vector read per
+    scalar row, not a Python loop over T) and the masked copy lands all
+    rows at once — the batched-ingest fast path `enqueue_many` hits when a
+    microbatch covers the whole plane.  The single block covers the whole
+    output, so this variant is functional (no in-kernel aliasing): the jit
+    wrapper donates the ring instead.
     """
-    t, _ = out_ref.shape
-    fill = jnp.stack([meta_ref[0, i] for i in range(t)])
-    count = jnp.stack([meta_ref[1, i] for i in range(t)])
+    fill = meta_ref[0, :]
+    count = meta_ref[1, :]
     cols = jax.lax.broadcasted_iota(jnp.int32, out_ref.shape, 1)
     valid = (cols >= fill[:, None]) & (cols < (fill + count)[:, None])
     out_ref[...] = jnp.where(valid, buf_ref[...], queue_ref[...])
@@ -717,4 +717,66 @@ def window_query_stacked_pallas(tables, keys, weights, *, seeds: tuple,
         out_shape=jax.ShapeDtypeStruct(tiles.shape, jnp.float32),
         interpret=interpret,
     )(tables, tiles, w_tiles)
+    return out.reshape(r, -1)[:, :n]
+
+
+def _window_query_stacked_rows_kernel(meta_ref, tables_ref, keys_ref, w_ref,
+                                      out_ref, *, seeds, width, counter,
+                                      mode, cpl=1):
+    """Row-mapped variant of `_window_query_stacked_kernel`.
+
+    Identical reduction; the scalar-prefetch row map already steered the
+    table BlockSpec at the plane's tenant row, so the body never touches
+    meta itself.
+    """
+    del meta_ref
+    _window_query_stacked_kernel(tables_ref, keys_ref, w_ref, out_ref,
+                                 seeds=seeds, width=width, counter=counter,
+                                 mode=mode, cpl=cpl)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("width", "counter", "seeds", "mode",
+                                    "interpret", "cpl"))
+def window_query_stacked_rows_pallas(tables, keys, weights, rows, *,
+                                     seeds: tuple, width: int,
+                                     counter: CounterSpec, mode: str = "sum",
+                                     interpret: bool = True, cpl: int = 1):
+    """Stacked windowed query straight off a native (T, B, d, w) plane.
+
+    tables (T, B, d, w): the resident window-plane leaf; rows (R,) int32:
+    which tenant rows to query; keys (R, N) / weights (R, B) are indexed
+    by the R *query* rows, not by tenant.  The scalar-prefetch row map
+    steers each grid step's table block at `tables[rows[ri], bi]`, so the
+    R-ring launch reads the plane zero-copy — no `tables[rows]` gather,
+    no host restack.  Reduction is bit-identical to
+    `window_query_stacked_pallas(tables[rows], ...)`.  Returns (R, N).
+    """
+    if mode not in ("sum", "max"):
+        raise ValueError(f"unknown window query mode {mode!r}")
+    _, b, d, sw = tables.shape
+    r, n = keys.shape
+    tiles, padded = _pad_tiles_2d(keys.astype(jnp.uint32), 0)
+    w_tiles = jnp.broadcast_to(weights.astype(jnp.float32)[:, :, None],
+                               (r, b, LANES))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r, padded // CHUNK, b),
+        in_specs=[
+            pl.BlockSpec((1, 1, d, sw),
+                         lambda ri, ci, bi, meta: (meta[ri], bi, 0, 0)),
+            pl.BlockSpec((1, SUBLANES, LANES),
+                         lambda ri, ci, bi, meta: (ri, ci, 0)),
+            pl.BlockSpec((1, 1, LANES), lambda ri, ci, bi, meta: (ri, bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, SUBLANES, LANES),
+                               lambda ri, ci, bi, meta: (ri, ci, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_window_query_stacked_rows_kernel, seeds=seeds,
+                          width=width, counter=counter, mode=mode, cpl=cpl),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(tiles.shape, jnp.float32),
+        interpret=interpret,
+    )(rows.astype(jnp.int32), tables, tiles, w_tiles)
     return out.reshape(r, -1)[:, :n]

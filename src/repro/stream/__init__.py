@@ -15,14 +15,15 @@ from repro.stream.window import (DecayedSketch, WindowSpec, WindowedSketch,
                                  window_advance_steps, window_advance_to,
                                  window_init, window_query,
                                  window_query_many, window_rotate,
-                                 window_update, window_weights)
+                                 window_update, window_weights,
+                                 window_weights_stacked)
 from repro.stream.service import CountService, TenantPlane, WindowPlane
 
 __all__ = [
     "WindowSpec", "WindowedSketch", "window_init", "window_update",
     "window_rotate", "window_advance_steps", "window_advance_to",
-    "window_query", "window_query_many", "window_weights", "interval_epoch",
-    "interval_lag",
+    "window_query", "window_query_many", "window_weights",
+    "window_weights_stacked", "interval_epoch", "interval_lag",
     "DecayedSketch", "decay", "decayed_init", "decayed_rotate",
     "decayed_update", "decayed_query",
     "CountService", "TenantPlane", "WindowPlane",

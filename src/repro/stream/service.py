@@ -14,10 +14,14 @@ on geometry.  `CountService` is therefore a registry of **planes**:
     one launch, and `query_all` fans across planes and reassembles the
     per-tenant dict;
   * time-scoped tenants register with a `WindowSpec` and live in a
-    `WindowPlane` of ring-backed `WindowedSketch`es: `enqueue(name, keys,
-    ts=...)` drives watermark rotation from event time
-    (`window_advance_to`), and flushes land every window tenant's active
-    bucket with one fused launch.
+    `WindowPlane` storing every tenant's bucket ring natively as ONE
+    resident (T, B, d, w) device leaf (per-tenant `WindowedSketch`es are
+    views sliced at the API edge): `enqueue(name, keys, ts=...)` drives
+    watermark rotation from event time — all crossing tenants rotate in
+    ONE masked dispatch (`ops.window_advance_rows`) — and a flush
+    reshapes the leaf to (T*B, d, w) (free) and lands every pending
+    tenant's active bucket through the row-mapped fused kernel with the
+    leaf donated and aliased in place: zero host-side ring restacks.
 
 The ingest queue is **device-resident**: each plane owns a (T, capw)
 uint32 ring appended by `kernels.ops.queue_append` — ONE scatter-append
@@ -50,10 +54,11 @@ refresh with every flush epoch for free (`core/admission.admit_tracked`).
 Queries are read-your-writes: they flush pending events first.  The whole
 service (tables + rings + fill mirrors + RNG lane + stats + trackers +
 admission registry) snapshots and restores via `train/checkpoint`; the
-manifest metadata records the plane layout (schema v4 — v2 adds
-multi-plane, v3 the tracker state, v4 the admission policies) and restore
-still accepts v3, v2 (cold trackers), and the v1 single-plane layout of
-earlier checkpoints; `restore(track_top=K')` re-arms the heaps at a
+manifest metadata records the plane layout (schema v7 — v2 adds
+multi-plane, v3 the tracker state, v4 the admission policies, v5 the
+metrics snapshot, v6 the packed-storage flag, v7 the native window leaf)
+and restore still accepts every earlier version down to the v1
+single-plane layout; `restore(track_top=K')` re-arms the heaps at a
 different width (shrink keeps the best K', grow cold-masks new slots).
 """
 from __future__ import annotations
@@ -374,15 +379,25 @@ class TenantPlane(_TrackerMixin, _TelemetryMixin):
 
 
 class WindowPlane(_TrackerMixin, _TelemetryMixin):
-    """Watermark-windowed tenants sharing one WindowSpec.
+    """Watermark-windowed tenants sharing one WindowSpec, stored natively
+    as ONE resident (T, B, d, w) device leaf.
 
-    Each tenant owns a ring-backed `WindowedSketch`; ingest buffers in the
-    shared device ring and a flush gathers every tenant's ACTIVE bucket
-    into a (T, d, w) stack for one fused update launch, then scatters the
-    buckets back.  Event time (`ts`) drives rotation: crossing an interval
-    boundary flushes buffered events into their own interval's bucket
-    first, then advances the ring (so bucket b still holds exactly the
-    events of one interval, as in the single-tenant watermark path).
+    Per-tenant `WindowedSketch`es are sliced views at the API edge
+    (`win_view` / the `wins` property); every hot-path operation runs on
+    the stacked leaf directly.  A flush reshapes the leaf (T, B, d, w) ->
+    (T*B, d, w) — free, no copy — and lands the R pending tenants' events
+    in their active buckets (flat row `tenant*B + cursor`) through the
+    row-mapped fused kernel with the leaf DONATED and aliased in place:
+    zero host-side ring restacks, unlisted tenants' cells persist.  The
+    tracker refresh reads the leaf through the row-mapped stacked window
+    query, and watermark rotation clears every crossing tenant's expired
+    buckets in ONE masked device op (`ops.window_advance_rows`) instead
+    of one dispatch per tenant.  Event time (`ts`) drives rotation:
+    crossing an interval boundary flushes buffered events into their own
+    interval's bucket first, then advances the ring (so bucket b still
+    holds exactly the events of one interval, as in the single-tenant
+    watermark path).  Cursors/watermarks are host mirrors — the control
+    path never reads a device scalar back.
     """
 
     def __init__(self, wspec: w.WindowSpec, queue_capacity: int,
@@ -390,18 +405,30 @@ class WindowPlane(_TrackerMixin, _TelemetryMixin):
                  metrics: Optional[obs.MetricsRegistry] = None,
                  tracer: Optional[obs.Tracer] = None, label: str = "w0"):
         self.wspec = wspec
-        self.wins: list[w.WindowedSketch] = []
+        s = wspec.sketch
+        # the native window leaf: (T, B, d, w_storage), all tenants' rings
+        self.tables = jnp.zeros((0, wspec.buckets, s.depth, s.storage_width),
+                                s.storage_dtype)
+        # host mirror of each tenant's active-bucket cursor (rotation is
+        # host-deterministic, so flush/rotation never read device scalars)
+        self.cursors = np.zeros((0,), np.int32)
         self.ring = _DeviceRing(queue_capacity)
         self.rng = _RngLane(seed)
         self.names: list[str] = []
-        # host mirror of each ring's watermark interval (the device epoch
-        # leaf is kept in lockstep): enqueue-time watermark checks must not
-        # read a device scalar back on the ingest hot path
+        # host mirror of each ring's watermark interval: enqueue-time
+        # watermark checks must not read a device scalar back on the
+        # ingest hot path
         self.epochs: list[Optional[int]] = []
         self._init_tracker(track_top)
         self._init_telemetry(metrics, tracer, label)
         self._m_rotations = self.metrics.counter("plane_rotations",
                                                  plane=label)
+        # one masked device op per advance_many that rotated anything —
+        # the gauge pair that proves multi-tenant rotation is ONE dispatch
+        self._m_rotation_dispatches = self.metrics.counter(
+            "rotation_dispatches", plane=label)
+        self._g_leaf_bytes = self.metrics.gauge("window_leaf_bytes",
+                                                plane=label)
         # per-tenant watermark gauges, cached so a timestamped enqueue
         # costs two attribute pokes, not a registry lookup
         self._g_epoch: list = []
@@ -415,12 +442,35 @@ class WindowPlane(_TrackerMixin, _TelemetryMixin):
     def queue_capacity(self) -> int:
         return self.ring.capacity
 
+    def win_view(self, row: int) -> w.WindowedSketch:
+        """One tenant's ring as a `WindowedSketch` view (API edge only:
+        snapshot inspection, per-tenant query/merge — the hot paths stay
+        on the stacked leaf)."""
+        ep = self.epochs[row]
+        return w.WindowedSketch(
+            tables=self.tables[row],
+            cursor=jnp.asarray(self.cursors[row], jnp.int32),
+            spec=self.wspec,
+            epoch=None if ep is None else jnp.asarray(ep, jnp.int32))
+
+    @property
+    def wins(self) -> list:
+        """Per-tenant `WindowedSketch` views (read-only convenience; the
+        plane's state of record is the stacked leaf + host mirrors)."""
+        return [self.win_view(r) for r in range(len(self.names))]
+
     def add(self, name: str) -> int:
-        self.wins.append(w.window_init(self.wspec))
+        s = self.spec
+        zero = jnp.zeros((1, self.wspec.buckets, s.depth, s.storage_width),
+                         s.storage_dtype)
+        self.tables = jnp.concatenate([self.tables, zero], axis=0)
+        self.cursors = np.concatenate(
+            [self.cursors, np.zeros((1,), np.int32)])
         self.names.append(name)
         self.epochs.append(None)
         self._grow_tracker()
         self._g_tenants.set(len(self.names))
+        self._g_leaf_bytes.set(self.tables.size * self.tables.dtype.itemsize)
         self._g_epoch.append(self.metrics.gauge("watermark_epoch",
                                                 plane=self.label, tenant=name))
         self._g_lag.append(self.metrics.gauge("watermark_lag",
@@ -431,56 +481,81 @@ class WindowPlane(_TrackerMixin, _TelemetryMixin):
         return int(self.ring.fill.sum())
 
     def advance(self, row: int, ts, flush_cb) -> None:
-        """Advance tenant `row`'s watermark to own `ts`, flushing first if
-        buffered events would otherwise leak into the new interval.
+        """Advance one tenant's watermark to own `ts` (see `advance_many`)."""
+        self.advance_many([(row, ts)], flush_cb)
 
-        The watermark comparison runs against the host epoch mirror, so a
-        same-interval enqueue (the common case) costs no device work and
-        no read-back; a boundary crossing advances the ring with the
-        traced `window_advance_steps` (the device epoch leaf advances in
-        lockstep, still without a read-back)."""
-        target = w.interval_epoch(self.wspec, ts)
-        have = self.epochs[row]
-        if have is None:
-            self.wins[row] = dataclasses.replace(
-                self.wins[row], epoch=jnp.asarray(target, jnp.int32))
-            self.epochs[row] = target
-            self._g_epoch[row].set(target)
+    def advance_many(self, items, flush_cb) -> None:
+        """Advance tenants' watermarks to own their timestamps, flushing
+        first if buffered events would otherwise leak into new intervals.
+
+        items: [(row, ts)] pairs.  Watermark comparisons run against the
+        host epoch mirror, so same-interval enqueues (the common case)
+        cost no device work and no read-back.  All boundary crossings are
+        collected and applied to the stacked leaf in ONE masked rotation
+        dispatch (`ops.window_advance_rows`, steps == 0 rows untouched) —
+        multi-tenant rotation no longer pays one `window_advance_steps`
+        per tenant.  If any rotating row has buffered fill, everything
+        flushes ONCE before the rotation (into the pre-rotation buckets,
+        exactly as the per-tenant path did)."""
+        t = len(self.names)
+        steps = np.zeros(t, np.int32)
+        for row, ts in items:
+            target = w.interval_epoch(self.wspec, ts)
+            have = self.epochs[row]
+            if have is None:
+                self.epochs[row] = target
+                self._g_epoch[row].set(target)
+                continue
+            have += int(steps[row])  # earlier items in this same call
+            if target < have:
+                raise ValueError(
+                    f"non-monotone watermark: ts {ts} (interval {target}) "
+                    f"is behind the ring's watermark interval {have}")
+            # the lag gauge reads how far ahead of the standing watermark
+            # this batch arrived (0 = same interval); its high-water is the
+            # worst rotation fast-forward the tenant has ever forced
+            self._g_lag[row].set(target - have)
+            steps[row] += target - have
+        rot = np.flatnonzero(steps).astype(np.int32)
+        if rot.size == 0:
             return
-        if target < have:
-            raise ValueError(
-                f"non-monotone watermark: ts {ts} (interval {target}) is "
-                f"behind the ring's watermark interval {have}")
-        # the lag gauge reads how far ahead of the standing watermark this
-        # batch arrived (0 = same interval); its high-water is the worst
-        # rotation fast-forward the tenant has ever forced
-        self._g_lag[row].set(target - have)
-        if target == have:
-            return
-        if self.ring.fill[row]:
-            flush_cb()  # rebinds self.wins[row]: re-read before advancing
-        self.wins[row] = w.window_advance_steps(self.wins[row],
-                                                target - have)
-        self.epochs[row] = target
-        self._g_epoch[row].set(target)
-        self._m_rotations.inc(target - have)
+        if self.ring.fill[rot].any():
+            flush_cb()  # rebinds self.tables: rotation reads the new leaf
+        with self.tracer.span("window_rotate", plane=self.label,
+                              rows=int(rot.size)) as sp:
+            self.tables = sp.sync(ops.window_advance_rows(
+                self.tables, self.cursors, steps))
+        self.cursors = (self.cursors + steps) % self.wspec.buckets
+        for row in rot:
+            self.epochs[row] += int(steps[row])
+            self._g_epoch[row].set(self.epochs[row])
+        self._m_rotations.inc(int(steps.sum()))
+        self._m_rotation_dispatches.inc()
 
     def flush(self, dense: bool = False) -> int:
-        """Land every pending tenant's events in its ACTIVE bucket.
+        """Land every pending tenant's events in its ACTIVE bucket —
+        straight on the native leaf, zero restack copies.
 
-        Only the R rows with pending fill are gathered: their active
-        buckets stack into an (R, d, w) array for one fused launch, and
-        the uniforms grid spans the full plane (`uniform_rows`), so the
-        result is bit-identical to the dense whole-plane flush
-        (`dense=True`) that stacked every tenant's bucket.  The tracker
-        refresh scores candidates through `window_query`, so rotation,
-        expiry, and decay reorder the heap alongside the new mass.
+        The (T, B, d, w) leaf reshapes to (T*B, d, w) — free, same buffer
+        — and the R pending tenants' batches land at flat rows
+        `tenant*B + cursor` through the row-mapped fused kernel
+        (`ops.update_rows`) with the leaf DONATED and in/out aliased:
+        no active-bucket gather, no per-tenant scatter-back loop, and
+        unlisted rows' cells persist by the aliasing contract.  The
+        uniforms grid spans the full tenant plane (`uniform_rows`), so
+        the result is bit-identical to the dense restack flush
+        (`dense=True` — the legacy gather/`update_many`/scatter pipeline,
+        kept as the parity oracle and benchmark baseline).  The tracker
+        refresh scores candidates through the row-mapped stacked window
+        query, so rotation, expiry, and decay reorder the heap alongside
+        the new mass.
         """
         pending = self.pending()
         if pending == 0:
             return 0
         rng = self.rng.next()
-        t = len(self.wins)
+        t = len(self.names)
+        b = self.wspec.buckets
         rows = (np.arange(t, dtype=np.int32) if dense
                 else np.flatnonzero(self.ring.fill).astype(np.int32))
         tr = self.tracer
@@ -489,47 +564,56 @@ class WindowPlane(_TrackerMixin, _TelemetryMixin):
             with tr.span("queue_gather", plane=self.label) as sp:
                 keys, weights = sp.sync(
                     self.ring.live_slice(None if dense else rows))
-            stack = jnp.stack([
-                jax.lax.dynamic_index_in_dim(self.wins[r].tables,
-                                             self.wins[r].cursor, 0,
-                                             keepdims=False)
-                for r in rows])
-            with tr.span("window_update", plane=self.label) as sp:
-                stack = sp.sync(ops.update_many(stack, self.spec, keys, rng,
-                                                weights=weights,
-                                                uniform_rows=(t, rows)))
-            for i, r in enumerate(rows):
-                win = self.wins[r]
-                tables = jax.lax.dynamic_update_index_in_dim(
-                    win.tables, stack[i], win.cursor, 0)
-                self.wins[r] = w.WindowedSketch(tables=tables,
-                                                cursor=win.cursor,
-                                                spec=win.spec,
-                                                epoch=win.epoch)
+            if dense:
+                # legacy restack pipeline: gather active buckets into an
+                # (R, d, w) stack, dense launch, scatter each bucket back
+                stack = jnp.stack([self.tables[r, self.cursors[r]]
+                                   for r in rows])
+                stack = ops.update_many(stack, self.spec, keys, rng,
+                                        weights=weights,
+                                        uniform_rows=(t, rows))
+                tables = self.tables
+                for i, r in enumerate(rows):
+                    tables = tables.at[r, self.cursors[r]].set(stack[i])
+                self.tables = tables
+            else:
+                flat = self.tables.reshape((t * b,) + self.tables.shape[2:])
+                flat_rows = rows * b + self.cursors[rows]
+                with tr.span("window_update", plane=self.label) as sp:
+                    flat = sp.sync(ops.update_rows(
+                        flat, self.spec, keys, rng, flat_rows,
+                        weights=weights, uniform_rows=(t, rows),
+                        donate=True))
+                self.tables = flat.reshape((t, b) + flat.shape[1:])
             if self.tracker is not None:
                 with tr.span("tracker_refresh", plane=self.label) as sp:
                     self._refresh_topk(rows, keys, weights)
                     sp.sync(self.tracker.keys)
             self.ring.reset()
-            ep.sync([win.tables for win in self.wins])
+            ep.sync(self.tables)
         self._note_flush(pending)
         return pending
 
     def _refresh_topk(self, rows, keys, weights) -> None:
         """Stacked heap refresh for the flushed window tenants: candidates
-        are scored through the stacked multi-ring window query against
-        each tenant's CURRENT ring, so expired buckets pull candidates
-        down and fresh mass pushes them up in the same re-selection — ONE
-        query launch (`window_query_many`) regardless of how many tenants
-        flushed, each ring carrying its own expiry/decay weight row.
+        are scored through the row-mapped stacked multi-ring window query
+        against the native leaf, so expired buckets pull candidates down
+        and fresh mass pushes them up in the same re-selection — ONE query
+        launch regardless of how many tenants flushed, each ring carrying
+        its own weight row (`window_weights_stacked` over the cursor
+        mirror, one evaluation for all rings).
         """
         rows_d = jnp.asarray(rows)
+        wts = w.window_weights_stacked(self.cursors[rows], self.wspec.buckets)
         new = topk.refresh_stacked(
             self._tracker_rows(rows_d), keys, weights > 0,
-            lambda ck: w.window_query_many([self.wins[r] for r in rows], ck))
+            lambda ck: ops.window_query_stacked(self.tables, self.spec, ck,
+                                                wts, rows=rows))
         self._scatter_tracker(rows_d, new)
 
-    def topk_row(self, row: int, **window_kw):
+    def topk_row(self, row: int, n_buckets: Optional[int] = None,
+                 mode: str = "sum", gamma: Optional[float] = None,
+                 engine: str = "auto"):
         """(keys, estimates, filled) of one tenant's heap.
 
         Window estimates move without any flush (watermark rotation,
@@ -538,19 +622,24 @@ class WindowPlane(_TrackerMixin, _TelemetryMixin):
         / gamma through the stacked query's weight row — and persists the
         re-ordered heap before answering.
         """
-        rows = jnp.asarray([row])
+        rows = np.asarray([row], np.int32)
+        wts = w.window_weights_stacked(self.cursors[rows],
+                                       self.wspec.buckets,
+                                       n_buckets=n_buckets, gamma=gamma)
+        rows_d = jnp.asarray(rows)
         new = topk.refresh_stacked(
-            self._tracker_rows(rows), jnp.zeros((1, 0), jnp.uint32), None,
-            lambda ck: w.window_query_many([self.wins[row]], ck,
-                                           **window_kw))
-        self._scatter_tracker(rows, new)
+            self._tracker_rows(rows_d), jnp.zeros((1, 0), jnp.uint32), None,
+            lambda ck: ops.window_query_stacked(self.tables, self.spec, ck,
+                                                wts, mode=mode,
+                                                engine=engine, rows=rows))
+        self._scatter_tracker(rows_d, new)
         tk = self.tracker
         return (np.asarray(tk.keys[row]), np.asarray(tk.estimates[row]),
                 np.asarray(tk.filled[row]))
 
     def query_row(self, row: int, keys: jnp.ndarray, **kw) -> jnp.ndarray:
         """Window estimate for one tenant (fused in-kernel bucket reduce)."""
-        return w.window_query(self.wins[row], keys, **kw)
+        return w.window_query(self.win_view(row), keys, **kw)
 
 
 class CountService:
@@ -719,10 +808,10 @@ class CountService:
         self.flush()
         plane, row = self._lookup(name)
         if isinstance(plane, WindowPlane):
-            win = plane.wins[row]
-            table = jax.lax.dynamic_index_in_dim(win.tables, win.cursor, 0,
-                                                 keepdims=False)
-            return Sketch(table=table, spec=plane.spec)
+            # host cursor mirror: the active bucket is a static slice of
+            # the native leaf, no dynamic_index dispatch
+            return Sketch(table=plane.tables[row, plane.cursors[row]],
+                          spec=plane.spec)
         return Sketch(table=plane.tables[row], spec=plane.spec)
 
     # ---- ingest ----
@@ -772,15 +861,24 @@ class CountService:
         overflow: list[tuple[str, np.ndarray]] = []
         with self._audited(), \
                 self.tracer.span("enqueue_many", tenants=len(events)) as sp:
-            for name, keys in events.items():
-                plane, row = self._lookup(name)
-                keys = _as_keys(keys)
-                if ts is not None:
+            if ts is not None:
+                # batch the watermark advances per plane: every boundary
+                # crossing in this call rotates in ONE masked dispatch
+                # (`WindowPlane.advance_many`) instead of one per tenant
+                adv: dict[int, tuple[object, list]] = {}
+                for name in events:
+                    plane, row = self._lookup(name)
                     if not isinstance(plane, WindowPlane):
                         raise ValueError(f"tenant {name!r} is not windowed; "
                                          "register with a WindowSpec to use "
                                          "ts")
-                    plane.advance(row, ts, self.flush)
+                    _, items = adv.setdefault(id(plane), (plane, []))
+                    items.append((row, ts))
+                for plane, items in adv.values():
+                    plane.advance_many(items, self.flush)
+            for name, keys in events.items():
+                plane, row = self._lookup(name)
+                keys = _as_keys(keys)
                 if keys.size == 0:
                     continue
                 if keys.size > plane.ring.free(row):
@@ -943,9 +1041,14 @@ class CountService:
 
     def _meta(self) -> dict:
         meta = {
-            # v6: spec metadata records the packed-storage flag (pre-v6
-            # readers ignore it; pre-v6 manifests restore as packed=False)
-            "version": 6,
+            # v7: the window leaf is the plane's native (T, B, d, w)
+            # array + host cursor/epoch mirrors.  Leaf SHAPES are
+            # unchanged from v6 (which stacked per-tenant rings into the
+            # same layout at snapshot time), so v6-and-earlier
+            # checkpoints restore into the native plane with no
+            # conversion.  v6 added the packed-storage flag (pre-v6
+            # manifests restore as packed=False).
+            "version": 7,
             "queue_capacity": self.queue_capacity,
             "seed": self.seed,
             "track_top": self.track_top,
@@ -998,11 +1101,14 @@ class CountService:
             planes.append(leaf)
         windows = []
         for p in self._wplanes.values():
-            leaf = {"tables": jnp.stack([x.tables for x in p.wins]),
-                    "cursor": jnp.stack([x.cursor for x in p.wins]),
+            # v7: the native leaf goes straight into the checkpoint —
+            # no per-tenant restack; cursor/epoch come from the host
+            # mirrors (same (T,) shapes v6 produced by stacking)
+            leaf = {"tables": p.tables,
+                    "cursor": jnp.asarray(p.cursors, jnp.int32),
                     "epoch": jnp.asarray([
-                        -1 if x.epoch is None else int(x.epoch)
-                        for x in p.wins], jnp.int32),
+                        -1 if e is None else int(e)
+                        for e in p.epochs], jnp.int32),
                     "queue": p.ring.queue,
                     "fill": jnp.asarray(p.ring.fill)}
             if with_topk:
@@ -1021,7 +1127,10 @@ class CountService:
                 packed: Optional[bool] = None) -> "CountService":
         """Rebuild a service (registry + planes + rings) from a snapshot.
 
-        Accepts the v6 manifest (packed-storage flag), v5 (metrics
+        Accepts the v7 manifest (native (T, B, d, w) window leaf — same
+        leaf shapes v6 wrote, so v6-and-earlier window planes restore
+        into the native layout with no conversion), v6 (packed-storage
+        flag), v5 (metrics
         snapshot), v4 (admission plane), v3 (multi-plane + tracker state),
         the v2 multi-plane layout, and the original v1 single-plane layout
         (whose host queue is replayed into the device ring).  Pre-v5
@@ -1081,13 +1190,12 @@ class CountService:
                 p.tracker = topk.TopK(**leaves["topk"])
         for p, wm, leaves in zip(svc._wplanes.values(), meta["windows"],
                                  tree["windows"]):
-            for i in range(len(p.wins)):
+            # v7 saves the native leaf; v6-and-earlier saved identical
+            # shapes (stacked per-tenant rings), so both land here as-is
+            p.tables = leaves["tables"]
+            p.cursors = np.asarray(leaves["cursor"], np.int32)
+            for i in range(len(p.names)):
                 epoch = int(leaves["epoch"][i])
-                p.wins[i] = w.WindowedSketch(
-                    tables=leaves["tables"][i], cursor=leaves["cursor"][i],
-                    spec=p.wspec,
-                    epoch=None if epoch < 0 else jnp.asarray(epoch,
-                                                             jnp.int32))
                 p.epochs[i] = None if epoch < 0 else epoch
             p.ring.queue = leaves["queue"]
             p.ring.fill = np.asarray(leaves["fill"], np.int64)
@@ -1133,11 +1241,11 @@ class CountService:
             new_w = (wspec if new_sk == wspec.sketch
                      else dataclasses.replace(wspec, sketch=new_sk))
             if new_w != wspec:
-                for i, win in enumerate(p.wins):
-                    tables = sk.storage_table(
-                        sk.logical_table(win.tables, wspec.sketch), new_sk)
-                    p.wins[i] = dataclasses.replace(win, tables=tables,
-                                                    spec=new_w)
+                # one whole-leaf repack: logical/storage_table act on the
+                # trailing (d, w) axes, so the (T, B, d, w) leaf converts
+                # in a single fused computation
+                p.tables = sk.storage_table(
+                    sk.logical_table(p.tables, wspec.sketch), new_sk)
                 p.wspec = new_w
             wplanes[new_w] = p
         self._wplanes = wplanes

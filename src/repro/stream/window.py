@@ -208,7 +208,28 @@ def _bucket_ages(win: WindowedSketch) -> jnp.ndarray:
 def _window_weights(win: WindowedSketch, k: int, gamma: float | None
                     ) -> jnp.ndarray:
     """(B,) per-bucket estimate weights: 0 past the window, else gamma^age."""
-    ages = _bucket_ages(win)
+    return window_weights_stacked(win.cursor[None], win.spec.buckets,
+                                  n_buckets=k, gamma=gamma)[0]
+
+
+def window_weights_stacked(cursors, buckets: int,
+                           n_buckets: int | None = None,
+                           gamma: float | None = None) -> jnp.ndarray:
+    """(R, B) per-bucket estimate weights for R rings of one geometry.
+
+    cursors (R,) int32: each ring's active bucket; `buckets` the shared
+    ring depth B.  One liveness/gamma^age evaluation covers every ring —
+    the window plane feeds its host cursor mirror through this on each
+    tracker refresh instead of looping `window_weights` ring by ring.
+    Row r is bit-identical to `window_weights` on a ring whose cursor is
+    `cursors[r]` (same elementwise ops, stacked).
+    """
+    k = buckets if n_buckets is None else n_buckets
+    if not 1 <= k <= buckets:
+        raise ValueError(f"window of {k} buckets outside ring of {buckets}")
+    cursors = jnp.asarray(cursors, jnp.int32)
+    ages = (cursors[:, None] - jnp.arange(buckets, dtype=jnp.int32)[None, :]
+            ) % buckets
     live = (ages < k).astype(jnp.float32)
     if gamma is None:
         return live
@@ -271,7 +292,9 @@ def window_query_many(wins: list, keys: jnp.ndarray,
         raise ValueError("window_query_many needs rings sharing one "
                          f"WindowSpec; got {sorted({str(x.spec) for x in wins})}")
     rings = jnp.stack([x.tables for x in wins])
-    weights = jnp.stack([window_weights(x, n_buckets, gamma) for x in wins])
+    weights = window_weights_stacked(
+        jnp.stack([x.cursor for x in wins]), wins[0].spec.buckets,
+        n_buckets=n_buckets, gamma=gamma)
     return ops.window_query_stacked(rings, wins[0].spec.sketch, keys,
                                     weights, mode=mode, engine=engine)
 
@@ -305,33 +328,55 @@ class DecayedSketch:
     """Recency-weighted counts: events of age a (in rotations) carry weight
     gamma^a.  Ring-backed lazy construction: the ring's buckets hold the
     last B rotations' events *undecayed* and queries weight them by
-    gamma^age in the fused window kernel; `tail` is one sketch holding all
-    mass older than the ring, pre-aggregated so that gamma^B * decode(tail)
+    gamma^age in the fused window kernel; the `tail` bucket holds all mass
+    older than the ring, pre-aggregated so that gamma^B * decode(tail)
     is its query-time contribution.  Updates therefore never decode or
     re-encode a table — only `decayed_rotate` does, on the single expiring
-    bucket.  Queries answer "decayed count", e.g. for trending scores."""
+    bucket.  Queries answer "decayed count", e.g. for trending scores.
 
-    win: WindowedSketch  # ring of the last B rotations (age 0 = active)
-    tail: jnp.ndarray    # (d, w) counters: every rotation older than the ring
+    Storage is ONE native (B+1, d, w) device leaf: ring buckets at [:B],
+    the tail at [B].  `decayed_query` feeds it to the fused window kernel
+    directly (the tail rides as bucket B+1 with weight gamma^B) — no
+    per-query ring/tail concatenation; `win`/`tail` are sliced views for
+    the API edge."""
+
+    tables: jnp.ndarray  # (B+1, d, w): last B rotations' buckets + tail
+    cursor: jnp.ndarray  # () int32: active (age-0) ring bucket
+    spec: WindowSpec     # static ring geometry (B buckets)
     gamma: float         # static
 
     def tree_flatten(self):
-        return (self.win, self.tail), self.gamma
+        return (self.tables, self.cursor), (self.spec, self.gamma)
 
     @classmethod
-    def tree_unflatten(cls, gamma, leaves):
-        return cls(win=leaves[0], tail=leaves[1], gamma=gamma)
+    def tree_unflatten(cls, aux, leaves):
+        spec, gamma = aux
+        return cls(tables=leaves[0], cursor=leaves[1], spec=spec,
+                   gamma=gamma)
+
+    @property
+    def win(self) -> WindowedSketch:
+        """Ring view over the leaf's first B buckets."""
+        return WindowedSketch(tables=self.tables[:self.spec.buckets],
+                              cursor=self.cursor, spec=self.spec)
+
+    @property
+    def tail(self) -> jnp.ndarray:
+        """(d, w) view of the older-than-the-ring mass (bucket B)."""
+        return self.tables[self.spec.buckets]
 
 
 def decayed_init(spec: SketchSpec, gamma: float = 0.98,
                  history: int = 8) -> DecayedSketch:
     """`history` = ring depth B: ages 0..B-1 are queried from their own
-    bucket; older mass lives in the shared tail (memory is (B+1) tables)."""
+    bucket; older mass lives in the shared tail (one (B+1, d, w) leaf)."""
     if not 0.0 < gamma <= 1.0:
         raise ValueError("gamma must be in (0, 1]")
-    win = window_init(WindowSpec(sketch=spec, buckets=history))
-    tail = jnp.zeros((spec.depth, spec.storage_width), spec.storage_dtype)
-    return DecayedSketch(win=win, tail=tail, gamma=gamma)
+    wspec = WindowSpec(sketch=spec, buckets=history)
+    tables = jnp.zeros((history + 1, spec.depth, spec.storage_width),
+                       spec.storage_dtype)
+    return DecayedSketch(tables=tables, cursor=jnp.zeros((), jnp.int32),
+                         spec=wspec, gamma=gamma)
 
 
 def decayed_rotate(ds: DecayedSketch, rng: jax.Array) -> DecayedSketch:
@@ -343,18 +388,22 @@ def decayed_rotate(ds: DecayedSketch, rng: jax.Array) -> DecayedSketch:
     (contribution gamma^B * V' at query time).  One decode -> add ->
     stochastic re-encode of a single (d, w) table — unbiased by the same
     `reencode_stochastic` argument as eager `decay`, at 1/update-rate of
-    its cost.
+    its cost.  Both the tail fold and the ring advance land on the one
+    (B+1, d, w) leaf.
     """
-    spec = ds.win.spec.sketch
+    b = ds.spec.buckets
+    spec = ds.spec.sketch
     c = spec.counter
-    expiring = jax.lax.dynamic_index_in_dim(
-        ds.win.tables, (ds.win.cursor + 1) % ds.win.spec.buckets, 0,
-        keepdims=False)
+    nxt = (ds.cursor + 1) % b
+    expiring = jax.lax.dynamic_index_in_dim(ds.tables, nxt, 0, keepdims=False)
     v = (c.decode(sk.logical_table(expiring, spec))
          + jnp.float32(ds.gamma) * c.decode(sk.logical_table(ds.tail, spec)))
     tail = sk.storage_table(c.reencode_stochastic(v, rng).astype(c.dtype),
                             spec)
-    return DecayedSketch(win=window_rotate(ds.win), tail=tail, gamma=ds.gamma)
+    tables = ds.tables.at[b].set(tail)
+    zero = jnp.zeros(tables.shape[1:], tables.dtype)
+    tables = jax.lax.dynamic_update_index_in_dim(tables, zero, nxt, 0)
+    return dataclasses.replace(ds, tables=tables, cursor=nxt)
 
 
 def decayed_update(ds: DecayedSketch, keys: jnp.ndarray, rng: jax.Array,
@@ -369,8 +418,13 @@ def decayed_update(ds: DecayedSketch, keys: jnp.ndarray, rng: jax.Array,
     r_rot, r_upd = jax.random.split(rng)
     if age_step:
         ds = decayed_rotate(ds, r_rot)
-    win = window_update(ds.win, keys, r_upd, weights=weights)
-    return DecayedSketch(win=win, tail=ds.tail, gamma=ds.gamma)
+    active = jax.lax.dynamic_index_in_dim(ds.tables, ds.cursor, 0,
+                                          keepdims=False)
+    s = sk.update_batched(Sketch(table=active, spec=ds.spec.sketch), keys,
+                          r_upd, weights=weights)
+    tables = jax.lax.dynamic_update_index_in_dim(ds.tables, s.table,
+                                                 ds.cursor, 0)
+    return dataclasses.replace(ds, tables=tables)
 
 
 def decayed_query(ds: DecayedSketch, keys: jnp.ndarray,
@@ -378,13 +432,15 @@ def decayed_query(ds: DecayedSketch, keys: jnp.ndarray,
     """Recency-weighted estimates: ONE fused launch over B buckets + tail.
 
     The tail rides the same kernel as bucket B+1 with weight gamma^B, so
-    lazy decay costs exactly one extra grid step over a plain window query.
+    lazy decay costs exactly one extra grid step over a plain window
+    query — and the native (B+1, d, w) leaf goes to the kernel as-is,
+    zero-copy.
     """
-    b = ds.win.spec.buckets
+    b = ds.spec.buckets
     g = jnp.float32(ds.gamma)
+    ages = (ds.cursor - jnp.arange(b, dtype=jnp.int32)) % b
     weights = jnp.concatenate([
-        g ** _bucket_ages(ds.win).astype(jnp.float32),
+        g ** ages.astype(jnp.float32),
         g[None] ** b])
-    tables = jnp.concatenate([ds.win.tables, ds.tail[None]], axis=0)
-    return ops.window_query_tables(tables, ds.win.spec.sketch, keys, weights,
+    return ops.window_query_tables(ds.tables, ds.spec.sketch, keys, weights,
                                    mode="sum", engine=engine)

@@ -197,7 +197,7 @@ def test_window_tracker_refresh_is_one_query_launch(flushed):
     ops.reset_launch_counts()
     svc.flush()
     got = ops.launch_counts()
-    assert got == {"update_many": 1, "window_query_stacked": 1}, got
+    assert got == {"update_rows": 1, "window_query_stacked": 1}, got
 
 
 def test_windowed_tracked_plane_epoch_matches_dense_mid_rotation():
