@@ -27,6 +27,13 @@ Three questions:
      the record (no threshold: the shared update dominates in interpret
      mode, so the ratio compresses toward 1 by construction) plus a
      bit-equality check that both queue designs land identical tables.
+  3. FLUSH TRIM — skewed fills (one tenant at 4 kernel-CHUNKs, seven at
+     half a CHUNK): the per-row trim groups active rows by their OWN
+     CHUNK-rounded fill (`tiering.fill_classes`) and flushes each class
+     at its class width, vs the old batch-max flush that inflates every
+     row's gather + update to the fullest row's width.  Both land real
+     fused updates, timed interleaved; the ratio prices the wasted
+     weight-0 column work the trim removes.
 
 The device path runs under `jax.transfer_guard_device_to_host("disallow")`,
 which turns ANY read-back of the ring (or anything else) during
@@ -83,6 +90,26 @@ METHODOLOGY = {
                   "final tables are asserted identical), so this column "
                   "prices the whole ingest path rather than the "
                   "refactor's delta.",
+    "flush_trim": "skewed fills on one 8-tenant device-ring plane: tn0 "
+                  "enqueues 4 kernel-CHUNKs per cycle, tn1..tn7 enqueue "
+                  "512 keys each (rounding to a 1-CHUNK class).  per_class "
+                  "= the service flush, which groups active rows by their "
+                  "own CHUNK-rounded fill (tiering.fill_classes) and "
+                  "issues one row-mapped ops.update_rows per class at the "
+                  "class width (key-columns processed: 1x4096 + 7x1024 = "
+                  "11264); batch_max = the pre-trim flush, hand-rolled "
+                  "from the same ring primitives (one "
+                  "ops.flush_rows_inputs gather + one ops.update_rows at "
+                  "the batch-max width: 8x4096 = 32768 key-columns, the "
+                  "extra ones riding along as weight-0 no-ops).  Real "
+                  "fused updates in both cycles, interleaved pairs, "
+                  "median per-pair ratio; the tables are NOT asserted "
+                  "bit-equal across the two estimators because the parity "
+                  "uniforms grid is shaped by the dispatch (weight-0 "
+                  "columns are no-ops either way, but the surviving "
+                  "keys' Morris draws differ) — both are valid CMLS "
+                  "updates of the same stream.  Runs under the same "
+                  "device->host transfer-guard disallow pin.",
     "packed_plane": "uniform end-to-end cycles on two device-ring "
                     "services differing ONLY in table storage (packed "
                     "uint32 lanes vs one cell per lane), timed "
@@ -213,6 +240,46 @@ def _bench_point(spec, t, active, cap, stub_update: bool):
     return td, th, ratio
 
 
+def _trim_point(spec, cap):
+    """Skewed-fill flush: per-class trim vs the batch-max width.
+
+    Same ring, same stream, real updates in both cycles — per_class is
+    the service's own flush (grouped by `tiering.fill_classes`),
+    batch_max re-rolls the pre-trim pipeline from the ring primitives:
+    ONE gather + ONE row-mapped update at the fullest row's CHUNK-rounded
+    width, every other row padded with weight-0 columns.
+    """
+    t = 8
+    names = [f"tn{i}" for i in range(t)]
+    rng = np.random.default_rng(91)
+    big = (rng.zipf(1.3, 4 * ops.CHUNK) % 50_000).astype(np.uint32)
+    small = (rng.zipf(1.3, (t - 1, 512)) % 50_000).astype(np.uint32)
+    events = {names[0]: big,
+              **{n: small[i] for i, n in enumerate(names[1:])}}
+    trim = CountService(spec, tenants=names, queue_capacity=cap, seed=0)
+    base = CountService(spec, tenants=names, queue_capacity=cap, seed=0)
+    bplane = base.planes[0]
+
+    def trim_cycle():
+        trim.enqueue_many(events)
+        trim.flush()
+        jax.block_until_ready(trim.planes[0].tables)
+
+    def batchmax_cycle():
+        base.enqueue_many(events)
+        active = np.flatnonzero(bplane.ring.fill).astype(np.int32)
+        r = bplane.rng.next()
+        keys, weights = bplane.ring.live_slice(rows=active)
+        bplane.tables = ops.update_rows(bplane.tables, bplane.spec, keys,
+                                        r, active, weights=weights)
+        bplane.ring.reset()
+        jax.block_until_ready(bplane.tables)
+
+    with jax.transfer_guard_device_to_host("disallow"):
+        tt, tb, ratio = _paired_cycles(trim_cycle, batchmax_cycle)
+    return tt, tb, ratio
+
+
 def _packed_point(spec_u, spec_p, t, cap):
     """Uniform e2e cycles, packed vs unpacked storage, timed interleaved."""
     names = [f"tn{i}" for i in range(t)]
@@ -264,6 +331,17 @@ def _rows(quick: bool):
                  "us_per_call": round(th * 1e6),
                  "derived": f"speedup_x{ratio:.2f}"},
             ]
+    tt, tb, ratio = _trim_point(spec, cap)
+    trim_cols = 4 * ops.CHUNK + 7 * ops.CHUNK      # per-class key-columns
+    bmax_cols = 8 * 4 * ops.CHUNK                  # batch-max key-columns
+    rows += [
+        {"name": "ingest_trim/per_class_T8",
+         "us_per_call": round(tt * 1e6),
+         "derived": f"key_cols={trim_cols}"},
+        {"name": "ingest_trim/batch_max_T8",
+         "us_per_call": round(tb * 1e6),
+         "derived": f"key_cols={bmax_cols} trim_speedup_x{ratio:.2f}"},
+    ]
     pspec = dataclasses.replace(spec, packed=True)
     for t in ([8] if quick else [8, 16]):
         tp, tu, ratio = _packed_point(spec, pspec, t, cap)

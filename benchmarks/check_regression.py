@@ -32,7 +32,11 @@ storage alike), a windowed plane's flush epoch exactly one row-mapped
 `update_rows` dispatch on the native (T, B, d, w) leaf plus one
 `window_query_stacked` tracker refresh regardless of how many tenants
 flushed, and a multi-tenant watermark rotation exactly one masked
-`window_advance_rows` dispatch.
+`window_advance_rows` dispatch.  bench_tiered records the same kind of
+section for the tiered hot/cold planes: a hot-only tiered flush epoch is
+still exactly one `update_score_rows` dispatch, cold-active tenants add
+exactly one batched `tier_spill`, and a membership swap costs exactly
+one `tier_demote` gather + one `tier_promote` scatter.
 
 ACCURACY is gated the same way as speed: `benchmarks/run.py` scores a
 fixed-seed SLO probe workload (exact shadow counts, ARE by frequency
@@ -53,7 +57,8 @@ import sys
 import time
 
 BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
-SUITES = ["bench_ingest.json", "bench_query.json", "bench_topk.json"]
+SUITES = ["bench_ingest.json", "bench_query.json", "bench_tiered.json",
+          "bench_topk.json"]
 
 
 def calibration_us(reps: int = 9) -> float:
@@ -119,6 +124,37 @@ def audit_launches(doc: dict) -> list[str]:
     return problems
 
 
+def audit_tiered_launches(doc: dict) -> list[str]:
+    """Machine-check the tiered flush-epoch launch claims in bench_tiered.
+
+    The hot path must stay the resident plane's single fused dispatch,
+    and the cold tier's extra traffic must stay batched: one spill for
+    any number of cold-active tenants, one demote gather + one promote
+    scatter for any size of membership swap.
+    """
+    audit = doc.get("launch_audit")
+    if audit is None:
+        return ["no launch_audit section (bench_tiered should record one)"]
+    problems = []
+    for key in ("tiered_flush_hot_only", "tiered_flush_hot_only_packed"):
+        epoch = audit.get(key, {})
+        if epoch != {"update_score_rows": 1}:
+            problems.append(f"{key}: hot-only tiered flush is not the "
+                            f"single fused update+score dispatch: {epoch}")
+    mixed = audit.get("tiered_flush_mixed", {})
+    if mixed != {"tier_spill": 1, "update_score_rows": 1}:
+        problems.append("tiered_flush_mixed: cold-active tenants must add "
+                        "exactly ONE batched tier_spill to the fused "
+                        f"epoch: {mixed}")
+    swap = audit.get("tiered_swap_epoch", {})
+    if swap != {"tier_demote": 1, "tier_promote": 1, "tier_spill": 1,
+                "update_score_rows": 1}:
+        problems.append("tiered_swap_epoch: a membership swap must cost "
+                        "exactly one demotion gather + one promotion "
+                        f"scatter on top of the fused epoch: {swap}")
+    return problems
+
+
 def check_accuracy(fresh: dict, baseline: dict, margin: float = 1.25,
                    eps: float = 0.02) -> list[str]:
     """Pure ARE-by-decile envelope check; returns the violations.
@@ -181,17 +217,25 @@ def check(threshold: float) -> int:
         else:
             base_doc = _load(base_path)
             new_doc = _load(new_path)
-            if suite == "bench_topk.json":
-                problems = audit_launches(new_doc)
+            audits = {"bench_topk.json": (
+                          audit_launches,
+                          "flush epoch = 1 fused dispatch, packed and "
+                          "unpacked; window epoch = 1 row-mapped update + "
+                          "1 stacked query; rotation = 1 masked dispatch"),
+                      "bench_tiered.json": (
+                          audit_tiered_launches,
+                          "hot-only tiered epoch = 1 fused dispatch; "
+                          "cold traffic = +1 batched spill; swap = +1 "
+                          "demote gather +1 promote scatter")}
+            if suite in audits:
+                audit_fn, claim = audits[suite]
+                problems = audit_fn(new_doc)
                 for p in problems:
                     print(f"FAIL {suite} launch audit: {p}")
                 if problems:
                     failures.append(suite)
                 else:
-                    print(f"ok {suite}: launch audit (flush epoch = 1 fused "
-                          "dispatch, packed and unpacked; window epoch = "
-                          "1 row-mapped update + 1 stacked query; rotation "
-                          "= 1 masked dispatch)")
+                    print(f"ok {suite}: launch audit ({claim})")
             base = _timed_rows(base_doc)
             new = _timed_rows(new_doc)
             shared = sorted(set(base) & set(new))

@@ -41,8 +41,8 @@ import numpy as np
 
 from benchmarks import (bench_are_counts, bench_batched_divergence,
                         bench_damped_update, bench_ingest, bench_pmi,
-                        bench_query, bench_throughput, bench_topk,
-                        bench_window)
+                        bench_query, bench_throughput, bench_tiered,
+                        bench_topk, bench_window)
 from benchmarks.common import (add_mode_flags, emit, mode_methodology,
                                set_kernel_mode)
 from repro import obs
@@ -58,6 +58,7 @@ SUITES = [
     ("query_plane", bench_query.run),
     ("ingest_plane", bench_ingest.run),
     ("topk_plane", bench_topk.run),
+    ("tiered_plane", bench_tiered.run),
 ]
 
 SLO_SEED = 0

@@ -25,6 +25,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import compat
 
@@ -72,6 +73,37 @@ def pmax_merge_window_stack(tables: jnp.ndarray, spec, axis_names
     (packed storage unpacks around the collective like `pmax_merge`)."""
     states = sk.logical_table(tables, spec)
     return sk.storage_table(jax.lax.pmax(states, axis_names), spec)
+
+
+def tier_assemble(hot_tables: jnp.ndarray, slot_tenant,
+                  cold_tables) -> jnp.ndarray:
+    """Reassemble a tiered plane's full tenant-ordered stack: scatter the
+    (H, ...) hot slots into the (T, ...) cold store copy at their tenant
+    rows (`slot_tenant` is the hot slot -> tenant map).  One device
+    scatter; the result is the all-resident layout every stack-shaped
+    consumer (parity oracles, cross-shard merges) expects."""
+    stack = jnp.asarray(cold_tables)
+    slot_tenant = jnp.asarray(np.asarray(slot_tenant, np.int32))
+    if slot_tenant.size == 0:
+        return stack
+    return stack.at[slot_tenant].set(hot_tables)
+
+
+def pmax_merge_tier_stack(hot_tables: jnp.ndarray, slot_tenant,
+                          cold_tables, spec, axis_names
+                          ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Max-merge a TIERED plane across mesh axes (inside shard_map):
+    reassemble the full (T, ...) tenant stack from both tiers, unpack
+    around the collective like `pmax_merge`, and return (merged hot
+    slice, merged full stack) — the hot slice scatters straight back into
+    the device stack, the full stack is the caller's source for refreshed
+    cold rows.  Shards must agree on tier membership (it is deterministic
+    given the same traffic; checkpoint restore re-applies it)."""
+    stack = tier_assemble(hot_tables, slot_tenant, cold_tables)
+    states = sk.logical_table(stack, spec)
+    merged = sk.storage_table(jax.lax.pmax(states, axis_names), spec)
+    slot_tenant = jnp.asarray(np.asarray(slot_tenant, np.int32))
+    return merged[slot_tenant], merged
 
 
 def pmax_merge_window(win, axis_names):

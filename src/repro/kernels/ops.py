@@ -410,11 +410,11 @@ def _row_seeds_array(spec: sk.SketchSpec) -> jnp.ndarray:
     return jnp.asarray(_seeds_tuple(spec), jnp.uint32)
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
-def _update_score_rows_kernel_jit(tables, keys, weights, rng, rows, cand, *,
-                                  spec, interpret):
+@functools.partial(jax.jit, static_argnames=("spec", "total", "interpret"))
+def _update_score_rows_kernel_jit(tables, keys, weights, rng, rows, urows,
+                                  cand, *, spec, total, interpret):
     sorted_keys, mult = jax.vmap(sk.dedup_weighted)(keys, weights)
-    uniforms = _parity_uniforms(rng, keys.shape[1], tables.shape[0], rows)
+    uniforms = _parity_uniforms(rng, keys.shape[1], total, urows)
     return fused_update_score_pallas(tables, sorted_keys, mult, uniforms,
                                      cand, rows, seeds=_seeds_tuple(spec),
                                      width=spec.width, counter=spec.counter,
@@ -422,11 +422,11 @@ def _update_score_rows_kernel_jit(tables, keys, weights, rng, rows, cand, *,
                                      cpl=spec.cells_per_lane)
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
-def _update_score_rows_xla_jit(tables, keys, weights, rng, rows, cand, *,
-                               spec):
+@functools.partial(jax.jit, static_argnames=("spec", "total"))
+def _update_score_rows_xla_jit(tables, keys, weights, rng, rows, urows, cand,
+                               *, spec, total):
     sorted_keys, mult = jax.vmap(sk.dedup_weighted)(keys, weights)
-    uniforms = _parity_uniforms(rng, keys.shape[1], tables.shape[0], rows)
+    uniforms = _parity_uniforms(rng, keys.shape[1], total, urows)
     return ref.update_score_rows_ref(tables, sorted_keys, mult, uniforms,
                                      rows, cand, _row_seeds_array(spec),
                                      spec.counter, CHUNK,
@@ -437,7 +437,7 @@ def update_score_rows(tables: jnp.ndarray, spec: sk.SketchSpec,
                       keys: jnp.ndarray, rng: jax.Array, rows,
                       cand: jnp.ndarray,
                       weights: jnp.ndarray | None = None,
-                      engine: str = "auto"):
+                      uniform_rows=None, engine: str = "auto"):
     """Single-launch flush epoch: active-row conservative update PLUS the
     heavy-hitter candidate re-query, one fused computation.
 
@@ -450,6 +450,13 @@ def update_score_rows(tables: jnp.ndarray, spec: sk.SketchSpec,
     only fetched once: the kernel re-scores while it is still
     VMEM-resident (`fused_update_score_pallas`).
 
+    uniform_rows: optional (total, urows) pair decoupling the parity
+    uniform draw from the kernel row map, exactly as in `update_rows` —
+    a tiered plane updates hot SLOTS of its (H, d, w) device stack while
+    drawing uniforms over the full TENANT grid gathered at `urows`, so a
+    hot-tier epoch lands bit-identical counters to the all-resident
+    flush it replaces.  Default: the dense grid over `tables` at `rows`.
+
     engine: "kernel" forces the Pallas path, "xla" the jitted reference
     (`ref.update_score_rows_ref` — chunk-sequential, bit-identical), and
     "auto" picks the kernel on TPU and the XLA reference elsewhere (the
@@ -460,6 +467,11 @@ def update_score_rows(tables: jnp.ndarray, spec: sk.SketchSpec,
     if engine not in ("auto", "kernel", "xla"):
         raise ValueError(f"unknown update_score engine {engine!r}")
     rows = np.asarray(rows, np.int32)
+    if uniform_rows is None:
+        total, urows = tables.shape[0], rows
+    else:
+        total, urows = uniform_rows
+        urows = np.asarray(urows, np.int32)
     if weights is None:
         weights = jnp.ones(keys.shape, jnp.float32)
     interpret = _interpret()
@@ -470,9 +482,11 @@ def update_score_rows(tables: jnp.ndarray, spec: sk.SketchSpec,
     _launch("update_score_rows")
     if engine == "xla":
         return _update_score_rows_xla_jit(tables, keys, weights, rng, rows,
-                                          cand, spec=spec)
+                                          urows, cand, spec=spec,
+                                          total=int(total))
     return _update_score_rows_kernel_jit(tables, keys, weights, rng, rows,
-                                         cand, spec=spec, interpret=interpret)
+                                         urows, cand, spec=spec,
+                                         total=int(total), interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "mode"))
@@ -692,3 +706,127 @@ def flush_rows_inputs(queue: jnp.ndarray, fill: jnp.ndarray,
     weights = (jnp.arange(cols, dtype=jnp.int32)[None, :]
                < fill[:, None].astype(jnp.int32)).astype(jnp.float32)
     return queue[rows, :cols], weights
+
+
+# --------------------------------------------------------------------------
+# tiered hot/cold plane storage (stream.tiering)
+#
+# The cold tier lives in HOST memory as numpy arrays in packed storage
+# layout; these helpers are its device-side interface.  Spills and queries
+# run through the XLA reference engines (`kernels/ref.py`) — bit-identical
+# to the hot-tier kernels by the established parity — and every helper
+# tallies under its OWN op name, so the audited claim "a hot-tier flush
+# epoch is ONE update_score_rows dispatch" stays a measured number even
+# when cold tenants spill in the same epoch.
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("spec", "total"))
+def _tier_spill_score_jit(tables, keys, weights, rng, urows, cand, *, spec,
+                          total):
+    sorted_keys, mult = jax.vmap(sk.dedup_weighted)(keys, weights)
+    uniforms = _parity_uniforms(rng, keys.shape[1], total, urows)
+    rows = jnp.arange(tables.shape[0], dtype=jnp.int32)
+    return ref.update_score_rows_ref(tables, sorted_keys, mult, uniforms,
+                                     rows, cand, _row_seeds_array(spec),
+                                     spec.counter, CHUNK,
+                                     cpl=spec.cells_per_lane)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "total"))
+def _tier_spill_jit(tables, keys, weights, rng, urows, *, spec, total):
+    sorted_keys, mult = jax.vmap(sk.dedup_weighted)(keys, weights)
+    uniforms = _parity_uniforms(rng, keys.shape[1], total, urows)
+    seeds = _row_seeds_array(spec)
+
+    def one(table, k, m, u):
+        return ref.update_chunked_ref(table, k, m, u, seeds, spec.counter,
+                                      CHUNK, cpl=spec.cells_per_lane)
+    return jax.vmap(one)(tables, sorted_keys, mult, uniforms)
+
+
+def tier_spill(tables: jnp.ndarray, spec: sk.SketchSpec, keys: jnp.ndarray,
+               rng: jax.Array, weights: jnp.ndarray,
+               uniform_rows, cand: jnp.ndarray | None = None):
+    """Cold-tier spill: land C cold tenants' buffered batches on their
+    host-gathered (C, d, w) table stack (uploaded by the caller).
+
+    keys/weights (C, N) are the tenants' host queue-mirror slices; the
+    dedup, chunk order, and parity-uniforms grid — `uniform_rows` is the
+    REQUIRED (total, urows) pair naming each stack row's tenant index in
+    the full tenant grid — are exactly the hot path's, so a spilled row's
+    counters are bit-identical to what `update_score_rows`/`update_rows`
+    would have landed had the tenant been device-resident.  With `cand`
+    (C, M) the spill also re-scores the candidate union against the
+    just-updated rows and returns (new_tables, estimates); without it,
+    just new_tables.  Tallied as "tier_spill" — never as the audited hot
+    ops.
+    """
+    _launch("tier_spill")
+    total, urows = uniform_rows
+    urows = np.asarray(urows, np.int32)
+    if cand is None:
+        return _tier_spill_jit(tables, keys, weights, rng, urows, spec=spec,
+                               total=int(total))
+    return _tier_spill_score_jit(tables, keys, weights, rng, urows, cand,
+                                 spec=spec, total=int(total))
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _tier_query_jit(tables, keys, *, spec):
+    seeds = _row_seeds_array(spec)
+
+    def one(table, k):
+        return ref.query_ref(table, k, seeds, spec.counter,
+                             cpl=spec.cells_per_lane)
+    return jax.vmap(one)(tables, keys)
+
+
+def tier_query(tables, spec: sk.SketchSpec, keys) -> jnp.ndarray:
+    """Cold-tier read path: float32 (C, N) estimates over a host-gathered
+    (C, d, w) stack, through the XLA reference engine (`ref.query_ref` —
+    estimates bit-identical to the `query_many` kernel, so hot and cold
+    tenants answer a `query_all` identically).  1D keys broadcast to
+    every row.  Tallied as "tier_query"."""
+    tables = jnp.asarray(tables)
+    keys = jnp.asarray(keys)
+    if keys.ndim == 1:
+        keys = jnp.broadcast_to(keys[None, :],
+                                (tables.shape[0], keys.shape[0]))
+    if keys.shape[0] != tables.shape[0]:
+        raise ValueError(f"per-tenant keys need {tables.shape[0]} rows, "
+                         f"got {keys.shape[0]}")
+    _launch("tier_query")
+    return _tier_query_jit(tables, keys, spec=spec)
+
+
+@jax.jit
+def _tier_demote_jit(tables, rows):
+    return tables[rows]
+
+
+def tier_demote(tables: jnp.ndarray, rows) -> jnp.ndarray:
+    """Demotion gather: slice the demoted slots' tables out of the hot
+    stack in ONE device computation (the caller's host copy lands them in
+    the cold store).  The device ring needs NO read-back — the host queue
+    mirror is authoritative for ring contents.  Tallied "tier_demote"."""
+    _launch("tier_demote")
+    return _tier_demote_jit(tables, jnp.asarray(np.asarray(rows, np.int32)))
+
+
+@functools.partial(jax.jit, donate_argnames=("tables", "queue"))
+def _tier_promote_jit(tables, queue, rows, new_tables, new_queue):
+    return (tables.at[rows].set(new_tables),
+            queue.at[rows].set(new_queue))
+
+
+def tier_promote(tables: jnp.ndarray, queue: jnp.ndarray, rows,
+                 new_tables, new_queue):
+    """Promotion scatter: land the promoted tenants' cold tables AND their
+    ring-mirror rows in the hot stacks with ONE jitted computation (both
+    stacks donated, aliased in place) — the single device round-trip a
+    cold tenant pays to become hot.  Tallied "tier_promote"; the extended
+    launch audit allows at most one per flush epoch."""
+    _launch("tier_promote")
+    rows = jnp.asarray(np.asarray(rows, np.int32))
+    return _tier_promote_jit(tables, queue, rows, jnp.asarray(new_tables),
+                             jnp.asarray(new_queue))

@@ -14,7 +14,13 @@ the trending board off the tracker, maps ids through the tracker-fed
 admission plane, and round-trips the whole multi-plane registry through a
 checkpoint.  The ingest loop runs under
 `jax.transfer_guard_device_to_host("disallow")` — the queue buffers
-provably never cross back to the host.
+provably never cross back to the host.  `--tier-hot N` turns on tiered
+hot/cold storage (`TierSpec(max_hot_tenants=N)`): only the N most active
+tenants per plane stay device-resident, the rest serve from the host cold
+store, and the driver prints each plane's tier occupancy and
+promotion/demotion/spill counters (the tiering layer's host copies run
+under their own scoped transfer-guard allowance, so the disallow pin
+still holds for the ingest path proper).
 
 The whole run is observed through `repro.obs`: per-plane ring/watermark
 gauges and dispatch tallies come off the service's metrics registry
@@ -41,7 +47,7 @@ import jax
 from repro import obs
 from repro.core import CMLS16, CMS32, SketchSpec
 from repro.core.admission import AdmissionSpec
-from repro.stream import CountService, WindowPlane, WindowSpec
+from repro.stream import CountService, TierSpec, WindowPlane, WindowSpec
 
 
 def main(argv=None) -> None:
@@ -59,6 +65,10 @@ def main(argv=None) -> None:
                     help="write a chrome://tracing JSON here on exit")
     ap.add_argument("--probe-rate", type=float, default=0.05,
                     help="hash-sample rate of the exact accuracy shadow")
+    ap.add_argument("--tier-hot", type=int, default=None,
+                    help="turn on tiered hot/cold storage: keep at most "
+                         "this many tenants per plane device-resident "
+                         "(TierSpec(max_hot_tenants=...), LRU victims)")
     args = ap.parse_args(argv)
 
     spec = SketchSpec(width=args.width, depth=args.depth, counter=CMLS16)
@@ -66,9 +76,11 @@ def main(argv=None) -> None:
     names = [f"tenant_{t:02d}" for t in range(args.tenants)]
     tracer = obs.Tracer(enabled=True)
     slo_probe = obs.AccuracyProbe(rate=args.probe_rate)
+    tier = (None if args.tier_hot is None
+            else TierSpec(max_hot_tenants=args.tier_hot))
     svc = CountService(spec, tenants=names, queue_capacity=args.queue_cap,
                        seed=args.seed, track_top=16, tracer=tracer,
-                       probe=slo_probe)
+                       probe=slo_probe, tier=tier)
     # heterogeneous plane: two CMS32 metrics tenants ride the same service
     svc.add_tenant("metrics_qps", spec=metrics_spec)
     svc.add_tenant("metrics_err", spec=metrics_spec)
@@ -123,6 +135,20 @@ def main(argv=None) -> None:
                     for n in plane.names]
             line += f", watermark lag {lags} intervals"
         print(line)
+
+    # tier occupancy + swap traffic (tiering on): the hot/cold split per
+    # plane and how many promotions/demotions/spills the stream forced
+    for label, occ in svc.tier_occupancy().items():
+        promos = int(svc.metrics.counter("tier_promotions",
+                                         plane=label).value)
+        demos = int(svc.metrics.counter("tier_demotions", plane=label).value)
+        spills = int(svc.metrics.counter("tier_spill_events",
+                                         plane=label).value)
+        sbytes = int(svc.metrics.counter("tier_spill_bytes",
+                                         plane=label).value)
+        print(f"[serve_counts] tier {label}: {occ['hot']} hot / "
+              f"{occ['cold']} cold tenants, {promos} promotions, "
+              f"{demos} demotions, {spills} spills ({sbytes} bytes)")
 
     # every tenant's hot keys answered by one fused query launch per plane
     probes = np.stack(

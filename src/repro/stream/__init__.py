@@ -7,6 +7,10 @@
     each plane stacks its tenants' tables into one (T, d, w) array,
     buffers events in a device-resident ring (scatter-append kernel), and
     ingests/serves the whole plane with single fused Pallas launches.
+  * `tiering` — hot/cold plane storage: `TierSpec(max_hot_tenants=N)`
+    keeps each plane's top-N active tenants device-resident and parks the
+    rest in a host-side cold store with buffered spill, 10-100x more
+    tenants than device memory holds with bit-identical answers.
 """
 from repro.stream.window import (DecayedSketch, WindowSpec, WindowedSketch,
                                  decay, decayed_init, decayed_query,
@@ -18,6 +22,7 @@ from repro.stream.window import (DecayedSketch, WindowSpec, WindowedSketch,
                                  window_update, window_weights,
                                  window_weights_stacked)
 from repro.stream.service import CountService, TenantPlane, WindowPlane
+from repro.stream.tiering import TierSpec, tier_memory_bytes
 
 __all__ = [
     "WindowSpec", "WindowedSketch", "window_init", "window_update",
@@ -27,4 +32,5 @@ __all__ = [
     "DecayedSketch", "decay", "decayed_init", "decayed_rotate",
     "decayed_update", "decayed_query",
     "CountService", "TenantPlane", "WindowPlane",
+    "TierSpec", "tier_memory_bytes",
 ]

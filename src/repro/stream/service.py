@@ -51,15 +51,27 @@ the **admission plane**: `add_tenant(admission=AdmissionSpec(...))` +
 the tracked candidates whose estimates clear the threshold — decisions
 refresh with every flush epoch for free (`core/admission.admit_tracked`).
 
+Construction with `tier=TierSpec(max_hot_tenants=N, policy=...)` turns on
+**tiered hot/cold storage** (`stream.tiering`): each plane keeps only its
+N most active tenants resident in the device stack and parks the rest in
+a host-side numpy cold store (packed storage layout).  Cold tenants'
+events accumulate in the host queue mirror and land through one batched
+XLA-reference spill per epoch (`ops.tier_spill`, bit-identical to the hot
+path); promotion/demotion rides the flush's active-row signal and swaps
+via one gather→host copy + one host→device scatter per epoch.  The
+hot-tier flush epoch stays ONE `update_score_rows` dispatch, and
+`query_all`/`topk` answers are bit-identical to an all-resident service.
+
 Queries are read-your-writes: they flush pending events first.  The whole
 service (tables + rings + fill mirrors + RNG lane + stats + trackers +
 admission registry) snapshots and restores via `train/checkpoint`; the
-manifest metadata records the plane layout (schema v7 — v2 adds
+manifest metadata records the plane layout (schema v8 — v2 adds
 multi-plane, v3 the tracker state, v4 the admission policies, v5 the
-metrics snapshot, v6 the packed-storage flag, v7 the native window leaf)
-and restore still accepts every earlier version down to the v1
-single-plane layout; `restore(track_top=K')` re-arms the heaps at a
-different width (shrink keeps the best K', grow cold-masks new slots).
+metrics snapshot, v6 the packed-storage flag, v7 the native window leaf,
+v8 the tier membership + cold store) and restore still accepts every
+earlier version down to the v1 single-plane layout; `restore(track_top=K')`
+re-arms the heaps at a different width (shrink keeps the best K', grow
+cold-masks new slots).
 """
 from __future__ import annotations
 
@@ -78,7 +90,9 @@ from repro.core import topk
 from repro.core.counters import CounterSpec
 from repro.core.sketch import Sketch, SketchSpec
 from repro.kernels import ops
+from repro.stream import tiering
 from repro.stream import window as w
+from repro.stream.tiering import TierSpec
 from repro.train import checkpoint
 
 # key validation is shared with core.admission (the same contract at every
@@ -185,6 +199,16 @@ class _DeviceRing:
         return ops.flush_rows_inputs(self.queue, fill.astype(np.int32),
                                      jnp.asarray(rows), cols)
 
+    def class_slice(self, rows, cols: int):
+        """`live_slice` for one fill class of the per-row flush trim: the
+        caller (via `tiering.fill_classes`) groups active rows by their
+        OWN CHUNK-rounded fill and gathers each class at its class width,
+        so a skewed plane's upload bytes scale with each row's fill
+        instead of the batch max."""
+        return ops.flush_rows_inputs(self.queue,
+                                     self.fill[rows].astype(np.int32),
+                                     jnp.asarray(rows), cols)
+
     def reset(self) -> None:
         self.fill[:] = 0
 
@@ -213,7 +237,7 @@ class _TelemetryMixin:
     def note_append(self) -> None:
         """Refresh the ring-occupancy gauge after an append (the gauge's
         high-water mark records the worst queue pressure ever seen)."""
-        self._g_fill.set(int(self.ring.fill.sum()))
+        self._g_fill.set(self.pending())
 
     def _note_flush(self, pending: int) -> None:
         self._m_events.inc(int(pending))
@@ -251,13 +275,115 @@ class _TrackerMixin:
                          filled=tk.filled[rows])
 
 
-class TenantPlane(_TrackerMixin, _TelemetryMixin):
+class _TierMixin:
+    """Hot/cold tier plumbing shared by both plane kinds.
+
+    With `tier=None` every method degenerates to the all-resident
+    behavior (device arrays indexed by tenant row, the `_DeviceRing` the
+    only queue).  With a `TierSpec`, the device stacks are SLOT-indexed
+    (H = min(max_hot_tenants, T) rows), the `tiering.PlaneTier` keeps the
+    tenant-indexed host state (cold tables, queue mirror, fill mirror,
+    recency/frequency signals), and the mixin routes queue traffic and
+    runs the per-epoch rebalance swap."""
+
+    tier: Optional[tiering.PlaneTier]
+
+    def _init_tier(self, tspec: Optional[TierSpec], row_shape) -> None:
+        if tspec is None:
+            self.tier = None
+            return
+        self.tier = tiering.PlaneTier(tspec, row_shape,
+                                      np.dtype(self.spec.storage_dtype),
+                                      self.ring.capacity)
+        self._g_hot = self.metrics.gauge("tier_hot_tenants",
+                                         plane=self.label)
+        self._g_cold = self.metrics.gauge("tier_cold_tenants",
+                                          plane=self.label)
+        self._m_promotions = self.metrics.counter("tier_promotions",
+                                                  plane=self.label)
+        self._m_demotions = self.metrics.counter("tier_demotions",
+                                                 plane=self.label)
+        self._m_spills = self.metrics.counter("tier_spill_events",
+                                              plane=self.label)
+        self._m_spill_bytes = self.metrics.counter("tier_spill_bytes",
+                                                   plane=self.label)
+
+    def _tier_gauges(self) -> None:
+        if self.tier is not None:
+            self._g_hot.set(self.tier.hot_count)
+            self._g_cold.set(self.tier.cold_count)
+
+    def pending(self) -> int:
+        if self.tier is None:
+            return int(self.ring.fill.sum())
+        return self.tier.pending()
+
+    def queue_free(self, row: int) -> int:
+        """Free queue slots for one tenant (cold tenants buffer in the
+        host mirror at the same capacity as the device ring)."""
+        if self.tier is None:
+            return self.ring.free(row)
+        return self.tier.free(row)
+
+    def queue_append_rows(self, rows, batches) -> None:
+        """Route tenant microbatches into the queue: hot tenants append
+        to the device ring at their slots (one scatter-append launch) AND
+        to the host mirror (the mirror stages every append anyway, and
+        keeping it authoritative for ALL tenants is what makes demotion
+        free of device read-backs); cold tenants touch only the mirror —
+        zero device work until they are promoted."""
+        if self.tier is None:
+            self.ring.append(rows, batches)
+            return
+        t = self.tier
+        hot = [i for i, r in enumerate(rows) if t.slot[r] >= 0]
+        if hot:
+            self.ring.append([int(t.slot[rows[i]]) for i in hot],
+                             [batches[i] for i in hot])
+        t.mirror_append(rows, batches)
+
+    def _tier_rebalance(self) -> None:
+        """Post-flush swap: promote the hottest just-active cold tenants
+        into idle victims' slots — ONE demotion gather + ONE promotion
+        scatter per epoch, however many tenants swap.  The gather's host
+        copy is the design's sanctioned device→host transfer (explicit
+        `transfer_guard` allowance, so a pinned ingest path keeps its
+        disallow guard)."""
+        t = self.tier
+        demote, promote = t.plan_swap()
+        if demote.size:
+            slots = t.slot[demote].copy()
+            with jax.transfer_guard_device_to_host("allow"):
+                t.cold[demote] = np.asarray(
+                    ops.tier_demote(self.tables, slots))
+            self.tables, self.ring.queue = ops.tier_promote(
+                self.tables, self.ring.queue, slots,
+                t.cold[promote], t.hqueue[promote])
+            t.swap(demote, promote)
+            self.ring.fill[slots] = t.hfill[promote]
+            self._m_promotions.inc(int(promote.size))
+            self._m_demotions.inc(int(demote.size))
+        self._tier_gauges()
+
+    def stacked_tables(self) -> jnp.ndarray:
+        """Full tenant-ordered table stack reassembled across tiers (the
+        all-resident layout — parity tests and cross-shard merges; see
+        `sharded.tier_assemble`)."""
+        if self.tier is None:
+            return self.tables
+        from repro.core import sharded
+        return sharded.tier_assemble(self.tables, self.tier.slot_tenant,
+                                     self.tier.cold)
+
+
+class TenantPlane(_TierMixin, _TrackerMixin, _TelemetryMixin):
     """Tenants sharing one SketchSpec: stacked (T, d, w) tables + ring."""
 
     def __init__(self, spec: SketchSpec, queue_capacity: int, seed: int = 0,
                  track_top: Optional[int] = None,
                  metrics: Optional[obs.MetricsRegistry] = None,
-                 tracer: Optional[obs.Tracer] = None, label: str = "p0"):
+                 tracer: Optional[obs.Tracer] = None, label: str = "p0",
+                 tier: Optional[TierSpec] = None):
         self.spec = spec
         self.tables = jnp.zeros((0, spec.depth, spec.storage_width),
                                 spec.storage_dtype)
@@ -266,22 +392,29 @@ class TenantPlane(_TrackerMixin, _TelemetryMixin):
         self.names: list[str] = []
         self._init_tracker(track_top)
         self._init_telemetry(metrics, tracer, label)
+        self._init_tier(tier, (spec.depth, spec.storage_width))
 
     @property
     def queue_capacity(self) -> int:
         return self.ring.capacity
 
     def add(self, name: str) -> int:
-        zero = jnp.zeros((1, self.spec.depth, self.spec.storage_width),
-                         self.spec.storage_dtype)
-        self.tables = jnp.concatenate([self.tables, zero], axis=0)
         self.names.append(name)
         self._grow_tracker()
         self._g_tenants.set(len(self.names))
-        return self.ring.add_row()
-
-    def pending(self) -> int:
-        return int(self.ring.fill.sum())
+        if self.tier is None:
+            zero = jnp.zeros((1, self.spec.depth, self.spec.storage_width),
+                             self.spec.storage_dtype)
+            self.tables = jnp.concatenate([self.tables, zero], axis=0)
+            return self.ring.add_row()
+        row, goes_hot = self.tier.add_row()
+        if goes_hot:
+            zero = jnp.zeros((1, self.spec.depth, self.spec.storage_width),
+                             self.spec.storage_dtype)
+            self.tables = jnp.concatenate([self.tables, zero], axis=0)
+            self.ring.add_row()
+        self._tier_gauges()
+        return row
 
     def flush(self, dense: bool = False) -> int:
         """Land every tenant's pending events: ONE launch, update + refresh.
@@ -298,12 +431,23 @@ class TenantPlane(_TrackerMixin, _TelemetryMixin):
         bit-identical to the old update-launch-then-query-launch pair
         minus a launch and a second table fetch.  Without tracking the
         update-only active-row path (`ops.update_rows`) remains.
-        `dense=True` forces the legacy two-launch whole-plane pipeline
-        (the benchmark baseline and the parity-test oracle).
+        Active rows are grouped by their OWN CHUNK-rounded fill
+        (`tiering.fill_classes`) so one hot tenant no longer inflates
+        every cold-ish tenant's upload to the batch max; with uniform
+        fills there is exactly one class and the epoch is the same single
+        dispatch as before.  `dense=True` forces the legacy two-launch
+        whole-plane pipeline (the benchmark baseline and the parity-test
+        oracle).
         """
         pending = self.pending()
         if pending == 0:
             return 0
+        if self.tier is not None:
+            if dense:
+                raise ValueError("dense flush is the all-resident baseline "
+                                 "pipeline; tiered planes have no resident "
+                                 "whole-plane layout to run it on")
+            return self._flush_tiered(pending)
         rng = self.rng.next()
         active = np.flatnonzero(self.ring.fill).astype(np.int32)
         tr = self.tracer
@@ -319,36 +463,135 @@ class TenantPlane(_TrackerMixin, _TelemetryMixin):
                     sel = jnp.asarray(active)
                     self._refresh_topk(active, keys[sel], weights[sel])
             elif self.tracker is not None:
-                with tr.span("queue_gather", plane=self.label) as sp:
-                    keys, weights = sp.sync(self.ring.live_slice(active))
-                rows_d = jnp.asarray(active)
-                cand, valid = topk.candidates(self._tracker_rows(rows_d),
-                                              keys, weights > 0)
-                with tr.span("update_score_rows", plane=self.label) as sp:
-                    self.tables, est = ops.update_score_rows(
-                        self.tables, self.spec, keys, rng, active, cand,
-                        weights=weights)
-                    sp.sync((self.tables, est))
-                with tr.span("tracker_reselect", plane=self.label) as sp:
-                    self._scatter_tracker(rows_d,
-                                          topk.reselect(cand, valid, est,
-                                                        self.track_top))
-                    sp.sync(self.tracker.keys)
-            elif active.size == len(self.names):
-                keys, weights = self.ring.live_slice()
-                self.tables = ops.update_many(self.tables, self.spec, keys,
-                                              rng, weights=weights)
+                for cols, rows_g in tiering.fill_classes(
+                        self.ring.fill, active, self.ring.queue.shape[1]):
+                    with tr.span("queue_gather", plane=self.label) as sp:
+                        keys, weights = sp.sync(
+                            self.ring.class_slice(rows_g, cols))
+                    rows_d = jnp.asarray(rows_g)
+                    cand, valid = topk.candidates(self._tracker_rows(rows_d),
+                                                  keys, weights > 0)
+                    with tr.span("update_score_rows",
+                                 plane=self.label) as sp:
+                        self.tables, est = ops.update_score_rows(
+                            self.tables, self.spec, keys, rng, rows_g, cand,
+                            weights=weights)
+                        sp.sync((self.tables, est))
+                    with tr.span("tracker_reselect", plane=self.label) as sp:
+                        self._scatter_tracker(
+                            rows_d, topk.reselect(cand, valid, est,
+                                                  self.track_top))
+                        sp.sync(self.tracker.keys)
             else:
-                with tr.span("queue_gather", plane=self.label) as sp:
-                    keys, weights = sp.sync(self.ring.live_slice(active))
-                with tr.span("update_rows", plane=self.label) as sp:
-                    self.tables = sp.sync(ops.update_rows(
-                        self.tables, self.spec, keys, rng, active,
-                        weights=weights))
+                classes = tiering.fill_classes(self.ring.fill, active,
+                                               self.ring.queue.shape[1])
+                if len(classes) == 1 and active.size == len(self.names):
+                    keys, weights = self.ring.live_slice()
+                    self.tables = ops.update_many(self.tables, self.spec,
+                                                  keys, rng, weights=weights)
+                else:
+                    for cols, rows_g in classes:
+                        with tr.span("queue_gather",
+                                     plane=self.label) as sp:
+                            keys, weights = sp.sync(
+                                self.ring.class_slice(rows_g, cols))
+                        with tr.span("update_rows", plane=self.label) as sp:
+                            self.tables = sp.sync(ops.update_rows(
+                                self.tables, self.spec, keys, rng, rows_g,
+                                weights=weights))
             self.ring.reset()
             ep.sync(self.tables)
         self._note_flush(pending)
         return pending
+
+    def _flush_tiered(self, pending: int) -> int:
+        """Tiered flush epoch: per fill class, hot tenants land through
+        the SAME fused dispatch an all-resident plane issues (uniforms
+        drawn from the full-tenant grid via `uniform_rows`, rows mapped
+        tenant→slot) and cold tenants through one batched XLA-reference
+        spill (`ops.tier_spill`, identical dedup + uniforms grid) — so
+        every tenant's table lands bit-identical to the resident service.
+        The epoch ends with the recency stamp and the rebalance swap."""
+        t = self.tier
+        rng = self.rng.next()
+        total = len(self.names)
+        active = np.flatnonzero(t.hfill).astype(np.int32)
+        tr = self.tracer
+        with tr.span("flush_epoch", plane=self.label,
+                     rows=int(active.size)) as ep:
+            for cols, rows_g in tiering.fill_classes(t.hfill, active,
+                                                     t.capw):
+                slot_g = t.slot[rows_g]
+                hot_g = rows_g[slot_g >= 0]
+                cold_g = rows_g[slot_g < 0]
+                if hot_g.size:
+                    slots = t.slot[hot_g].astype(np.int32)
+                    with tr.span("queue_gather", plane=self.label) as sp:
+                        keys, weights = sp.sync(ops.flush_rows_inputs(
+                            self.ring.queue,
+                            t.hfill[hot_g].astype(np.int32),
+                            jnp.asarray(slots), cols))
+                    if self.tracker is not None:
+                        rows_d = jnp.asarray(hot_g)
+                        cand, valid = topk.candidates(
+                            self._tracker_rows(rows_d), keys, weights > 0)
+                        with tr.span("update_score_rows",
+                                     plane=self.label) as sp:
+                            self.tables, est = ops.update_score_rows(
+                                self.tables, self.spec, keys, rng, slots,
+                                cand, weights=weights,
+                                uniform_rows=(total, hot_g))
+                            sp.sync((self.tables, est))
+                        self._scatter_tracker(
+                            rows_d, topk.reselect(cand, valid, est,
+                                                  self.track_top))
+                    else:
+                        with tr.span("update_rows", plane=self.label) as sp:
+                            self.tables = sp.sync(ops.update_rows(
+                                self.tables, self.spec, keys, rng, slots,
+                                weights=weights,
+                                uniform_rows=(total, hot_g)))
+                if cold_g.size:
+                    with tr.span("tier_spill", plane=self.label,
+                                 rows=int(cold_g.size)):
+                        self._tier_spill(cold_g, cols, rng, total)
+            self.ring.reset()
+            t.note_flush(active)
+            self._tier_rebalance()
+            ep.sync(self.tables)
+        self._note_flush(pending)
+        return pending
+
+    def _tier_spill(self, rows_g: np.ndarray, cols: int, rng, total: int
+                    ) -> None:
+        """Land one fill class of cold tenants from the host queue mirror
+        into the cold store (buffered spill): batched dedup + Morris
+        update through the jitted XLA reference engine, uniforms drawn
+        from the SAME (T, cols) grid rows the hot dispatch consumes —
+        per-row bit-identical to flushing the tenant resident."""
+        t = self.tier
+        keys = jnp.asarray(t.hqueue[rows_g, :cols])
+        weights = jnp.asarray(
+            (np.arange(cols) < t.hfill[rows_g, None]).astype(np.float32))
+        stack = jnp.asarray(t.cold[rows_g])
+        with jax.transfer_guard_device_to_host("allow"):
+            if self.tracker is not None:
+                rows_d = jnp.asarray(rows_g)
+                cand, valid = topk.candidates(self._tracker_rows(rows_d),
+                                              keys, weights > 0)
+                new, est = ops.tier_spill(stack, self.spec, keys, rng,
+                                          weights, (total, rows_g),
+                                          cand=cand)
+                self._scatter_tracker(rows_d,
+                                      topk.reselect(cand, valid, est,
+                                                    self.track_top))
+            else:
+                new = ops.tier_spill(stack, self.spec, keys, rng, weights,
+                                     (total, rows_g))
+            t.cold[rows_g] = np.asarray(new)
+        self._m_spills.inc(int(rows_g.size))
+        self._m_spill_bytes.inc(2 * int(rows_g.size)
+                                * self.spec.memory_bytes)
 
     def _refresh_topk(self, rows, keys, weights) -> None:
         """Two-launch tracker refresh (the dense-baseline path): candidate
@@ -374,11 +617,42 @@ class TenantPlane(_TrackerMixin, _TelemetryMixin):
                 np.asarray(tk.filled[row]))
 
     def query_rows(self, keys: jnp.ndarray) -> jnp.ndarray:
-        """(T, N) estimates, ONE fused launch (keys (N,) broadcast or (T, N))."""
-        return ops.query_many(self.tables, self.spec, keys)
+        """(T, N) estimates, tenant-ordered.  All-resident: ONE fused
+        launch (keys (N,) broadcast or (T, N)).  Tiered: the fused launch
+        serves the hot slots and the XLA reference engine serves the cold
+        stack (bit-identical estimators), reassembled in tenant order."""
+        if self.tier is None:
+            return ops.query_many(self.tables, self.spec, keys)
+        t = self.tier
+        keys = jnp.asarray(keys)
+        per_tenant = keys.ndim == 2
+        out = np.zeros((len(self.names), keys.shape[-1]), np.float32)
+        st = t.slot_tenant
+        cold = np.flatnonzero(t.slot < 0).astype(np.int32)
+        with jax.transfer_guard_device_to_host("allow"):
+            if st.size:
+                hk = keys[jnp.asarray(st)] if per_tenant else keys
+                out[st] = np.asarray(
+                    ops.query_many(self.tables, self.spec, hk))
+            if cold.size:
+                ck = keys[jnp.asarray(cold)] if per_tenant else keys
+                out[cold] = np.asarray(ops.tier_query(
+                    jnp.asarray(t.cold[cold]), self.spec, ck))
+        return jnp.asarray(out)
+
+    def table_row(self, row: int) -> jnp.ndarray:
+        """One tenant's table in the all-resident layout (hot tenants
+        slice the device stack at their slot; cold tenants upload their
+        host row on demand)."""
+        if self.tier is None:
+            return self.tables[row]
+        slot = int(self.tier.slot[row])
+        if slot >= 0:
+            return self.tables[slot]
+        return jnp.asarray(self.tier.cold[row])
 
 
-class WindowPlane(_TrackerMixin, _TelemetryMixin):
+class WindowPlane(_TierMixin, _TrackerMixin, _TelemetryMixin):
     """Watermark-windowed tenants sharing one WindowSpec, stored natively
     as ONE resident (T, B, d, w) device leaf.
 
@@ -403,7 +677,8 @@ class WindowPlane(_TrackerMixin, _TelemetryMixin):
     def __init__(self, wspec: w.WindowSpec, queue_capacity: int,
                  seed: int = 0, track_top: Optional[int] = None,
                  metrics: Optional[obs.MetricsRegistry] = None,
-                 tracer: Optional[obs.Tracer] = None, label: str = "w0"):
+                 tracer: Optional[obs.Tracer] = None, label: str = "w0",
+                 tier: Optional[TierSpec] = None):
         self.wspec = wspec
         s = wspec.sketch
         # the native window leaf: (T, B, d, w_storage), all tenants' rings
@@ -433,6 +708,7 @@ class WindowPlane(_TrackerMixin, _TelemetryMixin):
         # costs two attribute pokes, not a registry lookup
         self._g_epoch: list = []
         self._g_lag: list = []
+        self._init_tier(tier, (wspec.buckets, s.depth, s.storage_width))
 
     @property
     def spec(self) -> SketchSpec:
@@ -447,8 +723,14 @@ class WindowPlane(_TrackerMixin, _TelemetryMixin):
         snapshot inspection, per-tenant query/merge — the hot paths stay
         on the stacked leaf)."""
         ep = self.epochs[row]
+        if self.tier is None:
+            tb = self.tables[row]
+        else:
+            slot = int(self.tier.slot[row])
+            tb = (self.tables[slot] if slot >= 0
+                  else jnp.asarray(self.tier.cold[row]))
         return w.WindowedSketch(
-            tables=self.tables[row],
+            tables=tb,
             cursor=jnp.asarray(self.cursors[row], jnp.int32),
             spec=self.wspec,
             epoch=None if ep is None else jnp.asarray(ep, jnp.int32))
@@ -461,24 +743,30 @@ class WindowPlane(_TrackerMixin, _TelemetryMixin):
 
     def add(self, name: str) -> int:
         s = self.spec
-        zero = jnp.zeros((1, self.wspec.buckets, s.depth, s.storage_width),
-                         s.storage_dtype)
-        self.tables = jnp.concatenate([self.tables, zero], axis=0)
         self.cursors = np.concatenate(
             [self.cursors, np.zeros((1,), np.int32)])
         self.names.append(name)
         self.epochs.append(None)
         self._grow_tracker()
         self._g_tenants.set(len(self.names))
-        self._g_leaf_bytes.set(self.tables.size * self.tables.dtype.itemsize)
         self._g_epoch.append(self.metrics.gauge("watermark_epoch",
                                                 plane=self.label, tenant=name))
         self._g_lag.append(self.metrics.gauge("watermark_lag",
                                               plane=self.label, tenant=name))
-        return self.ring.add_row()
-
-    def pending(self) -> int:
-        return int(self.ring.fill.sum())
+        zero = jnp.zeros((1, self.wspec.buckets, s.depth, s.storage_width),
+                         s.storage_dtype)
+        if self.tier is None:
+            self.tables = jnp.concatenate([self.tables, zero], axis=0)
+            self._g_leaf_bytes.set(self.tables.size
+                                   * self.tables.dtype.itemsize)
+            return self.ring.add_row()
+        row, goes_hot = self.tier.add_row()
+        if goes_hot:
+            self.tables = jnp.concatenate([self.tables, zero], axis=0)
+            self.ring.add_row()
+        self._g_leaf_bytes.set(self.tables.size * self.tables.dtype.itemsize)
+        self._tier_gauges()
+        return row
 
     def advance(self, row: int, ts, flush_cb) -> None:
         """Advance one tenant's watermark to own `ts` (see `advance_many`)."""
@@ -519,18 +807,38 @@ class WindowPlane(_TrackerMixin, _TelemetryMixin):
         rot = np.flatnonzero(steps).astype(np.int32)
         if rot.size == 0:
             return
-        if self.ring.fill[rot].any():
+        pend = (self.ring.fill[rot].any() if self.tier is None
+                else self.tier.hfill[rot].any())
+        if pend:
             flush_cb()  # rebinds self.tables: rotation reads the new leaf
-        with self.tracer.span("window_rotate", plane=self.label,
-                              rows=int(rot.size)) as sp:
-            self.tables = sp.sync(ops.window_advance_rows(
-                self.tables, self.cursors, steps))
+        if self.tier is None:
+            with self.tracer.span("window_rotate", plane=self.label,
+                                  rows=int(rot.size)) as sp:
+                self.tables = sp.sync(ops.window_advance_rows(
+                    self.tables, self.cursors, steps))
+            self._m_rotation_dispatches.inc()
+        else:
+            # hot tenants rotate on the slot-indexed device leaf in one
+            # masked dispatch; cold tenants rotate their host leaves with
+            # the bit-identical numpy mirror of the rotation mask
+            t_ = self.tier
+            st = t_.slot_tenant
+            if st.size and steps[st].any():
+                with self.tracer.span("window_rotate", plane=self.label,
+                                      rows=int(rot.size)) as sp:
+                    self.tables = sp.sync(ops.window_advance_rows(
+                        self.tables, self.cursors[st], steps[st]))
+                self._m_rotation_dispatches.inc()
+            for row in rot:
+                if t_.slot[row] < 0:
+                    t_.cold[row] = w.cold_advance(t_.cold[row],
+                                                  int(self.cursors[row]),
+                                                  int(steps[row]))
         self.cursors = (self.cursors + steps) % self.wspec.buckets
         for row in rot:
             self.epochs[row] += int(steps[row])
             self._g_epoch[row].set(self.epochs[row])
         self._m_rotations.inc(int(steps.sum()))
-        self._m_rotation_dispatches.inc()
 
     def flush(self, dense: bool = False) -> int:
         """Land every pending tenant's events in its ACTIVE bucket —
@@ -553,6 +861,12 @@ class WindowPlane(_TrackerMixin, _TelemetryMixin):
         pending = self.pending()
         if pending == 0:
             return 0
+        if self.tier is not None:
+            if dense:
+                raise ValueError("dense flush is the all-resident baseline "
+                                 "pipeline; tiered planes have no resident "
+                                 "whole-plane layout to run it on")
+            return self._flush_tiered(pending)
         rng = self.rng.next()
         t = len(self.names)
         b = self.wspec.buckets
@@ -561,10 +875,10 @@ class WindowPlane(_TrackerMixin, _TelemetryMixin):
         tr = self.tracer
         with tr.span("flush_epoch", plane=self.label,
                      rows=int(rows.size)) as ep:
-            with tr.span("queue_gather", plane=self.label) as sp:
-                keys, weights = sp.sync(
-                    self.ring.live_slice(None if dense else rows))
+            kw = None
             if dense:
+                with tr.span("queue_gather", plane=self.label) as sp:
+                    keys, weights = sp.sync(self.ring.live_slice())
                 # legacy restack pipeline: gather active buckets into an
                 # (R, d, w) stack, dense launch, scatter each bucket back
                 stack = jnp.stack([self.tables[r, self.cursors[r]]
@@ -576,23 +890,149 @@ class WindowPlane(_TrackerMixin, _TelemetryMixin):
                 for i, r in enumerate(rows):
                     tables = tables.at[r, self.cursors[r]].set(stack[i])
                 self.tables = tables
+                kw = (keys, weights)
             else:
+                classes = tiering.fill_classes(self.ring.fill, rows,
+                                               self.ring.queue.shape[1])
                 flat = self.tables.reshape((t * b,) + self.tables.shape[2:])
-                flat_rows = rows * b + self.cursors[rows]
-                with tr.span("window_update", plane=self.label) as sp:
-                    flat = sp.sync(ops.update_rows(
-                        flat, self.spec, keys, rng, flat_rows,
-                        weights=weights, uniform_rows=(t, rows),
-                        donate=True))
+                for cols, rows_g in classes:
+                    with tr.span("queue_gather", plane=self.label) as sp:
+                        keys, weights = sp.sync(
+                            self.ring.class_slice(rows_g, cols))
+                    flat_rows = rows_g * b + self.cursors[rows_g]
+                    with tr.span("window_update", plane=self.label) as sp:
+                        flat = sp.sync(ops.update_rows(
+                            flat, self.spec, keys, rng, flat_rows,
+                            weights=weights, uniform_rows=(t, rows_g),
+                            donate=True))
+                    if len(classes) == 1:
+                        kw = (keys, weights)
                 self.tables = flat.reshape((t, b) + flat.shape[1:])
             if self.tracker is not None:
+                if kw is None:
+                    # multi-class epoch: one batch-max re-gather for the
+                    # refresh (stale padding is weight-0, so candidacy is
+                    # identical to per-class gathers)
+                    with tr.span("queue_gather", plane=self.label) as sp:
+                        kw = sp.sync(self.ring.live_slice(rows))
                 with tr.span("tracker_refresh", plane=self.label) as sp:
-                    self._refresh_topk(rows, keys, weights)
+                    self._refresh_topk(rows, *kw)
                     sp.sync(self.tracker.keys)
             self.ring.reset()
             ep.sync(self.tables)
         self._note_flush(pending)
         return pending
+
+    def _flush_tiered(self, pending: int) -> int:
+        """Tiered window flush epoch: per fill class, hot tenants land in
+        their ACTIVE buckets through the same flat row-mapped dispatch an
+        all-resident plane issues (flat row `slot*B + cursor`, uniforms
+        over the full-tenant grid) and cold tenants spill their active
+        bucket from the host queue mirror through `ops.tier_spill` — then
+        ONE cross-tier tracker refresh, the recency stamp, and the
+        rebalance swap."""
+        t_ = self.tier
+        rng = self.rng.next()
+        total = len(self.names)
+        b = self.wspec.buckets
+        active = np.flatnonzero(t_.hfill).astype(np.int32)
+        tr = self.tracer
+        with tr.span("flush_epoch", plane=self.label,
+                     rows=int(active.size)) as ep:
+            for cols, rows_g in tiering.fill_classes(t_.hfill, active,
+                                                     t_.capw):
+                slot_g = t_.slot[rows_g]
+                hot_g = rows_g[slot_g >= 0]
+                cold_g = rows_g[slot_g < 0]
+                if hot_g.size:
+                    slots = t_.slot[hot_g].astype(np.int32)
+                    with tr.span("queue_gather", plane=self.label) as sp:
+                        keys, weights = sp.sync(ops.flush_rows_inputs(
+                            self.ring.queue,
+                            t_.hfill[hot_g].astype(np.int32),
+                            jnp.asarray(slots), cols))
+                    h = self.tables.shape[0]
+                    flat = self.tables.reshape((h * b,)
+                                               + self.tables.shape[2:])
+                    flat_rows = slots * b + self.cursors[hot_g]
+                    with tr.span("window_update", plane=self.label) as sp:
+                        flat = sp.sync(ops.update_rows(
+                            flat, self.spec, keys, rng, flat_rows,
+                            weights=weights, uniform_rows=(total, hot_g),
+                            donate=True))
+                    self.tables = flat.reshape((h, b) + flat.shape[1:])
+                if cold_g.size:
+                    with tr.span("tier_spill", plane=self.label,
+                                 rows=int(cold_g.size)):
+                        self._tier_spill_window(cold_g, cols, rng, total)
+            if self.tracker is not None:
+                with tr.span("tracker_refresh", plane=self.label) as sp:
+                    self._refresh_topk_tiered(active)
+                    sp.sync(self.tracker.keys)
+            self.ring.reset()
+            t_.note_flush(active)
+            self._tier_rebalance()
+            ep.sync(self.tables)
+        self._note_flush(pending)
+        return pending
+
+    def _tier_spill_window(self, rows_g: np.ndarray, cols: int, rng,
+                           total: int) -> None:
+        """Spill one fill class of cold windowed tenants: their ACTIVE
+        bucket slices batch through the XLA reference engine with the
+        same full-grid uniforms the hot dispatch consumes, landing back
+        in the host leaves bit-identical to a resident flush."""
+        t_ = self.tier
+        keys = jnp.asarray(t_.hqueue[rows_g, :cols])
+        weights = jnp.asarray(
+            (np.arange(cols) < t_.hfill[rows_g, None]).astype(np.float32))
+        stack = jnp.asarray(t_.cold[rows_g, self.cursors[rows_g]])
+        with jax.transfer_guard_device_to_host("allow"):
+            new = ops.tier_spill(stack, self.spec, keys, rng, weights,
+                                 (total, rows_g))
+            t_.cold[rows_g, self.cursors[rows_g]] = np.asarray(new)
+        self._m_spills.inc(int(rows_g.size))
+        self._m_spill_bytes.inc(2 * int(rows_g.size)
+                                * self.spec.memory_bytes)
+
+    def _refresh_topk_tiered(self, active: np.ndarray) -> None:
+        """Cross-tier stacked heap refresh: hot tenants score through the
+        row-mapped stacked window query on the device leaf; cold tenants
+        upload their leaves and run the SAME query family (the window
+        reduce's "sum" rounding differs between engine families at 1 ulp,
+        so tier parity requires one engine for both).  Per-row results
+        match the resident service's single refresh because the stacked
+        refresh is row-independent and both gathers run at the same
+        batch-max width."""
+        t_ = self.tier
+        hot_a = active[t_.slot[active] >= 0]
+        cold_a = active[t_.slot[active] < 0]
+        cols = min(t_.capw,
+                   ops.CHUNK * -(-int(t_.hfill[active].max()) // ops.CHUNK))
+        for rows_a, hot in ((hot_a, True), (cold_a, False)):
+            if rows_a.size == 0:
+                continue
+            rows_d = jnp.asarray(rows_a)
+            wts = w.window_weights_stacked(self.cursors[rows_a],
+                                           self.wspec.buckets)
+            if hot:
+                slots = t_.slot[rows_a].astype(np.int32)
+                keys, weights = ops.flush_rows_inputs(
+                    self.ring.queue, t_.hfill[rows_a].astype(np.int32),
+                    jnp.asarray(slots), cols)
+                qfn = (lambda ck, s=slots: ops.window_query_stacked(
+                    self.tables, self.spec, ck, wts, rows=s))
+            else:
+                keys = jnp.asarray(t_.hqueue[rows_a, :cols])
+                weights = jnp.asarray(
+                    (np.arange(cols)
+                     < t_.hfill[rows_a, None]).astype(np.float32))
+                stack = jnp.asarray(t_.cold[rows_a])
+                qfn = (lambda ck, st=stack: ops.window_query_stacked(
+                    st, self.spec, ck, wts))
+            new = topk.refresh_stacked(self._tracker_rows(rows_d), keys,
+                                       weights > 0, qfn)
+            self._scatter_tracker(rows_d, new)
 
     def _refresh_topk(self, rows, keys, weights) -> None:
         """Stacked heap refresh for the flushed window tenants: candidates
@@ -627,19 +1067,41 @@ class WindowPlane(_TrackerMixin, _TelemetryMixin):
                                        self.wspec.buckets,
                                        n_buckets=n_buckets, gamma=gamma)
         rows_d = jnp.asarray(rows)
+        if self.tier is not None and int(self.tier.slot[row]) < 0:
+            # cold tenant: score the uploaded host leaf with the same
+            # stacked query family (tier parity, see _refresh_topk_tiered)
+            stack = jnp.asarray(self.tier.cold[rows])
+            qfn = (lambda ck: ops.window_query_stacked(
+                stack, self.spec, ck, wts, mode=mode, engine=engine))
+        else:
+            qrows = (rows if self.tier is None
+                     else self.tier.slot[rows].astype(np.int32))
+            qfn = (lambda ck: ops.window_query_stacked(
+                self.tables, self.spec, ck, wts, mode=mode, engine=engine,
+                rows=qrows))
         new = topk.refresh_stacked(
             self._tracker_rows(rows_d), jnp.zeros((1, 0), jnp.uint32), None,
-            lambda ck: ops.window_query_stacked(self.tables, self.spec, ck,
-                                                wts, mode=mode,
-                                                engine=engine, rows=rows))
+            qfn)
         self._scatter_tracker(rows_d, new)
         tk = self.tracker
         return (np.asarray(tk.keys[row]), np.asarray(tk.estimates[row]),
                 np.asarray(tk.filled[row]))
 
     def query_row(self, row: int, keys: jnp.ndarray, **kw) -> jnp.ndarray:
-        """Window estimate for one tenant (fused in-kernel bucket reduce)."""
+        """Window estimate for one tenant (fused in-kernel bucket reduce;
+        cold tenants query through the same reduce on their uploaded
+        leaf — `win_view` handles the tier)."""
         return w.window_query(self.win_view(row), keys, **kw)
+
+    def table_row(self, row: int) -> jnp.ndarray:
+        """One tenant's ACTIVE bucket table across tiers."""
+        cur = self.cursors[row]
+        if self.tier is None:
+            return self.tables[row, cur]
+        slot = int(self.tier.slot[row])
+        if slot >= 0:
+            return self.tables[slot, cur]
+        return jnp.asarray(self.tier.cold[row, cur])
 
 
 class CountService:
@@ -650,7 +1112,8 @@ class CountService:
                  seed: int = 0, track_top: Optional[int] = None,
                  metrics: Optional[obs.MetricsRegistry] = None,
                  tracer: Optional[obs.Tracer] = None,
-                 probe: Optional[obs.AccuracyProbe] = None):
+                 probe: Optional[obs.AccuracyProbe] = None,
+                 tier: Optional[TierSpec] = None):
         if queue_capacity < 1:
             raise ValueError("queue_capacity must be positive")
         if track_top is not None and track_top < 1:
@@ -659,6 +1122,7 @@ class CountService:
         self.queue_capacity = int(queue_capacity)
         self.seed = int(seed)
         self.track_top = None if track_top is None else int(track_top)
+        self.tier = tier
         self._planes: dict[SketchSpec, TenantPlane] = {}
         self._wplanes: dict[w.WindowSpec, WindowPlane] = {}
         self._where: dict[str, tuple[object, int]] = {}
@@ -758,7 +1222,8 @@ class CountService:
                                         track_top=self.track_top,
                                         metrics=self.metrics,
                                         tracer=self.tracer,
-                                        label=f"w{len(self._wplanes)}"))
+                                        label=f"w{len(self._wplanes)}",
+                                        tier=self.tier))
         else:
             spec = spec or self.default_spec
             if spec is None:
@@ -771,7 +1236,8 @@ class CountService:
                                       track_top=self.track_top,
                                       metrics=self.metrics,
                                       tracer=self.tracer,
-                                      label=f"p{len(self._planes)}"))
+                                      label=f"p{len(self._planes)}",
+                                      tier=self.tier))
         row = plane.add(name)
         self._where[name] = (plane, row)
         self._order.append(name)
@@ -807,12 +1273,9 @@ class CountService:
         For windowed tenants this is the ACTIVE bucket's sketch."""
         self.flush()
         plane, row = self._lookup(name)
-        if isinstance(plane, WindowPlane):
-            # host cursor mirror: the active bucket is a static slice of
-            # the native leaf, no dynamic_index dispatch
-            return Sketch(table=plane.tables[row, plane.cursors[row]],
-                          spec=plane.spec)
-        return Sketch(table=plane.tables[row], spec=plane.spec)
+        # host cursor/tier mirrors: the tenant's (active-bucket) table is
+        # a static slice of its tier's array, no dynamic_index dispatch
+        return Sketch(table=plane.table_row(row), spec=plane.spec)
 
     # ---- ingest ----
 
@@ -837,12 +1300,12 @@ class CountService:
             self._m_events.inc(int(keys.size))
             cap = plane.queue_capacity
             while keys.size:
-                free = plane.ring.free(row)
+                free = plane.queue_free(row)
                 if free == 0:
                     self.flush()
                     free = cap
                 take = min(free, keys.size)
-                plane.ring.append([row], [keys[:take]])
+                plane.queue_append_rows([row], [keys[:take]])
                 keys = keys[take:]
             plane.note_append()
             sp.sync(plane.ring.queue)
@@ -881,7 +1344,7 @@ class CountService:
                 keys = _as_keys(keys)
                 if keys.size == 0:
                     continue
-                if keys.size > plane.ring.free(row):
+                if keys.size > plane.queue_free(row):
                     overflow.append((name, keys))
                     continue
                 _, rows, batches = by_plane.setdefault(id(plane),
@@ -892,7 +1355,7 @@ class CountService:
                     self.probe.observe(name, keys)
                 self._m_events.inc(int(keys.size))
             for plane, rows, batches in by_plane.values():
-                plane.ring.append(rows, batches)
+                plane.queue_append_rows(rows, batches)
                 plane.note_append()
             sp.sync([plane.ring.queue
                      for plane, _, _ in by_plane.values()])
@@ -914,6 +1377,14 @@ class CountService:
             self._m_flushes.inc()
         return total
 
+    def tier_occupancy(self) -> dict[str, dict[str, int]]:
+        """Per-plane tier occupancy {plane_label: {"hot": n, "cold": m}} —
+        the serving-surface view of the tier gauges (empty when the
+        service was constructed without a TierSpec)."""
+        return {p.label: {"hot": p.tier.hot_count,
+                          "cold": p.tier.cold_count}
+                for p in self.planes if p.tier is not None}
+
     # ---- serving ----
 
     def query(self, name: str, keys, **window_kw) -> jnp.ndarray:
@@ -932,7 +1403,7 @@ class CountService:
             if window_kw:
                 raise ValueError(f"tenant {name!r} is not windowed; window "
                                  f"args {sorted(window_kw)} do not apply")
-            return sp.sync(ops.query(Sketch(table=plane.tables[row],
+            return sp.sync(ops.query(Sketch(table=plane.table_row(row),
                                             spec=plane.spec), probes))
 
     def query_all(self, keys) -> dict[str, jnp.ndarray]:
@@ -1039,16 +1510,27 @@ class CountService:
 
     # ---- persistence ----
 
+    @staticmethod
+    def _plane_meta(p, base: dict) -> dict:
+        # v8: tiered planes snapshot their membership + policy signals in
+        # the manifest (the cold store itself is a leaf) so restore
+        # re-tiers deterministically
+        if p.tier is not None:
+            base["tier"] = p.tier.meta()
+        return base
+
     def _meta(self) -> dict:
         meta = {
-            # v7: the window leaf is the plane's native (T, B, d, w)
-            # array + host cursor/epoch mirrors.  Leaf SHAPES are
-            # unchanged from v6 (which stacked per-tenant rings into the
-            # same layout at snapshot time), so v6-and-earlier
+            # v8: tier membership (manifest) + cold stores (leaf tree)
+            # for tiered services; untiered manifests are shape-identical
+            # to v7.  v7 made the window leaf the plane's native
+            # (T, B, d, w) array + host cursor/epoch mirrors — leaf
+            # SHAPES unchanged from v6 (which stacked per-tenant rings
+            # into the same layout at snapshot time), so v6-and-earlier
             # checkpoints restore into the native plane with no
             # conversion.  v6 added the packed-storage flag (pre-v6
             # manifests restore as packed=False).
-            "version": 7,
+            "version": 8,
             "queue_capacity": self.queue_capacity,
             "seed": self.seed,
             "track_top": self.track_top,
@@ -1063,16 +1545,20 @@ class CountService:
             # themselves live in the tracker leaves, refreshed per epoch)
             "admission": {name: dataclasses.asdict(spec)
                           for name, spec in self._admission.items()},
-            "planes": [{"spec": _spec_meta(p.spec), "tenants": list(p.names),
-                        "rng_draws": p.rng.draws}
+            "planes": [self._plane_meta(p, {"spec": _spec_meta(p.spec),
+                                            "tenants": list(p.names),
+                                            "rng_draws": p.rng.draws})
                        for p in self._planes.values()],
-            "windows": [{"sketch": _spec_meta(p.spec),
-                         "buckets": p.wspec.buckets,
-                         "interval": p.wspec.interval,
-                         "tenants": list(p.names),
-                         "rng_draws": p.rng.draws}
+            "windows": [self._plane_meta(p, {"sketch": _spec_meta(p.spec),
+                                             "buckets": p.wspec.buckets,
+                                             "interval": p.wspec.interval,
+                                             "tenants": list(p.names),
+                                             "rng_draws": p.rng.draws})
                         for p in self._wplanes.values()],
         }
+        if self.tier is not None:
+            meta["tier"] = {"max_hot_tenants": self.tier.max_hot_tenants,
+                            "policy": self.tier.policy}
         if self.default_spec is not None:
             meta["spec"] = _spec_meta(self.default_spec)  # v1 reader compat
             meta["tenants"] = self.tenants
@@ -1093,9 +1579,20 @@ class CountService:
             with_topk = self.track_top is not None
         planes = []
         for p in self._planes.values():
-            leaf = {"tables": p.tables,
-                    "queue": p.ring.queue,
-                    "fill": jnp.asarray(p.ring.fill)}
+            # v8 tiered leaves: "tables" is the (H, d, w) hot stack,
+            # "cold_tables" the (T, d, w) cold store, and "queue"/"fill"
+            # snapshot the TENANT-indexed host mirror (authoritative for
+            # ring contents; the slot-indexed device ring is its gather,
+            # rebuilt on restore)
+            if p.tier is not None:
+                leaf = {"tables": p.tables,
+                        "cold_tables": jnp.asarray(p.tier.cold),
+                        "queue": jnp.asarray(p.tier.hqueue),
+                        "fill": jnp.asarray(p.tier.hfill)}
+            else:
+                leaf = {"tables": p.tables,
+                        "queue": p.ring.queue,
+                        "fill": jnp.asarray(p.ring.fill)}
             if with_topk:
                 leaf["topk"] = self._tracker_leaves(p)
             planes.append(leaf)
@@ -1104,13 +1601,19 @@ class CountService:
             # v7: the native leaf goes straight into the checkpoint —
             # no per-tenant restack; cursor/epoch come from the host
             # mirrors (same (T,) shapes v6 produced by stacking)
-            leaf = {"tables": p.tables,
-                    "cursor": jnp.asarray(p.cursors, jnp.int32),
+            leaf = {"cursor": jnp.asarray(p.cursors, jnp.int32),
                     "epoch": jnp.asarray([
                         -1 if e is None else int(e)
-                        for e in p.epochs], jnp.int32),
-                    "queue": p.ring.queue,
-                    "fill": jnp.asarray(p.ring.fill)}
+                        for e in p.epochs], jnp.int32)}
+            if p.tier is not None:
+                leaf.update({"tables": p.tables,
+                             "cold_tables": jnp.asarray(p.tier.cold),
+                             "queue": jnp.asarray(p.tier.hqueue),
+                             "fill": jnp.asarray(p.tier.hfill)})
+            else:
+                leaf.update({"tables": p.tables,
+                             "queue": p.ring.queue,
+                             "fill": jnp.asarray(p.ring.fill)})
             if with_topk:
                 leaf["topk"] = self._tracker_leaves(p)
             windows.append(leaf)
@@ -1159,9 +1662,13 @@ class CountService:
             return svc
         default = (_spec_from_meta(meta["spec"]) if "spec" in meta else None)
         saved_k = meta.get("track_top")
+        # v8: reconstruct the TierSpec first so planes grow slot-indexed
+        # device stacks; the snapshotted membership is re-applied below
+        tier = (TierSpec(**meta["tier"]) if "tier" in meta else None)
         svc = cls(default, queue_capacity=meta["queue_capacity"],
                   seed=meta.get("seed", 0),
-                  track_top=saved_k if saved_k is not None else track_top)
+                  track_top=saved_k if saved_k is not None else track_top,
+                  tier=tier)
         admission_of = {name: adm.AdmissionSpec(**spec)
                         for name, spec in meta.get("admission", {}).items()}
         plane_of: dict[str, dict] = {}
@@ -1182,24 +1689,18 @@ class CountService:
                                      step=step)
         for p, pm, leaves in zip(svc._planes.values(), meta["planes"],
                                  tree["planes"]):
-            p.tables = leaves["tables"]
-            p.ring.queue = leaves["queue"]
-            p.ring.fill = np.asarray(leaves["fill"], np.int64)
-            p.rng.draws = int(pm.get("rng_draws", 0))
+            cls._restore_plane_leaves(p, pm, leaves)
             if has_topk:
                 p.tracker = topk.TopK(**leaves["topk"])
         for p, wm, leaves in zip(svc._wplanes.values(), meta["windows"],
                                  tree["windows"]):
             # v7 saves the native leaf; v6-and-earlier saved identical
             # shapes (stacked per-tenant rings), so both land here as-is
-            p.tables = leaves["tables"]
+            cls._restore_plane_leaves(p, wm, leaves)
             p.cursors = np.asarray(leaves["cursor"], np.int32)
             for i in range(len(p.names)):
                 epoch = int(leaves["epoch"][i])
                 p.epochs[i] = None if epoch < 0 else epoch
-            p.ring.queue = leaves["queue"]
-            p.ring.fill = np.asarray(leaves["fill"], np.int64)
-            p.rng.draws = int(wm.get("rng_draws", 0))
             if has_topk:
                 p.tracker = topk.TopK(**leaves["topk"])
         svc.stats = dict(meta.get("stats", svc.stats))
@@ -1213,6 +1714,35 @@ class CountService:
         if packed is not None:
             svc._convert_packing(packed)
         return svc
+
+    @staticmethod
+    def _restore_plane_leaves(p, pm: dict, leaves: dict) -> None:
+        """Apply one plane's checkpoint leaves + rng lane.  Tiered planes
+        re-apply the snapshotted membership first (deterministic
+        re-tiering), land the host mirrors, and rebuild the slot-indexed
+        device ring as the mirror's gather."""
+        p.rng.draws = int(pm.get("rng_draws", 0))
+        if p.tier is None:
+            p.tables = leaves["tables"]
+            p.ring.queue = leaves["queue"]
+            p.ring.fill = np.asarray(leaves["fill"], np.int64)
+            return
+        t = p.tier
+        tm = pm["tier"]
+        t.load_membership(tm["slot_tenant"], tm["last_active"],
+                          tm["hits"], tm["epoch"])
+        with jax.transfer_guard_device_to_host("allow"):
+            # np.array (not asarray): device leaves read back as read-only
+            # views, and the host tier mutates these in place
+            t.cold = np.array(leaves["cold_tables"]).astype(
+                t.dtype, copy=False)
+            t.hqueue = np.array(leaves["queue"], np.uint32)
+            t.hfill = np.array(leaves["fill"], np.int64)
+        p.tables = leaves["tables"]
+        st = t.slot_tenant
+        p.ring.queue = jnp.asarray(t.hqueue[st])
+        p.ring.fill = t.hfill[st].copy()
+        p._tier_gauges()
 
     def _convert_packing(self, packed: bool) -> None:
         """Switch every plane's table storage layout in place
@@ -1233,6 +1763,9 @@ class CountService:
                 p.tables = sk.storage_table(sk.logical_table(p.tables, spec),
                                             new)
                 p.spec = new
+                if p.tier is not None:
+                    self._repack_cold(p.tier, spec, new,
+                                      (new.depth, new.storage_width))
             planes[new] = p
         self._planes = planes
         wplanes: dict[w.WindowSpec, WindowPlane] = {}
@@ -1247,8 +1780,25 @@ class CountService:
                 p.tables = sk.storage_table(
                     sk.logical_table(p.tables, wspec.sketch), new_sk)
                 p.wspec = new_w
+                if p.tier is not None:
+                    self._repack_cold(p.tier, wspec.sketch, new_sk,
+                                      (new_w.buckets, new_sk.depth,
+                                       new_sk.storage_width))
             wplanes[new_w] = p
         self._wplanes = wplanes
+
+    @staticmethod
+    def _repack_cold(t, old_spec: SketchSpec, new_spec: SketchSpec,
+                     row_shape: tuple) -> None:
+        """Repack a plane's cold store alongside its hot stack (same
+        cell-exact logical/storage round trip, one fused computation
+        through the device)."""
+        with jax.transfer_guard_device_to_host("allow"):
+            # np.array: the read-back is read-only, the cold store mutates
+            t.cold = np.array(sk.storage_table(
+                sk.logical_table(jnp.asarray(t.cold), old_spec), new_spec))
+        t.row_shape = tuple(row_shape)
+        t.dtype = np.dtype(new_spec.storage_dtype)
 
     def _resize_trackers(self, k: int) -> None:
         """Re-arm every plane's heap stack at width k (restore with a

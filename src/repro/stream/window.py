@@ -44,6 +44,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import sketch as sk
 from repro.core.sketch import Sketch, SketchSpec
@@ -172,6 +173,20 @@ def window_advance_steps(win: WindowedSketch, steps) -> WindowedSketch:
     epoch = None if win.epoch is None else win.epoch + steps
     return dataclasses.replace(win, tables=tables,
                                cursor=(win.cursor + steps) % b, epoch=epoch)
+
+
+def cold_advance(tables: np.ndarray, cursor: int, steps: int) -> np.ndarray:
+    """Watermark rotation for a COLD tenant's host-resident (B, d, w)
+    leaf: the numpy mirror of `window_advance_steps` / the per-row mask
+    of `ops.window_advance_rows` (bit-identical cleared-bucket set), so a
+    tenant's ring rotates the same way whichever tier it lives in.
+    Returns the rotated leaf; the caller owns the cursor mirror."""
+    b = tables.shape[0]
+    off = (np.arange(b) - int(cursor) - 1) % b  # 0 = next bucket
+    cleared = (off < int(steps)) | (int(steps) >= b)
+    out = tables.copy()
+    out[cleared] = 0
+    return out
 
 
 def window_advance_to(win: WindowedSketch, ts) -> WindowedSketch:

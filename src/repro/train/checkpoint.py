@@ -13,6 +13,12 @@ N-host mesh restores onto an M-host mesh (elastic scaling): the sharding of
 the target, not of the writer, decides placement.  Single-process here, but
 the shard file is keyed by host id and the manifest lists all hosts, so the
 multi-host write path is the same code.
+
+Host-resident state rides the same tree: a tiered `CountService` (manifest
+v8) snapshots its numpy cold stores and queue mirrors as ordinary leaves —
+`np.asarray` is a no-copy pass-through for them on save, and restore hands
+them back through the target tree for the service to land host-side (the
+tier membership itself lives in the manifest metadata).
 """
 from __future__ import annotations
 

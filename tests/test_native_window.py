@@ -307,15 +307,16 @@ def _assert_restored_equal(svc, svc2):
         np.testing.assert_array_equal(ef, e2)
 
 
-def test_manifest_v7_roundtrip_native_leaf(tmp_path):
-    """Snapshot writes the native leaf + host mirrors (manifest v7) and
-    restore rebuilds the identical plane: tables, cursors, epochs, queue
-    residue, heaps, and query answers."""
+def test_manifest_roundtrip_native_leaf(tmp_path):
+    """Snapshot writes the native leaf + host mirrors (manifest v8; the
+    untiered leaf layout is v7's) and restore rebuilds the identical
+    plane: tables, cursors, epochs, queue residue, heaps, and query
+    answers."""
     svc = _staggered_service()
     svc.snapshot(str(tmp_path), step=3)
     doc = json.load(open(os.path.join(str(tmp_path), "step_00000003",
                                       "manifest.json")))
-    assert doc["metadata"]["version"] == 7
+    assert doc["metadata"]["version"] == 8
     svc2 = CountService.restore(str(tmp_path))
     # the 37 queued events persisted into the restored ring; both
     # services then replay them identically inside the query-path flush

@@ -389,7 +389,7 @@ def test_pre_v5_checkpoint_restores_with_cold_metrics(tmp_path):
     # rewrite the manifest as a pre-v5 checkpoint
     mpath = os.path.join(str(tmp_path), "step_00000001", "manifest.json")
     doc = json.load(open(mpath))
-    assert doc["metadata"]["version"] == 7
+    assert doc["metadata"]["version"] == 8
     doc["metadata"]["version"] = 4
     del doc["metadata"]["metrics"]
     with open(mpath, "w") as f:

@@ -178,10 +178,12 @@ def test_service_query_all_one_launch_matches_per_tenant():
 
 
 def test_service_flush_trims_upload_to_fill():
-    """A nearly-empty queue uploads only ceil(max_fill/CHUNK) chunks, and
+    """Each active row uploads only ceil(ITS OWN fill/CHUNK) chunks, and
     trimming never changes the counts that land.  The first flush has one
     of two tenants pending, so it takes the active-row path
-    (`ops.update_rows`, R=1); the second has both, so it goes dense."""
+    (`ops.update_rows`, R=1); the second has both at skewed fills, so the
+    per-row trim (`tiering.fill_classes`) issues one row-mapped dispatch
+    per fill class instead of one dense batch-max launch."""
     svc = _service(cap=64 * ops.CHUNK)
     seen = []
     orig_many, orig_rows = ops.update_many, ops.update_rows
@@ -205,7 +207,8 @@ def test_service_flush_trims_upload_to_fill():
     finally:
         ops.update_many, ops.update_rows = orig_many, orig_rows
     assert seen == [("rows", (1, ops.CHUNK)),       # not (2, 64 * CHUNK)
-                    ("dense", (2, 2 * ops.CHUNK))]
+                    ("rows", (1, ops.CHUNK)),       # ads at ITS class width
+                    ("rows", (1, 2 * ops.CHUNK))]   # search at its own
     assert float(svc.query("ads", [3])[0]) >= 7  # all 14 events landed
 
 

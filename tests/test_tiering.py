@@ -1,0 +1,373 @@
+"""Tiered hot/cold plane storage: membership, parity, trim, and manifest v8.
+
+The contract under test is BIT-EQUALITY: a `TierSpec`-constrained service
+(at most N device-resident tenants per plane, everyone else in the host
+cold store) must answer `query_all` and `topk` identically to an
+all-resident service fed the same stream — hot rows flush through the
+same fused dispatch (uniforms drawn from the full-tenant grid), cold rows
+through the batched XLA-reference spill over the same parity-uniforms
+grid, and the host queue mirror replays the device ring's stale-slot
+semantics exactly.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import CMLS8, CMLS16, CMS32, SketchSpec, sharded
+from repro.kernels import ops
+from repro.stream import (CountService, TierSpec, WindowSpec,
+                          tier_memory_bytes, tiering)
+from repro.train import checkpoint
+
+WIDTH = 256
+
+
+def _spec(**kw):
+    return SketchSpec(width=WIDTH, depth=2, counter=CMLS16, **kw)
+
+
+def _batch(rng, n=300, vocab=5_000):
+    return (rng.zipf(1.3, n) % vocab).astype(np.uint32)
+
+
+def _epoch_groups(regime: str, names, epochs: int):
+    """Per-epoch active tenant groups for the three traffic regimes."""
+    t = len(names)
+    if regime == "uniform":
+        return [list(names)] * epochs
+    if regime == "hot1":
+        return [[names[0]]] * epochs
+    # churn: a 4-tenant working set shifting by 2 every epoch, so every
+    # epoch demotes idle hot tenants and promotes newly active cold ones
+    return [[names[(2 * e + i) % t] for i in range(4)]
+            for e in range(epochs)]
+
+
+def _drive_pair(tiered, resident, names, regime, epochs=5, seed=11):
+    """Feed both services the identical stream, flushing every epoch."""
+    rng = np.random.default_rng(seed)
+    for group in _epoch_groups(regime, names, epochs):
+        events = {n: _batch(rng) for n in group}
+        tiered.enqueue_many(events)
+        resident.enqueue_many(events)
+        tiered.flush()
+        resident.flush()
+
+
+def _assert_parity(tiered, resident, names, k=5):
+    probes = np.arange(32, dtype=np.uint32)
+    a, b = tiered.query_all(probes), resident.query_all(probes)
+    for n in names:
+        np.testing.assert_array_equal(np.asarray(a[n]), np.asarray(b[n]),
+                                      err_msg=f"query_all diverged on {n}")
+    for n in names:
+        ka, va = tiered.topk(n, k)
+        kb, vb = resident.topk(n, k)
+        np.testing.assert_array_equal(np.asarray(ka), np.asarray(kb),
+                                      err_msg=f"topk keys diverged on {n}")
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(vb),
+                                      err_msg=f"topk estimates diverged on {n}")
+
+
+# --------------------------------------------------------------------------
+# bit-parity vs the all-resident service
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("regime", ["uniform", "hot1", "churn"])
+def test_tiered_matches_resident(regime):
+    """Across all three traffic regimes — everyone active (spill-heavy),
+    one hot tenant (pure fused path), rotating working set (swaps every
+    epoch) — every tenant answers bit-identically to an all-resident
+    service, trackers included."""
+    names = [f"t{i}" for i in range(12)]
+    tiered = CountService(_spec(), tenants=names, queue_capacity=4096,
+                          seed=0, track_top=8,
+                          tier=TierSpec(max_hot_tenants=4))
+    resident = CountService(_spec(), tenants=names, queue_capacity=4096,
+                            seed=0, track_top=8)
+    _drive_pair(tiered, resident, names, regime)
+    if regime == "churn":
+        label = tiered.planes[0].label
+        assert tiered.metrics.counter("tier_promotions",
+                                      plane=label).value > 0, \
+            "churn regime forced no promotions — the swap path went untested"
+    _assert_parity(tiered, resident, names)
+
+
+@pytest.mark.parametrize("counter", [CMS32, CMLS16, CMLS8],
+                         ids=["cms32", "log16", "log8"])
+def test_tiered_matches_resident_packed(counter):
+    """The cold store holds PACKED storage-layout rows: spill, demotion,
+    and promotion round the packed lanes through the same kernels, so
+    parity must hold for every packed cell format."""
+    spec = SketchSpec(width=WIDTH, depth=2, counter=counter, packed=True)
+    names = [f"t{i}" for i in range(6)]
+    tiered = CountService(spec, tenants=names, queue_capacity=4096, seed=0,
+                          track_top=8, tier=TierSpec(max_hot_tenants=2))
+    resident = CountService(spec, tenants=names, queue_capacity=4096,
+                            seed=0, track_top=8)
+    _drive_pair(tiered, resident, names, "churn", epochs=4)
+    _assert_parity(tiered, resident, names)
+
+
+def test_acceptance_128_tenants_8_hot():
+    """The headline capacity claim: max_hot_tenants=8 serving 128
+    registered tenants, query_all and topk bit-identical to an
+    all-resident reference after mixed hot/cold traffic."""
+    names = [f"t{i:03d}" for i in range(128)]
+    tiered = CountService(_spec(), tenants=names, queue_capacity=2048,
+                          seed=0, track_top=8,
+                          tier=TierSpec(max_hot_tenants=8))
+    resident = CountService(_spec(), tenants=names, queue_capacity=2048,
+                            seed=0, track_top=8)
+    rng = np.random.default_rng(29)
+    for e in range(3):
+        group = [names[(17 * e + i) % 128] for i in range(24)]
+        events = {n: _batch(rng, n=128) for n in group}
+        tiered.enqueue_many(events)
+        resident.enqueue_many(events)
+        tiered.flush()
+        resident.flush()
+    occ = tiered.tier_occupancy()[tiered.planes[0].label]
+    assert occ == {"hot": 8, "cold": 120}
+    probes = np.arange(16, dtype=np.uint32)
+    a, b = tiered.query_all(probes), resident.query_all(probes)
+    for n in names:
+        np.testing.assert_array_equal(np.asarray(a[n]), np.asarray(b[n]))
+    _assert_parity(tiered, resident, names[:4] + names[40:44])
+
+
+def test_demote_enqueue_promote_roundtrip():
+    """A tenant demoted mid-stream keeps counting through the mirror and
+    comes back bit-identical when promoted: membership flips exactly as
+    the LRU plan dictates, and the tenant's counts never fork from the
+    resident reference."""
+    names = ["a", "b"]
+    tiered = CountService(_spec(), tenants=names, queue_capacity=4096,
+                          seed=0, track_top=4,
+                          tier=TierSpec(max_hot_tenants=1))
+    resident = CountService(_spec(), tenants=names, queue_capacity=4096,
+                            seed=0, track_top=4)
+    tier = tiered.planes[0].tier
+    rng = np.random.default_rng(5)
+    assert list(tier.slot) == [0, -1]  # registration order: a hot, b cold
+    for epoch_names in (["a"], ["b"], ["b"], ["a", "b"], ["a"]):
+        events = {n: _batch(rng) for n in epoch_names}
+        tiered.enqueue_many(events)
+        resident.enqueue_many(events)
+        tiered.flush()
+        resident.flush()
+    # epoch 2 swapped b in (a idle), epoch 5 swapped a back (b idle)
+    assert list(tier.slot) == [0, -1]
+    label = tiered.planes[0].label
+    assert int(tiered.metrics.counter("tier_promotions",
+                                      plane=label).value) == 2
+    assert int(tiered.metrics.counter("tier_demotions",
+                                      plane=label).value) == 2
+    _assert_parity(tiered, resident, names, k=4)
+
+
+def test_windowed_tiered_matches_resident_mid_rotation():
+    """Windowed tenants demote their whole native (B, d, w) leaf slice:
+    watermark rotations land on hot rows via the masked device dispatch
+    and on cold rows via the numpy mirror of the same mask, so parity
+    holds across tiers even when the swap happens mid-rotation."""
+    wspec = WindowSpec(sketch=_spec(), buckets=4, interval=60.0)
+    names = [f"w{i}" for i in range(6)]
+    tiered = CountService(queue_capacity=4096, seed=0, track_top=8,
+                          tier=TierSpec(max_hot_tenants=2))
+    resident = CountService(queue_capacity=4096, seed=0, track_top=8)
+    for n in names:
+        tiered.add_tenant(n, window=wspec)
+        resident.add_tenant(n, window=wspec)
+    rng = np.random.default_rng(13)
+    ts = 10.0
+    for e in range(5):
+        group = [names[(2 * e + i) % 6] for i in range(3)]
+        ts += 45.0  # crosses an interval boundary every other epoch
+        for n in group:
+            b = _batch(rng)
+            tiered.enqueue(n, b, ts=ts)
+            resident.enqueue(n, b, ts=ts)
+        tiered.flush()
+        resident.flush()
+    probes = np.arange(32, dtype=np.uint32)
+    for n in names:
+        np.testing.assert_array_equal(
+            np.asarray(tiered.query(n, probes)),
+            np.asarray(resident.query(n, probes)),
+            err_msg=f"windowed query diverged on {n}")
+        np.testing.assert_array_equal(
+            np.asarray(tiered.query(n, probes, n_buckets=2)),
+            np.asarray(resident.query(n, probes, n_buckets=2)))
+        ka, va = tiered.topk(n, 4)
+        kb, vb = resident.topk(n, 4)
+        np.testing.assert_array_equal(np.asarray(ka), np.asarray(kb))
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+
+
+# --------------------------------------------------------------------------
+# checkpoint manifest v8
+# --------------------------------------------------------------------------
+
+def test_manifest_v8_tiered_roundtrip(tmp_path):
+    """Snapshot/restore of a tiered service: manifest v8 carries the tier
+    membership, the cold store and queue mirror ride as ordinary leaves,
+    and the restored service re-tiers deterministically — same membership,
+    same answers, same behavior on the next swap."""
+    names = [f"t{i}" for i in range(9)]
+    svc = CountService(_spec(), tenants=names, queue_capacity=4096, seed=0,
+                       track_top=8, tier=TierSpec(max_hot_tenants=3))
+    rng = np.random.default_rng(7)
+    for e in range(4):
+        group = [names[(2 * e + i) % 9] for i in range(4)]
+        svc.enqueue_many({n: _batch(rng) for n in group})
+        svc.flush()
+    svc.enqueue_many({names[5]: _batch(rng)})  # pending ring events ride too
+    svc.snapshot(str(tmp_path), step=3)
+    meta, _ = checkpoint.load_metadata(str(tmp_path))
+    assert meta["version"] == 8
+    assert meta["tier"] == {"max_hot_tenants": 3, "policy": "lru"}
+
+    svc2 = CountService.restore(str(tmp_path))
+    t1, t2 = svc.planes[0].tier, svc2.planes[0].tier
+    np.testing.assert_array_equal(t1.slot, t2.slot)
+    np.testing.assert_array_equal(t1.slot_tenant, t2.slot_tenant)
+    np.testing.assert_array_equal(t1.last_active, t2.last_active)
+    assert t1.epoch == t2.epoch
+    probes = np.arange(32, dtype=np.uint32)
+    a, b = svc.query_all(probes), svc2.query_all(probes)
+    for n in names:
+        np.testing.assert_array_equal(np.asarray(a[n]), np.asarray(b[n]))
+    # both replicas keep answering identically through the next swap epoch
+    for s in (svc, svc2):
+        s.enqueue_many({names[8]: np.arange(64, dtype=np.uint32)})
+        s.flush()
+    a, b = svc.query_all(probes), svc2.query_all(probes)
+    for n in names:
+        np.testing.assert_array_equal(np.asarray(a[n]), np.asarray(b[n]))
+
+
+def test_restore_repacks_cold_store(tmp_path):
+    """`restore(packed=...)` converts the HOST cold store along with the
+    device tables: answers are preserved across the storage conversion
+    for hot and cold tenants alike."""
+    names = [f"t{i}" for i in range(6)]
+    svc = CountService(_spec(), tenants=names, queue_capacity=4096, seed=0,
+                       tier=TierSpec(max_hot_tenants=2))
+    rng = np.random.default_rng(19)
+    svc.enqueue_many({n: _batch(rng) for n in names})
+    svc.flush()
+    svc.snapshot(str(tmp_path), step=1)
+    svc2 = CountService.restore(str(tmp_path), packed=True)
+    assert svc2.planes[0].spec.packed
+    probes = np.arange(32, dtype=np.uint32)
+    a, b = svc.query_all(probes), svc2.query_all(probes)
+    for n in names:
+        np.testing.assert_array_equal(np.asarray(a[n]), np.asarray(b[n]))
+
+
+# --------------------------------------------------------------------------
+# per-row flush trim
+# --------------------------------------------------------------------------
+
+def test_fill_classes_groups_by_own_rounded_fill():
+    fill = np.array([100, 3000, 512, 1025, 0])
+    rows = np.array([0, 1, 2, 3])
+    classes = tiering.fill_classes(fill, rows, 8 * ops.CHUNK)
+    assert [(c, list(r)) for c, r in classes] == [
+        (1024, [0, 2]), (2048, [3]), (3072, [1])]
+    # uniform fills degenerate to ONE legacy batch-max class
+    one = tiering.fill_classes(np.array([900, 1000]), np.array([0, 1]), 4096)
+    assert [(c, list(r)) for c, r in one] == [(1024, [0, 1])]
+    # the ring width caps a class (a sub-CHUNK ring is its own class)
+    capped = tiering.fill_classes(np.array([3000]), np.array([0]), 2048)
+    assert [(c, list(r)) for c, r in capped] == [(2048, [0])]
+    assert tiering.fill_classes(fill, np.array([], np.int64), 4096) == []
+
+
+def test_flush_trims_per_row_not_batch_max(monkeypatch):
+    """Spy on the flush gather: skewed fills (100 and 3000 keys) must slice
+    each class at its OWN rounded width — one 1024-column and one
+    3072-column dispatch — instead of one 3072-column batch-max launch."""
+    seen = []
+    orig = ops.flush_rows_inputs
+
+    def spy(queue, fill, rows, cols):
+        keys, weights = orig(queue, fill, rows, cols)
+        seen.append((int(cols), tuple(keys.shape)))
+        return keys, weights
+
+    monkeypatch.setattr(ops, "flush_rows_inputs", spy)
+    svc = CountService(_spec(), tenants=["a", "b"], queue_capacity=4096,
+                       seed=0)
+    svc.enqueue("a", np.arange(100, dtype=np.uint32))
+    svc.enqueue("b", np.arange(3000, dtype=np.uint32))
+    with ops.audit_scope() as tally:
+        svc.flush()
+    assert seen == [(1024, (1, 1024)), (3072, (1, 3072))]
+    assert tally["update_rows"] == 2  # one row-mapped update per class
+
+
+# --------------------------------------------------------------------------
+# sizing, assembly, validation
+# --------------------------------------------------------------------------
+
+def test_from_memory_splits_budget_across_tiers():
+    budget = 1 << 20
+    spec, tspec = tiering.from_memory(budget, max_hot_tenants=8,
+                                      hot_fraction=0.5)
+    assert tspec.max_hot_tenants == 8
+    # the device share is never over-allocated: 8 resident tables fit the
+    # hot fraction exactly (same lane-aligned rounding-down as from_memory)
+    assert 8 * spec.memory_bytes <= budget // 2
+    assert spec.width % 128 == 0  # lane-aligned geometry, like PR 7 sizing
+    mem = tier_memory_bytes(spec, tspec, 128)
+    assert mem["hot"] == 8 * spec.memory_bytes
+    assert mem["cold"] == 120 * spec.memory_bytes
+    assert mem["total"] == mem["hot"] + mem["cold"]
+    # fewer tenants than slots: everything is hot, nothing is cold
+    small = tier_memory_bytes(spec, tspec, 3)
+    assert small == {"hot": 3 * spec.memory_bytes, "cold": 0,
+                     "total": 3 * spec.memory_bytes}
+    # the packed split sizes by the PACKED footprint
+    pspec, _ = tiering.from_memory(budget, max_hot_tenants=8,
+                                   hot_fraction=0.25, packed=True)
+    assert pspec.packed and 8 * pspec.memory_bytes <= budget // 4
+
+
+def test_from_memory_validates_hot_fraction():
+    with pytest.raises(ValueError, match="hot_fraction"):
+        tiering.from_memory(1 << 20, max_hot_tenants=4, hot_fraction=0.0)
+    with pytest.raises(ValueError, match="hot_fraction"):
+        tiering.from_memory(1 << 20, max_hot_tenants=4, hot_fraction=1.5)
+
+
+def test_tier_assemble_rebuilds_resident_stack():
+    """`stacked_tables` scatters the hot stack into the cold copy at the
+    slot->tenant map: bit-equal to the all-resident plane's leaf."""
+    names = [f"t{i}" for i in range(7)]
+    tiered = CountService(_spec(), tenants=names, queue_capacity=4096,
+                          seed=0, tier=TierSpec(max_hot_tenants=3))
+    resident = CountService(_spec(), tenants=names, queue_capacity=4096,
+                            seed=0)
+    _drive_pair(tiered, resident, names, "churn", epochs=4)
+    np.testing.assert_array_equal(
+        np.asarray(tiered.planes[0].stacked_tables()),
+        np.asarray(resident.planes[0].tables))
+    # the sharded helper is the same primitive, callable standalone
+    t = tiered.planes[0].tier
+    out = sharded.tier_assemble(tiered.planes[0].tables, t.slot_tenant,
+                                t.cold)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(resident.planes[0].tables))
+
+
+def test_tierspec_validation():
+    with pytest.raises(ValueError, match="max_hot_tenants"):
+        TierSpec(max_hot_tenants=0)
+    with pytest.raises(ValueError, match="policy"):
+        TierSpec(max_hot_tenants=2, policy="random")
