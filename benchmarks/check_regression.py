@@ -36,7 +36,13 @@ flushed, and a multi-tenant watermark rotation exactly one masked
 section for the tiered hot/cold planes: a hot-only tiered flush epoch is
 still exactly one `update_score_rows` dispatch, cold-active tenants add
 exactly one batched `tier_spill`, and a membership swap costs exactly
-one `tier_demote` gather + one `tier_promote` scatter.
+one `tier_demote` gather + one `tier_promote` scatter.  bench_serve
+gates the serve-path epoch scheduler: `query_all` over a plane with W
+windowed tenants is ONE row-stacked `window_query_stacked` dispatch, a
+read on a clean service issues ZERO update dispatches, and a read's
+flush epoch is scoped to the owning plane (another plane's dirty ring
+stays buffered).  Its p50/p99 latency and per-scenario QPS rows ride
+the same calibration-normalized median gate as every other suite.
 
 ACCURACY is gated the same way as speed: `benchmarks/run.py` scores a
 fixed-seed SLO probe workload (exact shadow counts, ARE by frequency
@@ -57,8 +63,8 @@ import sys
 import time
 
 BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
-SUITES = ["bench_ingest.json", "bench_query.json", "bench_tiered.json",
-          "bench_topk.json"]
+SUITES = ["bench_ingest.json", "bench_query.json", "bench_serve.json",
+          "bench_tiered.json", "bench_topk.json"]
 
 
 def calibration_us(reps: int = 9) -> float:
@@ -155,6 +161,42 @@ def audit_tiered_launches(doc: dict) -> list[str]:
     return problems
 
 
+def audit_serve_launches(doc: dict) -> list[str]:
+    """Machine-check the serve-path epoch-scheduler claims in bench_serve.
+
+    A plane with W windowed tenants must answer `query_all` in ONE
+    row-stacked window query; a read on a clean service must issue zero
+    update dispatches; and a read's flush epoch must scope to the OWNING
+    plane — another plane's dirty ring adds nothing, the own plane's
+    adds exactly its fused update.
+    """
+    audit = doc.get("launch_audit")
+    if audit is None:
+        return ["no launch_audit section (bench_serve should record one)"]
+    problems = []
+    w4 = audit.get("windowed_query_all_W4", {})
+    if w4 != {"window_query_stacked": 1}:
+        problems.append("windowed_query_all_W4: query_all over 4 windowed "
+                        "tenants is not ONE row-stacked window query "
+                        f"dispatch: {w4}")
+    clean = audit.get("clean_read", {})
+    if clean != {"query": 1}:
+        problems.append("clean_read: a query on a clean service must be "
+                        "the query launch and NOTHING else (zero update "
+                        f"dispatches): {clean}")
+    other = audit.get("scoped_read_other_plane_dirty", {})
+    if other != {"query": 1}:
+        problems.append("scoped_read_other_plane_dirty: a read must not "
+                        "flush ANOTHER plane's dirty ring (scoped "
+                        f"epochs): {other}")
+    own = audit.get("scoped_read_own_plane_dirty", {})
+    if own != {"query": 1, "update_many": 1}:
+        problems.append("scoped_read_own_plane_dirty: a read with its own "
+                        "plane dirty must pay exactly that plane's fused "
+                        f"epoch plus the query launch: {own}")
+    return problems
+
+
 def check_accuracy(fresh: dict, baseline: dict, margin: float = 1.25,
                    eps: float = 0.02) -> list[str]:
     """Pure ARE-by-decile envelope check; returns the violations.
@@ -226,7 +268,12 @@ def check(threshold: float) -> int:
                           audit_tiered_launches,
                           "hot-only tiered epoch = 1 fused dispatch; "
                           "cold traffic = +1 batched spill; swap = +1 "
-                          "demote gather +1 promote scatter")}
+                          "demote gather +1 promote scatter"),
+                      "bench_serve.json": (
+                          audit_serve_launches,
+                          "windowed query_all = 1 stacked dispatch for W "
+                          "tenants; clean read = 0 update dispatches; "
+                          "read flush epochs scoped to the owning plane")}
             if suite in audits:
                 audit_fn, claim = audits[suite]
                 problems = audit_fn(new_doc)

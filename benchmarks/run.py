@@ -41,8 +41,8 @@ import numpy as np
 
 from benchmarks import (bench_are_counts, bench_batched_divergence,
                         bench_damped_update, bench_ingest, bench_pmi,
-                        bench_query, bench_throughput, bench_tiered,
-                        bench_topk, bench_window)
+                        bench_query, bench_serve, bench_throughput,
+                        bench_tiered, bench_topk, bench_window)
 from benchmarks.common import (add_mode_flags, emit, mode_methodology,
                                set_kernel_mode)
 from repro import obs
@@ -59,6 +59,7 @@ SUITES = [
     ("ingest_plane", bench_ingest.run),
     ("topk_plane", bench_topk.run),
     ("tiered_plane", bench_tiered.run),
+    ("serve_path", bench_serve.run),
 ]
 
 SLO_SEED = 0
@@ -161,7 +162,9 @@ def main() -> None:
     set_kernel_mode(args.mode)
 
     registry = obs.MetricsRegistry()
-    tracer = obs.Tracer(enabled=True)
+    # metrics= lands every span duration in a span_duration_us{span=...}
+    # log2 histogram, so results/metrics.prom carries p50/p99 per op
+    tracer = obs.Tracer(enabled=True, metrics=registry)
 
     print("name,us_per_call,derived")
     all_rows = []

@@ -74,13 +74,17 @@ def main(argv=None) -> None:
     spec = SketchSpec(width=args.width, depth=args.depth, counter=CMLS16)
     metrics_spec = SketchSpec(width=1024, depth=2, counter=CMS32)
     names = [f"tenant_{t:02d}" for t in range(args.tenants)]
-    tracer = obs.Tracer(enabled=True)
+    registry = obs.MetricsRegistry()
+    # metrics= threads the registry into the tracer too: every span
+    # duration lands in a span_duration_us{span=...} log2 histogram, so
+    # p50/p99 per op ride the same Prometheus exposition as the counters
+    tracer = obs.Tracer(enabled=True, metrics=registry)
     slo_probe = obs.AccuracyProbe(rate=args.probe_rate)
     tier = (None if args.tier_hot is None
             else TierSpec(max_hot_tenants=args.tier_hot))
     svc = CountService(spec, tenants=names, queue_capacity=args.queue_cap,
-                       seed=args.seed, track_top=16, tracer=tracer,
-                       probe=slo_probe, tier=tier)
+                       seed=args.seed, track_top=16, metrics=registry,
+                       tracer=tracer, probe=slo_probe, tier=tier)
     # heterogeneous plane: two CMS32 metrics tenants ride the same service
     svc.add_tenant("metrics_qps", spec=metrics_spec)
     svc.add_tenant("metrics_err", spec=metrics_spec)
@@ -161,10 +165,10 @@ def main(argv=None) -> None:
     for name in names[:2] + ["metrics_qps"]:
         print(f"[serve_counts] {name} hot-key counts: "
               f"{[round(float(x), 1) for x in np.asarray(counts[name])]}")
-    # one fused launch per sketch plane + one bucket-fused launch per
-    # windowed tenant
-    launches = sum(len(p.names) if isinstance(p, WindowPlane) else 1
-                   for p in svc.planes)
+    # one fused launch per plane — windowed planes included: every
+    # windowed tenant rides ONE row-stacked window query, not one
+    # bucket-fused launch each
+    launches = len(svc.planes)
     print(f"[serve_counts] served {len(svc.tenants)} tenants x "
           f"{probes.shape[1]} probes in {launches} fused launches "
           f"({dt_q*1e3:.1f} ms)")
@@ -219,6 +223,16 @@ def main(argv=None) -> None:
     spans = ", ".join(f"{name} x{s['count']} {s['total_us']/1e3:.1f}ms"
                       for name, s in sorted(summ.items()))
     print(f"[serve_counts] spans: {spans}")
+    # per-op latency percentiles off the span histograms (log2-bucket
+    # upper bounds — the same numbers a Prometheus scraper derives from
+    # the span_duration_us cumulative buckets in --metrics-out)
+    pcts = []
+    for name in sorted(summ):
+        h = registry.histogram("span_duration_us", lo=0, hi=24, span=name)
+        pcts.append(f"{name} p50<={h.quantile(0.5)/1e3:.3g}ms "
+                    f"p99<={h.quantile(0.99)/1e3:.3g}ms")
+    print(f"[serve_counts] span latency (p50/p99 bucket bounds): "
+          f"{', '.join(pcts)}")
     disp = {k: v for k, v in svc.metrics.snapshot()["counters"].items()
             if k.startswith("dispatch")}
     print(f"[serve_counts] dispatch tallies: {disp}")

@@ -102,6 +102,27 @@ class Histogram:
         self.sum += v
         self.count += 1
 
+    def quantile(self, q: float) -> float:
+        """Upper-bound q-quantile from the log2 buckets (the value every
+        scraper computes from the cumulative Prometheus exposition; here
+        for hosts printing p50/p99 without a scraper in the loop).
+        Returns the upper bound of the first bucket whose cumulative
+        count reaches q * count — conservative by at most one bucket
+        (one power of two), +inf if the overflow bucket is the answer,
+        0.0 on an empty histogram."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile must be in [0, 1], got {q}")
+        if self.count == 0:
+            return 0.0
+        rank = q * self.count
+        bounds = self.bounds()
+        seen = 0
+        for i, c in enumerate(self.counts):
+            seen += c
+            if c and seen >= rank:
+                return bounds[i] if i < len(bounds) else math.inf
+        return math.inf
+
 
 class MetricsRegistry:
     """Get-or-create instrument registry, snapshot-able as a JSON dict."""

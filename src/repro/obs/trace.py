@@ -69,10 +69,19 @@ class Span:
 
 
 class Tracer:
-    """Collects spans as chrome://tracing-ready complete events."""
+    """Collects spans as chrome://tracing-ready complete events.
 
-    def __init__(self, enabled: bool = False):
+    `metrics` (optional, any `MetricsRegistry`) additionally lands every
+    recorded span duration in a per-op log2 histogram
+    (`span_duration_us{span=...}`, 1 us .. ~16.8 s bounds), so p50/p99
+    op latency exports through the same Prometheus text endpoint as the
+    counters — scrape `histogram_quantile` off the cumulative buckets, or
+    read `Histogram.quantile` host-side.  Durations are only meaningful
+    at `Span.sync` boundaries, exactly as for the trace events."""
+
+    def __init__(self, enabled: bool = False, metrics=None):
         self.enabled = bool(enabled)
+        self.metrics = metrics
         self.events: list[dict] = []
         self._epoch = time.perf_counter()
 
@@ -92,6 +101,11 @@ class Tracer:
             "dur": (t1 - t0) * 1e6,
             "args": args,
         })
+        if self.metrics is not None:
+            # lo=0 -> first bucket <= 1 us, hi=24 -> <= ~16.8 s: spans
+            # outside that land in the clamp/overflow buckets, never lost
+            self.metrics.histogram("span_duration_us", lo=0, hi=24,
+                                   span=name).observe((t1 - t0) * 1e6)
 
     def clear(self) -> None:
         self.events.clear()

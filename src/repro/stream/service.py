@@ -1093,6 +1093,54 @@ class WindowPlane(_TierMixin, _TrackerMixin, _TelemetryMixin):
         leaf — `win_view` handles the tier)."""
         return w.window_query(self.win_view(row), keys, **kw)
 
+    def query_rows(self, keys: jnp.ndarray) -> jnp.ndarray:
+        """(T, N) window estimates, tenant-ordered: ONE stacked launch.
+
+        keys: (N,) probes shared by every tenant (broadcast — free, no
+        copy) or (T, N) per-tenant probes.  Each tenant's default read
+        resolves into its own row of ONE `window_weights_stacked`
+        evaluation (its cursor off the host mirror, the full-ring
+        n_buckets / sum-mode defaults `query_row` serves), so `query_all`
+        over W windowed tenants costs ONE `window_query_stacked` dispatch
+        instead of W per-ring `window_query` launches — and row r stays
+        bit-identical to `query_row(r, keys)` by the stacked kernel's
+        per-ring contract.  Tiered planes answer hot tenants through the
+        stacked query on the slot-ordered device leaf and cold tenants
+        through the SAME query family on their uploaded host leaves
+        (one engine family, as in `_refresh_topk_tiered`), reassembled in
+        tenant order.
+        """
+        t = len(self.names)
+        b = self.wspec.buckets
+        keys = jnp.asarray(keys)
+        per_tenant = keys.ndim == 2
+
+        def probes_of(rows: np.ndarray) -> jnp.ndarray:
+            if per_tenant:
+                return keys[jnp.asarray(rows)]
+            return jnp.broadcast_to(keys[None], (len(rows),) + keys.shape)
+
+        if self.tier is None:
+            all_rows = np.arange(t, dtype=np.int32)
+            wts = w.window_weights_stacked(self.cursors, b)
+            return ops.window_query_stacked(self.tables, self.spec,
+                                            probes_of(all_rows), wts)
+        t_ = self.tier
+        out = np.zeros((t, keys.shape[-1]), np.float32)
+        st = t_.slot_tenant
+        cold = np.flatnonzero(t_.slot < 0).astype(np.int32)
+        with jax.transfer_guard_device_to_host("allow"):
+            if st.size:
+                wts = w.window_weights_stacked(self.cursors[st], b)
+                out[st] = np.asarray(ops.window_query_stacked(
+                    self.tables, self.spec, probes_of(st), wts))
+            if cold.size:
+                wts = w.window_weights_stacked(self.cursors[cold], b)
+                out[cold] = np.asarray(ops.window_query_stacked(
+                    jnp.asarray(t_.cold[cold]), self.spec,
+                    probes_of(cold), wts))
+        return jnp.asarray(out)
+
     def table_row(self, row: int) -> jnp.ndarray:
         """One tenant's ACTIVE bucket table across tiers."""
         cur = self.cursors[row]
@@ -1271,8 +1319,8 @@ class CountService:
         """Flushed view of one tenant's sketch (shares the table slice).
 
         For windowed tenants this is the ACTIVE bucket's sketch."""
-        self.flush()
         plane, row = self._lookup(name)
+        self._flush_plane(plane)
         # host cursor/tier mirrors: the tenant's (active-bucket) table is
         # a static slice of its tier's array, no dynamic_index dispatch
         return Sketch(table=plane.table_row(row), spec=plane.spec)
@@ -1282,10 +1330,12 @@ class CountService:
     def enqueue(self, name: str, keys, ts=None) -> None:
         """Buffer events for a tenant in its plane's device ring.
 
-        Auto-flushes on queue pressure.  `ts` (event time) is required
-        semantics for windowed tenants: it advances the tenant's watermark
-        (`window_advance_to`) before the events are buffered, flushing
-        first when the batch crosses into a new interval.
+        Auto-flushes on queue pressure — scoped to the OWNING plane only
+        (another plane's ring never pays this tenant's pressure epoch).
+        `ts` (event time) is required semantics for windowed tenants: it
+        advances the tenant's watermark (`window_advance_to`) before the
+        events are buffered, flushing the plane first when the batch
+        crosses into a new interval.
         """
         plane, row = self._lookup(name)
         keys = _as_keys(keys)
@@ -1294,7 +1344,7 @@ class CountService:
                 if not isinstance(plane, WindowPlane):
                     raise ValueError(f"tenant {name!r} is not windowed; "
                                      "register with a WindowSpec to use ts")
-                plane.advance(row, ts, self.flush)
+                plane.advance(row, ts, lambda: self._flush_plane(plane))
             if self.probe is not None:
                 self.probe.observe(name, keys)
             self._m_events.inc(int(keys.size))
@@ -1302,7 +1352,7 @@ class CountService:
             while keys.size:
                 free = plane.queue_free(row)
                 if free == 0:
-                    self.flush()
+                    self._flush_plane(plane)
                     free = cap
                 take = min(free, keys.size)
                 plane.queue_append_rows([row], [keys[:take]])
@@ -1318,7 +1368,8 @@ class CountService:
         windowed tenant's watermark and raises for plain tenants (instead
         of silently dropping the event-time semantics).  Falls back to
         per-tenant `enqueue` for any batch that does not fit its tenant's
-        free queue space in one piece.
+        free queue space in one piece — that overflow path's pressure
+        flush is scoped to the owning plane, like `enqueue`'s.
         """
         by_plane: dict[int, tuple[object, list, list]] = {}
         overflow: list[tuple[str, np.ndarray]] = []
@@ -1338,7 +1389,8 @@ class CountService:
                     _, items = adv.setdefault(id(plane), (plane, []))
                     items.append((row, ts))
                 for plane, items in adv.values():
-                    plane.advance_many(items, self.flush)
+                    plane.advance_many(
+                        items, lambda p=plane: self._flush_plane(p))
             for name, keys in events.items():
                 plane, row = self._lookup(name)
                 keys = _as_keys(keys)
@@ -1363,7 +1415,9 @@ class CountService:
             self.enqueue(name, keys)
 
     def flush(self) -> int:
-        """Land every plane's pending events (one fused launch per plane).
+        """Land every DIRTY plane's pending events (one fused launch per
+        dirty plane; clean planes are skipped outright — no dispatch, no
+        PRNG draw).
 
         Returns the number of events ingested; the per-plane launch shape
         is CHUNK-quantized via the fill trim (see `_DeviceRing.live_slice`).
@@ -1372,10 +1426,35 @@ class CountService:
         single-spec service.
         """
         with self._audited():
-            total = sum(plane.flush() for plane in self.planes)
+            total = sum(plane.flush() for plane in self.dirty_planes)
         if total:
             self._m_flushes.inc()
         return total
+
+    def _flush_plane(self, plane) -> int:
+        """Scoped flush epoch: land ONE plane's pending events.
+
+        The serve-path epoch scheduler — read ops (`query`/`topk`/`admit`/
+        `sketch_of`) and `enqueue`'s queue-pressure fallback flush only
+        the plane they touch, so a read never pays another plane's epoch
+        and a clean plane costs zero dispatches (and consumes no PRNG
+        draw, which is what keeps the scoped service bit-identical to an
+        always-full-flush one: a skipped clean flush is indistinguishable
+        from a landed empty one).  Read-your-writes still holds per
+        tenant because every tenant's pending events live in its own
+        plane's ring.
+        """
+        with self._audited():
+            total = plane.flush() if plane.pending() else 0
+        if total:
+            self._m_flushes.inc()
+        return total
+
+    @property
+    def dirty_planes(self) -> list:
+        """Planes with buffered events awaiting a flush epoch (the fill
+        mirror is the dirty signal — host-side, no device read-back)."""
+        return [p for p in self.planes if p.pending()]
 
     def tier_occupancy(self) -> dict[str, dict[str, int]]:
         """Per-plane tier occupancy {plane_label: {"hot": n, "cold": m}} —
@@ -1388,15 +1467,17 @@ class CountService:
     # ---- serving ----
 
     def query(self, name: str, keys, **window_kw) -> jnp.ndarray:
-        """Estimated counts for one tenant (flushes first: read-your-writes).
+        """Estimated counts for one tenant (flushes the tenant's OWN plane
+        first — read-your-writes without paying other planes' epochs; a
+        clean plane costs zero update dispatches).
 
         Plain tenants: one fused-kernel launch (the T=1 case of
         `query_all`'s kernel).  Windowed tenants: the fused window
         reduction over the ring (`window_kw` forwards n_buckets / mode /
         gamma / engine)."""
+        plane, row = self._lookup(name)
         with self._audited(), self.tracer.span("query", tenant=name) as sp:
-            self.flush()
-            plane, row = self._lookup(name)
+            self._flush_plane(plane)
             probes = jnp.asarray(_as_keys(keys))
             if isinstance(plane, WindowPlane):
                 return sp.sync(plane.query_row(row, probes, **window_kw))
@@ -1407,12 +1488,16 @@ class CountService:
                                             spec=plane.spec), probes))
 
     def query_all(self, keys) -> dict[str, jnp.ndarray]:
-        """Estimated counts for EVERY tenant: one fused launch per plane.
+        """Estimated counts for EVERY tenant: one fused launch per plane —
+        windowed planes included (a plane with W windowed tenants answers
+        in ONE row-stacked `window_query_stacked` dispatch, not W
+        per-ring launches; see `WindowPlane.query_rows`).
 
         keys: (N,) probes shared by all tenants, or (T, N) per-tenant
         probes (row order = registry order, `self.tenants`).  Returns
         {tenant: float32 (N,) estimates}, bit-consistent with calling
-        `query` per tenant.  Flushes first: read-your-writes.
+        `query` per tenant.  Flushes every dirty plane first (this read
+        touches them all): read-your-writes.
         """
         with self._audited(), \
                 self.tracer.span("query_all", tenants=len(self._order)) as sp:
@@ -1425,7 +1510,7 @@ class CountService:
             keys = _as_keys(keys).reshape(keys.shape)
             out: dict[str, jnp.ndarray] = {}
             row_of = {name: i for i, name in enumerate(self._order)}
-            for plane in self._planes.values():
+            for plane in self.planes:
                 if per_tenant:
                     probes = jnp.asarray(
                         np.stack([keys[row_of[n]] for n in plane.names]))
@@ -1434,18 +1519,15 @@ class CountService:
                 est = plane.query_rows(probes)
                 for i, n in enumerate(plane.names):
                     out[n] = est[i]
-            for plane in self._wplanes.values():
-                for i, n in enumerate(plane.names):
-                    probe = keys[row_of[n]] if per_tenant else keys
-                    out[n] = plane.query_row(i, jnp.asarray(probe))
             return sp.sync(out)
 
     def topk(self, name: str, k: Optional[int] = None, **window_kw):
         """Current top-k heavy hitters of one tenant: (keys, estimates).
 
         Served from the tenant's device-resident tracker (refreshed by
-        every flush with the just-flushed keys; flushes first here, so the
-        answer is read-your-writes).  Returns up to `k` (default: the
+        every flush with the just-flushed keys; flushes the tenant's own
+        plane first here, so the answer is read-your-writes).  Returns up
+        to `k` (default: the
         tracker width `track_top`) keys sorted by descending estimate —
         fewer if the tenant has seen fewer distinct keys — and the
         estimates agree exactly with `query`/`query_all` on those keys.
@@ -1464,7 +1546,7 @@ class CountService:
             raise ValueError(f"tenant {name!r} is not windowed; "
                              f"window args {sorted(window_kw)} do not apply")
         with self._audited(), self.tracer.span("topk", tenant=name):
-            self.flush()
+            self._flush_plane(plane)
             keys, est, filled = plane.topk_row(row, **window_kw)
         sel = filled[:k]
         return keys[:k][sel], est[:k][sel]
@@ -1473,8 +1555,9 @@ class CountService:
         """Map raw ids -> embedding rows under the tenant's tracker-fed
         admission policy: (rows, admitted_mask), aligned with ids.
 
-        Flushes first, so the decisions reflect the current flush epoch's
-        tracker refresh — hot keys acquire private rows automatically the
+        Flushes the tenant's own plane first, so the decisions reflect
+        the current flush epoch's tracker refresh — hot keys acquire
+        private rows automatically the
         moment the heavy-hitter plane sees them clear the threshold.  For
         plain tenants the decision needs no sketch launch
         (`admission.admit_tracked` is O(K) candidate compares per id
@@ -1495,7 +1578,7 @@ class CountService:
             raise ValueError(f"tenant {name!r} is not windowed; "
                              f"window args {sorted(window_kw)} do not apply")
         with self._audited(), self.tracer.span("admit", tenant=name) as sp:
-            self.flush()
+            self._flush_plane(plane)
             if isinstance(plane, WindowPlane):
                 # re-score the heap against the current ring (rotation/
                 # expiry/decay) and persist it — then decide from the
